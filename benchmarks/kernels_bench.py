@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: kway_probe and paged_attention (interpret mode on
+CPU — structural timing; real perf comes from the TPU dry-run roofline)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_jitted
+from repro.core.policies import Policy
+from repro.kernels import ref
+from repro.kernels.kway_probe import kway_probe
+from repro.kernels.paged_attention import paged_attention
+
+
+def run():
+    print("table,config,us_per_call")
+    rng = np.random.default_rng(0)
+    # kway_probe vs jnp oracle
+    s, ways, b = 512, 8, 256
+    keys = np.full((s, 128), -1, np.int32)
+    keys[:, :ways] = rng.integers(0, 50_000, (s, ways))
+    ma = rng.integers(0, 1000, (s, 128)).astype(np.int32)
+    mb = np.zeros((s, 128), np.int32)
+    sets = rng.integers(0, s, b).astype(np.int32)
+    qk = rng.integers(0, 50_000, b).astype(np.int32)
+    times = np.arange(b, dtype=np.int32)
+    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    dt = time_jitted(
+        lambda *a: kway_probe(*a, policy=int(Policy.LRU), ways=ways, qt=8),
+        *args)
+    emit("kernels", "kway_probe_interp/b256", f"{dt*1e6:.1f}")
+    dt = time_jitted(
+        lambda *a: ref.kway_probe_ref(*a, policy=int(Policy.LRU), ways=ways),
+        *args)
+    emit("kernels", "kway_probe_xla_oracle/b256", f"{dt*1e6:.1f}")
+
+    # paged attention vs oracle
+    bq, h, kvh, d, page, pages, pps = 4, 8, 2, 64, 16, 64, 8
+    q = jnp.asarray(rng.standard_normal((bq, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((kvh, pages, page, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((kvh, pages, page, d)), jnp.float32)
+    pt = jnp.asarray(rng.integers(0, pages, (bq, pps)), jnp.int32)
+    sl = jnp.full((bq,), pps * page, jnp.int32)
+    dt = time_jitted(paged_attention, q, kp, vp, pt, sl)
+    emit("kernels", "paged_attention_interp/b4", f"{dt*1e6:.1f}")
+    dt = time_jitted(ref.paged_attention_ref, q, kp, vp, pt, sl)
+    emit("kernels", "paged_attention_xla_oracle/b4", f"{dt*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

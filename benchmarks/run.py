@@ -1,0 +1,73 @@
+"""Benchmark runner: one section per paper table/figure family.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+
+Sections: hit_ratio (Figs 4-13), throughput (Figs 14-26),
+synthetic_mix (Figs 27-30), theorem41 (§4), kernels, serving, roofline
+(reads dryrun_results.json when present).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _roofline_section():
+    path = "dryrun_results.json"
+    if not os.path.exists(path):
+        print("roofline,skipped,no dryrun_results.json (run repro.launch.dryrun)")
+        return
+    print("table,config,value")
+    with open(path) as f:
+        results = json.load(f)
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        cell = f"{rec['arch']}/{rec['shape']}"
+        step = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        print(f"roofline,{cell}/bottleneck,{r['bottleneck']}")
+        print(f"roofline,{cell}/step_time_s,{step:.4f}")
+        print(f"roofline,{cell}/roofline_fraction,{r['roofline_fraction']:.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (hit_ratio, kernels_bench, serving, synthetic_mix,
+                            theorem41, throughput)
+
+    sections = {
+        "hit_ratio": (lambda: hit_ratio.run(n=20_000, ks=(4, 8),
+                                            trace_families=("zipf", "scan_loop"),
+                                            policies=(hit_ratio.Policy.LRU,
+                                                      hit_ratio.Policy.LFU)))
+        if args.quick else hit_ratio.run,
+        "throughput": (lambda: throughput.run(batches=(64, 256)))
+        if args.quick else throughput.run,
+        "synthetic_mix": synthetic_mix.run,
+        "theorem41": (lambda: theorem41.run(ks=(8, 64), trials=10))
+        if args.quick else theorem41.run,
+        "kernels": kernels_bench.run,
+        "serving": serving.run,
+        "roofline": _roofline_section,
+    }
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n### {name} ###", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"### {name} done in {time.time()-t0:.1f}s ###", flush=True)
+        except Exception as e:  # noqa: BLE001 — one section must not kill the run
+            print(f"### {name} FAILED: {type(e).__name__}: {e} ###", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Theorem 4.1 table: empirical overflow probability vs the Chernoff bound
+for a 2C-sized k-way cache asked to hold C items."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import hashing
+
+
+def run(ks=(8, 16, 32, 64, 128), cprime=1 << 17, trials=30):
+    print("table,config,value")
+    for k in ks:
+        num_sets = cprime // k
+        c = cprime // 2
+        bound = (cprime / k) * math.exp(-k / 6.0)
+        fails = 0
+        for seed in range(trials):
+            rng = np.random.default_rng(seed)
+            items = rng.choice(1 << 31, size=c, replace=False).astype(np.uint32)
+            sets = np.asarray(hashing.set_index(jnp.asarray(items), num_sets))
+            if (np.bincount(sets, minlength=num_sets) > k).any():
+                fails += 1
+        emit("theorem41", f"k{k}/empirical_overflow", f"{fails / trials:.3f}")
+        emit("theorem41", f"k{k}/chernoff_bound", f"{min(bound, 1.0):.3g}")
+
+
+if __name__ == "__main__":
+    run()

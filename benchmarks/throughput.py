@@ -1,0 +1,54 @@
+"""Cache throughput (paper Figs. 14-26 analogue).
+
+Thread count becomes batch size (DESIGN.md §2).  Implementations compared:
+  kway-soa  — KW-WFSC analogue (separate fingerprint/counter lanes)
+  kway-aos  — KW-WFA analogue (interleaved record array, gathered)
+  sampled   — fully associative + sample-8 victim selection (Redis)
+  full      — fully associative, exact victim scan
+Measured: millions of get+put ops/sec of the jitted access() on a real
+zipf trace stream.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_jitted
+from repro.core import kway, traces
+from repro.core.kway import KWayConfig, fully_associative
+from repro.core.policies import Policy
+
+CAPACITY = 4096
+
+
+def _impl_configs(policy):
+    return {
+        "kway-soa": KWayConfig(num_sets=CAPACITY // 8, ways=8, policy=policy,
+                               layout="soa"),
+        "kway-aos": KWayConfig(num_sets=CAPACITY // 8, ways=8, policy=policy,
+                               layout="aos"),
+        "sampled": KWayConfig(num_sets=CAPACITY // 128, ways=128, policy=policy,
+                              sample=8),  # Redis-like: big buckets, sample 8
+        "full": fully_associative(CAPACITY, policy),
+    }
+
+
+def run(batches=(64, 256, 1024), policy=Policy.LRU, n_warm=20_480):
+    print("table,config,mops_per_s")
+    tr = traces.generate("zipf", n_warm + 4096, seed=7, catalog=1 << 14)
+    for name, cfg in _impl_configs(policy).items():
+        state = kway.make_cache(cfg)
+        # warm the cache
+        warm = jnp.asarray(tr[:n_warm].reshape(-1, 512))
+        for chunk in warm:
+            state, _, _, _, _ = kway.access(cfg, state, chunk,
+                                            chunk.astype(jnp.int32))
+        for b in batches:
+            keys = jnp.asarray(tr[n_warm:n_warm + b])
+            vals = keys.astype(jnp.int32)
+            fn = jax.jit(lambda s, k, v: kway.access(cfg, s, k, v)[0])
+            dt = time_jitted(fn, state, keys, vals)
+            emit("throughput", f"{name}/batch{b}", f"{b / dt / 1e6:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Associativity sweep (paper Figs. 4-13 in one script): hit ratio vs k for
+every trace family and policy, printed as aligned tables.
+
+    PYTHONPATH=src python examples/hit_ratio_study.py [--n 100000]
+"""
+import argparse
+
+from repro.core import traces
+from repro.core.kway import KWayConfig, fully_associative
+from repro.core.policies import Policy
+from repro.core.simulate import SimConfig, replay
+
+CAPACITY = 1024
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=60_000)
+    ap.add_argument("--ks", default="4,8,16,32,64")
+    args = ap.parse_args()
+    ks = [int(x) for x in args.ks.split(",")]
+
+    for fam in traces.FAMILIES:
+        tr = traces.generate(fam, args.n, seed=9)
+        print(f"\n=== {fam} (capacity {CAPACITY}) ===")
+        header = "policy      " + "".join(f"  k={k:<5d}" for k in ks) + "  full"
+        print(header)
+        for pol in (Policy.LRU, Policy.LFU, Policy.FIFO, Policy.RANDOM,
+                    Policy.HYPERBOLIC):
+            row = f"{pol.name:12s}"
+            for k in ks:
+                cfg = KWayConfig(num_sets=CAPACITY // k, ways=k, policy=pol)
+                row += f"  {replay(SimConfig(cfg), tr):.4f}"
+            row += f"  {replay(SimConfig(fully_associative(CAPACITY, pol)), tr):.4f}"
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

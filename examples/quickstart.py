@@ -1,0 +1,49 @@
+"""Quickstart: the K-way cache public API in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a k-way set-associative cache, replays a Zipf trace under several
+policies, compares against the fully-associative oracle and the sampled
+baseline, and shows the TinyLFU admission filter — the paper's §5.2 in
+miniature.
+"""
+import numpy as np
+
+from repro.core import admission, traces
+from repro.core.kway import KWayConfig, fully_associative
+from repro.core.policies import Policy
+from repro.core.simulate import SimConfig, replay
+
+CAPACITY = 1024
+N = 50_000
+
+
+def main():
+    trace = traces.generate("zipf", N, seed=0, catalog=1 << 14, alpha=1.0)
+
+    print(f"capacity={CAPACITY}, trace=zipf({N})\n")
+    print(f"{'config':34s} hit ratio")
+    for policy in (Policy.LRU, Policy.LFU, Policy.HYPERBOLIC):
+        for k in (4, 8, 16):
+            cfg = KWayConfig(num_sets=CAPACITY // k, ways=k, policy=policy)
+            print(f"{policy.name:12s} {k:3d}-way            "
+                  f"  {replay(SimConfig(cfg), trace):.4f}")
+        full = fully_associative(CAPACITY, policy)
+        print(f"{policy.name:12s} fully associative    "
+              f"  {replay(SimConfig(full), trace):.4f}")
+        samp = KWayConfig(num_sets=CAPACITY // 128, ways=128, policy=policy,
+                          sample=8)
+        print(f"{policy.name:12s} sampled-8 (Redis)    "
+              f"  {replay(SimConfig(samp), trace):.4f}")
+        print()
+
+    # W-TinyLFU-style: LFU eviction + TinyLFU admission, k=8
+    cfg8 = KWayConfig(num_sets=CAPACITY // 8, ways=8, policy=Policy.LFU)
+    hr = replay(SimConfig(cfg8, admission.for_capacity(CAPACITY)), trace)
+    print(f"{'LFU+TinyLFU':12s} 8-way                  {hr:.4f}")
+    print("\nPaper's claim to verify: the 8-way lines sit within ~1pt of the"
+          " fully-associative lines.")
+
+
+if __name__ == "__main__":
+    main()

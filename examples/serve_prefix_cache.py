@@ -1,0 +1,56 @@
+"""End-to-end serving driver (deliverable b): a small LM served with batched
+requests through the K-way paged KV cache engine.
+
+    PYTHONPATH=src python examples/serve_prefix_cache.py
+
+Simulates a chat-like workload: many requests share a system-prompt prefix.
+The K-way set-associative page table (the paper's technique) deduplicates
+the shared prefix KV across requests; the run prints the prefix hit ratio
+and the throughput with/without the cache warm.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.policies import Policy
+from repro.models import lm
+from repro.serve.engine import Engine, EngineConfig
+
+
+def main():
+    cfg = configs.get("deepseek-7b").smoke
+    params = lm.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, EngineConfig(
+        page=8, num_sets=64, ways=8, policy=Policy.LRU,
+        max_batch=8, max_seq=256, private_pages=512,
+    ))
+    rng = np.random.default_rng(0)
+    system_prompt = rng.integers(2, 400, 64)   # shared by every request
+
+    def burst(n, label):
+        t0 = time.time()
+        before_hits = eng.stats["prefix_hits"]
+        before_lk = eng.stats["prefix_lookups"]
+        for _ in range(n):
+            user = rng.integers(2, 400, int(rng.integers(4, 20)))
+            eng.submit(np.concatenate([system_prompt, user]), max_new=12)
+        fin_before = len(eng.finished)
+        eng.run()
+        dt = time.time() - t0
+        done = len(eng.finished) - fin_before
+        hits = eng.stats["prefix_hits"] - before_hits
+        lk = eng.stats["prefix_lookups"] - before_lk
+        print(f"{label}: {done} requests in {dt:.1f}s, "
+              f"prefix hit ratio {hits}/{lk} = {hits/max(lk,1):.2f}")
+
+    burst(4, "cold burst")
+    burst(8, "warm burst")
+    print("engine stats:", eng.stats)
+    sample = next(iter(eng.finished.values()))
+    print("sample generation:", sample.generated)
+
+
+if __name__ == "__main__":
+    main()

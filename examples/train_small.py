@@ -1,0 +1,29 @@
+"""Train a small LM for a few hundred steps on the synthetic pipeline
+(deliverable b): loss goes down, checkpoints are written and resumable.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+
+Uses the gemma2-family smoke config (local/global attention + softcaps) so
+the run exercises the non-trivial attention variants too.
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/kway_train_small")
+    args = ap.parse_args()
+    return train_main([
+        "--arch", "gemma2-2b", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--lr", "3e-3", "--schedule", "wsd",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+    ])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

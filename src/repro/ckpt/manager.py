@@ -1,0 +1,118 @@
+"""Fault-tolerant checkpointing: atomic commits, resharding restore.
+
+Layout of one checkpoint::
+
+    <dir>/step_000042/
+        manifest.json        # treedef, shapes, dtypes, step, data_state
+        leaf_00000.npy ...   # one file per pytree leaf
+
+Guarantees:
+  * **atomicity** — written to ``step_N.tmp`` then ``os.rename``d; a crash
+    mid-write can never corrupt the latest valid checkpoint;
+  * **restart** — ``latest_step`` finds the newest committed step; the data
+    pipeline state rides in the manifest (one int — see data/pipeline.py);
+  * **elastic restore** — arrays are saved unsharded and ``restore`` places
+    them with the *target* mesh's shardings, so the job can come back on a
+    different topology (tested: 8-device save -> 4-device restore).
+
+At real 1000-node scale the per-leaf ``np.save`` would be a per-shard
+distributed write (Orbax/TensorStore); the manager interface (save /
+restore / latest_step / gc) is the same — swapping the IO layer does not
+touch the training loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _leaf_name(i: int) -> str:
+    return f"leaf_{i:05d}.npy"
+
+
+def save(root: str, step: int, tree, extra: dict | None = None,
+         keep_last: int = 3) -> str:
+    """Atomically persist a pytree.  Returns the committed directory."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "extra": extra or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":
+            # np.save can't round-trip bf16/ml_dtypes (kind 'V'): widen to
+            # f32; restore casts back to the target leaf's dtype
+            arr = arr.astype(np.float32)
+        np.save(os.path.join(tmp, _leaf_name(i)), arr)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _gc(root, keep_last)
+    return final
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, d, "manifest.json")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(root: str, step: int, like_tree, shardings=None):
+    """Load a checkpoint into the structure of ``like_tree``.
+
+    ``shardings`` (optional pytree of NamedSharding) reshards on load —
+    this is the elastic-restart path: the saved arrays are full, the target
+    mesh decides the placement.
+    Returns (tree, extra).
+    """
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(like_tree)
+    assert manifest["num_leaves"] == len(leaves), (
+        f"checkpoint has {manifest['num_leaves']} leaves, "
+        f"target structure has {len(leaves)}"
+    )
+    loaded = []
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
+    )
+    for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(d, _leaf_name(i)))
+        assert tuple(arr.shape) == tuple(ref.shape), (i, arr.shape, ref.shape)
+        jarr = jax.numpy.asarray(arr).astype(ref.dtype)
+        if shd is not None:
+            jarr = jax.device_put(jarr, shd)
+        loaded.append(jarr)
+    return jax.tree.unflatten(treedef, loaded), manifest["extra"]
+
+
+def _gc(root: str, keep_last: int):
+    steps = sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(root)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(root, f"step_{s:09d}"), ignore_errors=True)

@@ -1,0 +1,96 @@
+"""Architecture registry + input_specs (ShapeDtypeStruct stand-ins).
+
+``--arch <id>`` everywhere resolves through ``get(id)``.  ``input_specs``
+builds allocation-free input descriptions for lower()/compile() — the
+dry-run's only view of the data.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (  # noqa: F401
+    LM_SHAPES,
+    SHAPES_BY_NAME,
+    ArchSpec,
+    ModelConfig,
+    ShapeConfig,
+)
+
+_MODULES = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "dbrx-132b": "dbrx_132b",
+    "hymba-1.5b": "hymba_1p5b",
+    "internvl2-2b": "internvl2_2b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "stablelm-3b": "stablelm_3b",
+    "gemma2-2b": "gemma2_2b",
+    "minicpm-2b": "minicpm_2b",
+    "deepseek-7b": "deepseek_7b",
+    "mamba2-130m": "mamba2_130m",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.SPEC
+
+
+def all_specs():
+    return [get(a) for a in ARCH_IDS]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for one (arch × shape) cell.
+
+    train/prefill: {tokens, labels?, prefix_embeds?, enc_embeds?}
+    decode:        {token, pos} (the KV/state cache comes from cache_specs).
+    Frontend stubs: precomputed patch/frame embeddings per instructions.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"token": _sds((b,), jnp.int32), "pos": _sds((b,), jnp.int32)}
+
+    specs = {}
+    s_tok = s
+    if cfg.frontend == "patch":
+        s_tok = s - cfg.frontend_len
+        specs["prefix_embeds"] = _sds((b, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers > 0:
+        s_tok = s // 2
+        specs["enc_embeds"] = _sds((b, s - s_tok, cfg.d_model), jnp.bfloat16)
+    specs["tokens"] = _sds((b, s_tok), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract decode-cache pytree (mirrors models.lm.init_cache)."""
+    from repro.models import lm
+
+    b, s = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, b, s)
+    )
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """Abstract parameter pytree via eval_shape (no allocation)."""
+    from repro.models import lm
+
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.key(0)))

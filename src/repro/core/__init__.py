@@ -1,0 +1,21 @@
+"""Core library: the paper's K-way set-associative cache and its ecosystem.
+
+Public API:
+    KWayConfig, KWayState, make_cache, get, put, access, peek_victims
+    fully_associative  — the paper's baseline as the S=1 corner case
+    Policy             — LRU / LFU / FIFO / RANDOM / HYPERBOLIC
+    TinyLFU admission  — admission.{TinyLFUConfig, make_sketch, record, admit}
+    simulate.replay    — jitted hit-ratio trace replay
+    traces.generate    — synthetic workload families
+"""
+from repro.core.kway import (  # noqa: F401
+    KWayConfig,
+    KWayState,
+    access,
+    fully_associative,
+    get,
+    make_cache,
+    peek_victims,
+    put,
+)
+from repro.core.policies import Policy  # noqa: F401

@@ -1,0 +1,65 @@
+"""Vectorized avalanche hashing for set selection and fingerprints.
+
+The paper uses xxHash to distribute keys to sets.  On TPU we want a hash that
+is (a) a handful of uint32 VPU ops, (b) seedable so the set hash, fingerprint
+hash and sketch hashes are independent, and (c) a good avalanche so the
+balls-into-bins analysis of Theorem 4.1 applies.  We use the murmur3/xxhash
+32-bit finalizer pattern (xor-shift + odd-constant multiply), which is the
+same construction xxHash's avalanche step uses.
+
+All functions operate on ``uint32`` arrays elementwise and are jit/vmap safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Odd multiplicative constants (murmur3 fmix32 / xxhash primes).
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+_PRIME1 = jnp.uint32(0x9E3779B1)  # xxhash PRIME32_1
+_PRIME2 = jnp.uint32(0x85EBCA77)  # xxhash PRIME32_2
+
+# Sentinel for an empty way.  User keys are remapped so they never collide
+# with it (see ``sanitize_keys``).
+EMPTY_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+def _fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer — full avalanche."""
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(keys: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Seeded avalanche hash of uint32 keys -> uint32."""
+    k = keys.astype(jnp.uint32)
+    h = (k + jnp.uint32(seed) * _PRIME1) * _PRIME2
+    return _fmix32(h)
+
+
+def set_index(keys: jnp.ndarray, num_sets: int, seed: int = 0x51CA) -> jnp.ndarray:
+    """Map keys to set indices.  ``num_sets`` must be a power of two (paper
+    masks with ``numberOfSets-1``)."""
+    assert num_sets & (num_sets - 1) == 0, "num_sets must be a power of two"
+    return (hash_u32(keys, seed) & jnp.uint32(num_sets - 1)).astype(jnp.int32)
+
+
+def fingerprint(keys: jnp.ndarray, seed: int = 0xF19E) -> jnp.ndarray:
+    """Short fingerprint used by the SoA (KW-WFSC) layout to pre-filter the
+    set scan without touching the full key record."""
+    return hash_u32(keys, seed) & jnp.uint32(0xFFFF)
+
+
+def sanitize_keys(keys: jnp.ndarray) -> jnp.ndarray:
+    """Remap user keys so the EMPTY_KEY sentinel can never be a valid key.
+
+    Keys equal to the sentinel are folded onto 0xFFFFFFFE.  (In a production
+    library keys are opaque 64-bit hashes; the 1/2^32 fold is the standard
+    sentinel trick.)
+    """
+    k = keys.astype(jnp.uint32)
+    return jnp.where(k == EMPTY_KEY, jnp.uint32(0xFFFFFFFE), k)

@@ -1,0 +1,390 @@
+"""K-way set-associative cache — the paper's core, as a functional JAX module.
+
+The cache is a pytree of dense, fixed-shape arrays (the paper's "static
+memory, no pointers" claim maps one-to-one onto jit/pjit requirements):
+
+    keys    uint32[S, k]   stored keys (EMPTY_KEY sentinel = empty way)
+    fprint  uint32[S, k]   16-bit fingerprints (SoA / KW-WFSC layout only)
+    vals    int32 [S, k]   payload (e.g. KV-page index, object handle)
+    meta_a  int32 [S, k]   policy lane A (LRU ts / LFU count / hyperbolic n)
+    meta_b  int32 [S, k]   policy lane B (hyperbolic t0)
+    clock   int32 []       global logical clock (paper: per-set AtomicLong)
+
+Concurrency adaptation (see DESIGN.md §2): the paper's T threads become a
+batch of B requests per step.  Requests to different sets are data-independent
+(the paper's embarrassing parallelism) and are processed by pure vector ops.
+Requests that collide on one set are resolved deterministically:
+
+  * duplicate keys within a batch: the first occurrence performs the insert,
+    later ones are dropped (the CAS-race outcome in KW-WFA);
+  * distinct missing keys in one set: the i-th such request takes the i-th
+    worst victim of that set (rank-ordered victim selection — the retry loop
+    of KW-WFA collapsed into one vectorized pass).  At most k admissions per
+    set per batch; overflow requests are not admitted (bounded, deterministic).
+
+Layouts: ``soa`` (KW-WFSC — separate key/fingerprint/counter arrays, scans
+touch contiguous memory, the TPU-friendly default) and ``aos`` (KW-WFA — one
+interleaved record array [S, k, 4], gathered as records; kept as the layout
+baseline the paper also measures).
+
+The fully-associative oracle is *this same cache* with ``num_sets=1,
+ways=capacity`` — the paper's observation that full associativity is the
+degenerate corner of the design space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.hashing import EMPTY_KEY
+from repro.core.policies import Policy, on_hit, on_insert, victim_scores
+
+NEG_INF = jnp.float32(-3.0e38)
+POS_INF = jnp.float32(3.0e38)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KWayState:
+    """Cache contents.  A pytree — shardable, scannable, checkpointable."""
+
+    keys: jnp.ndarray    # uint32 [S, k]
+    fprint: jnp.ndarray  # uint32 [S, k]
+    vals: jnp.ndarray    # int32  [S, k]
+    meta_a: jnp.ndarray  # int32  [S, k]
+    meta_b: jnp.ndarray  # int32  [S, k]
+    clock: jnp.ndarray   # int32  []
+
+    @property
+    def num_sets(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def ways(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.size
+
+    def occupancy(self) -> jnp.ndarray:
+        return jnp.sum(self.keys != EMPTY_KEY)
+
+
+@dataclasses.dataclass(frozen=True)
+class KWayConfig:
+    """Static cache configuration (hashable; safe as a jit static arg)."""
+
+    num_sets: int
+    ways: int
+    policy: Policy = Policy.LRU
+    layout: str = "soa"          # "soa" (KW-WFSC) | "aos" (KW-WFA)
+    sample: int = 0              # >0: sampled policy — score only `sample`
+    #                              random ways (Redis-style; meaningful for
+    #                              the fully-associative configuration)
+    seed: int = 0x51CA
+
+    def __post_init__(self):
+        assert self.num_sets >= 1 and self.num_sets & (self.num_sets - 1) == 0
+        assert self.ways >= 1
+        assert self.layout in ("soa", "aos")
+
+    @property
+    def capacity(self) -> int:
+        return self.num_sets * self.ways
+
+
+def fully_associative(capacity: int, policy: Policy, sample: int = 0) -> KWayConfig:
+    """The paper's baseline: one set spanning the whole cache."""
+    return KWayConfig(num_sets=1, ways=capacity, policy=policy, sample=sample)
+
+
+def make_cache(cfg: KWayConfig) -> KWayState:
+    s, k = cfg.num_sets, cfg.ways
+    return KWayState(
+        keys=jnp.full((s, k), EMPTY_KEY, jnp.uint32),
+        fprint=jnp.zeros((s, k), jnp.uint32),
+        vals=jnp.zeros((s, k), jnp.int32),
+        meta_a=jnp.zeros((s, k), jnp.int32),
+        meta_b=jnp.zeros((s, k), jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# probing
+# ---------------------------------------------------------------------------
+
+def _probe(cfg: KWayConfig, state: KWayState, qkeys: jnp.ndarray):
+    """Gather each query's set and locate the key.
+
+    Returns (sets[B], set_keys[B,k], hit[B], way[B]).  The SoA layout
+    pre-filters with fingerprints (KW-WFSC Algorithm 5); AoS compares full
+    keys directly (KW-WFA Algorithm 2).  Both produce identical results —
+    fingerprints are a scan accelerator, never a correctness shortcut: a
+    fingerprint match is confirmed against the full key.
+    """
+    qkeys = hashing.sanitize_keys(qkeys)
+    sets = hashing.set_index(qkeys, cfg.num_sets, cfg.seed)
+    set_keys = state.keys[sets]                      # [B, k] gather
+    if cfg.layout == "soa":
+        qfp = hashing.fingerprint(qkeys)[:, None]
+        cand = state.fprint[sets] == qfp             # cheap contiguous scan
+        eq = cand & (set_keys == qkeys[:, None])     # confirm on full key
+    else:
+        eq = set_keys == qkeys[:, None]
+    eq = eq & (set_keys != EMPTY_KEY)
+    hit = jnp.any(eq, axis=-1)
+    way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    return qkeys, sets, set_keys, hit, way
+
+
+def _batch_times(state: KWayState, b: int):
+    """Per-request logical timestamps: batch order == arrival order."""
+    times = state.clock + jnp.arange(b, dtype=jnp.int32)
+    return times, state.clock + jnp.int32(b)
+
+
+def _intra_batch_rank(sets: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = #(j<i : active[j] and sets[j]==sets[i]) for active i.
+
+    The vectorized stand-in for the paper's CAS retry loop: the r-th insert
+    colliding on a set takes the r-th worst victim.  O(B log B) via sort.
+    """
+    b = sets.shape[0]
+    order_key = jnp.where(active, sets, jnp.int32(0x7FFFFFFF))
+    # Stable sort by set id; arrival order preserved inside each set group.
+    perm = jnp.argsort(order_key, stable=True)
+    sorted_sets = order_key[perm]
+    new_group = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sorted_sets[1:] != sorted_sets[:-1]]
+    )
+    idx = jnp.arange(b, dtype=jnp.int32)
+    group_start = jax.lax.associative_scan(jnp.maximum, jnp.where(new_group, idx, 0))
+    rank_sorted = idx - group_start
+    rank = jnp.zeros((b,), jnp.int32).at[perm].set(rank_sorted)
+    return jnp.where(active, rank, 0)
+
+
+def _first_occurrence(qkeys: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """True for the first active occurrence of each key in the batch."""
+    b = qkeys.shape[0]
+    order_key = jnp.where(active, qkeys, jnp.uint32(0)).astype(jnp.uint32)
+    # sort by (key, arrival); first of each equal-key run wins
+    perm = jnp.argsort(order_key, stable=True)
+    sorted_keys = order_key[perm]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    first = jnp.zeros((b,), jnp.bool_).at[perm].set(first_sorted)
+    return first & active
+
+
+def _victim_order(cfg: KWayConfig, state: KWayState, sets, set_keys, times):
+    """Per request: ways of its set ordered worst-victim-first. [B, k]
+    (or [B, sample] for sampled policies — see below)."""
+    if cfg.sample > 0 and cfg.sample < cfg.ways:
+        # Sampled policy (Redis-style), O(sample) like the original: draw
+        # `sample` pseudo-random ways (with replacement), score only those.
+        m = cfg.sample
+        draw = jnp.arange(m, dtype=jnp.uint32)[None, :]
+        h = hashing.hash_u32(
+            draw + (times[:, None].astype(jnp.uint32) * jnp.uint32(2654435761)),
+            seed=0x5A5A,
+        )
+        way_ids = (h % jnp.uint32(cfg.ways)).astype(jnp.int32)      # [B, m]
+        ma = state.meta_a[sets[:, None], way_ids]
+        mb = state.meta_b[sets[:, None], way_ids]
+        keys_s = state.keys[sets[:, None], way_ids]
+        scores = victim_scores(cfg.policy, ma, mb, times[:, None], keys_s)
+        scores = jnp.where(keys_s == EMPTY_KEY, NEG_INF, scores)
+        order_local = jnp.argsort(scores, axis=-1)
+        return jnp.take_along_axis(way_ids, order_local, axis=-1)   # [B, m]
+    ma = state.meta_a[sets]
+    mb = state.meta_b[sets]
+    scores = victim_scores(cfg.policy, ma, mb, times[:, None], set_keys)
+    empty = set_keys == EMPTY_KEY
+    scores = jnp.where(empty, NEG_INF, scores)  # fill empty ways first
+    return jnp.argsort(scores, axis=-1).astype(jnp.int32)  # [B, k]
+
+
+# ---------------------------------------------------------------------------
+# public operations
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=0)
+def get(cfg: KWayConfig, state: KWayState, qkeys: jnp.ndarray):
+    """Batched read (paper Algorithm 2/5/8).
+
+    Returns (state', hit[B] bool, vals[B] int32).  Hits update policy
+    metadata; misses leave the cache untouched.
+    """
+    b = qkeys.shape[0]
+    qkeys, sets, set_keys, hit, way = _probe(cfg, state, qkeys)
+    times, clock = _batch_times(state, b)
+
+    ma_hit = state.meta_a[sets, way]
+    mb_hit = state.meta_b[sets, way]
+    new_a, new_b = on_hit(cfg.policy, ma_hit, mb_hit, times)
+    # Duplicate (set, way) pairs in one batch: LFU/Hyperbolic counts must
+    # accumulate (two hits = +2), LRU must take the max timestamp.  Scatter-add
+    # the deltas instead of scatter-set.
+    da = jnp.where(hit, new_a - ma_hit, 0)
+    if cfg.policy in (Policy.LFU, Policy.HYPERBOLIC):
+        meta_a = state.meta_a.at[sets, way].add(da)
+    else:
+        meta_a = state.meta_a.at[sets, way].max(jnp.where(hit, new_a, -(2**31 - 1)))
+    db = jnp.where(hit, new_b - mb_hit, 0)
+    meta_b = state.meta_b.at[sets, way].add(db)
+
+    vals = jnp.where(hit, state.vals[sets, way], -1)
+    return (
+        dataclasses.replace(state, meta_a=meta_a, meta_b=meta_b, clock=clock),
+        hit,
+        vals,
+    )
+
+
+@partial(jax.jit, static_argnums=0)
+def put(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    qvals: jnp.ndarray,
+    admit: Optional[jnp.ndarray] = None,
+    enabled: Optional[jnp.ndarray] = None,
+):
+    """Batched write (paper Algorithm 3/6/9).
+
+    Present keys are overwritten in place; absent keys evict a policy victim
+    from their own set.  ``admit`` (bool[B], optional) gates admission of
+    absent keys — the hook the TinyLFU filter plugs into.  ``enabled``
+    (bool[B], optional) disables whole lanes (used by ``access`` so a lane
+    that already hit in the read phase is not written twice).
+
+    Returns (state', evicted_keys uint32[B], evicted_valid bool[B]) so callers
+    (e.g. the paged-KV allocator) can recycle the victims' payloads.
+    """
+    b = qkeys.shape[0]
+    qkeys, sets, set_keys, present, way_present = _probe(cfg, state, qkeys)
+    times, clock = _batch_times(state, b)
+    if admit is None:
+        admit = jnp.ones((b,), jnp.bool_)
+    if enabled is None:
+        enabled = jnp.ones((b,), jnp.bool_)
+    present = present & enabled
+
+    is_insert = (~present) & admit & enabled
+    is_insert &= _first_occurrence(qkeys, is_insert)      # dedupe within batch
+    rank = _intra_batch_rank(sets, is_insert)
+    is_insert &= rank < cfg.ways                          # ≤ k admits per set
+    order = _victim_order(cfg, state, sets, set_keys, times)
+    rank_c = jnp.clip(rank, 0, order.shape[1] - 1)  # dropped lanes: safe idx
+    way_victim = jnp.take_along_axis(order, rank_c[:, None], axis=-1)[:, 0]
+
+    way = jnp.where(present, way_present, way_victim)
+    active = present | is_insert
+
+    evicted_keys = state.keys[sets, way_victim]
+    evicted_valid = is_insert & (evicted_keys != EMPTY_KEY)
+
+    ia, ib = on_insert(cfg.policy, times, (b,))
+
+    # For present keys: overwrite value, metadata takes the on_hit transition
+    # (a put of an existing key counts as an access — paper Algorithm 3 line 6).
+    ha, hb = on_hit(cfg.policy, state.meta_a[sets, way], state.meta_b[sets, way], times)
+    new_a = jnp.where(present, ha, ia)
+    new_b = jnp.where(present, hb, ib)
+
+    sel = lambda upd, old: jnp.where(active, upd, old)  # noqa: E731
+    sets_w = jnp.where(active, sets, 0)
+    way_w = jnp.where(active, way, 0)
+    # Inactive lanes write slot (0,0) with its own current contents (no-op).
+    cur = lambda arr, upd: jnp.where(active, upd, arr[sets_w, way_w])  # noqa: E731
+
+    keys = state.keys.at[sets_w, way_w].set(cur(state.keys, qkeys))
+    fpr = state.fprint.at[sets_w, way_w].set(
+        cur(state.fprint, hashing.fingerprint(qkeys))
+    )
+    vals = state.vals.at[sets_w, way_w].set(cur(state.vals, qvals))
+    meta_a = state.meta_a.at[sets_w, way_w].set(cur(state.meta_a, new_a))
+    meta_b = state.meta_b.at[sets_w, way_w].set(cur(state.meta_b, new_b))
+
+    new_state = KWayState(keys, fpr, vals, meta_a, meta_b, clock)
+    return new_state, evicted_keys, evicted_valid
+
+
+@partial(jax.jit, static_argnums=0)
+def access(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    qvals: jnp.ndarray,
+    admit_on_miss: Optional[jnp.ndarray] = None,
+):
+    """The canonical cache loop: get; on miss, put (paper §5.1.2 methodology).
+
+    Returns (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B]).
+    """
+    state, hit, vals = get(cfg, state, qkeys)
+    admit = admit_on_miss if admit_on_miss is not None else None
+    state, ek, ev = put(cfg, state, qkeys, qvals, admit=admit, enabled=~hit)
+    vals = jnp.where(hit, vals, qvals)
+    return state, hit, vals, ek, ev
+
+
+@partial(jax.jit, static_argnums=0)
+def peek_victims(cfg: KWayConfig, state: KWayState, qkeys: jnp.ndarray):
+    """Prospective victim key for each query, without mutating the cache.
+
+    Used by admission filters (TinyLFU): the candidate competes against the
+    key it *would* evict.  Returns (victim_keys uint32[B], victim_valid
+    bool[B]); victim_valid is False when the set has a free way (admission is
+    then unconditional) or the key is already present (no eviction).
+    """
+    qkeys2, sets, set_keys, present, _ = _probe(cfg, state, qkeys)
+    times, _ = _batch_times(state, qkeys.shape[0])
+    order = _victim_order(cfg, state, sets, set_keys, times)
+    way0 = order[:, 0]
+    vkeys = state.keys[sets, way0]
+    valid = (vkeys != EMPTY_KEY) & (~present)
+    return vkeys, valid
+
+
+# ---------------------------------------------------------------------------
+# AoS record packing (KW-WFA layout baseline)
+# ---------------------------------------------------------------------------
+
+def pack_aos(state: KWayState) -> jnp.ndarray:
+    """Interleave the SoA lanes into one [S, k, 4] record array (int32).
+
+    KW-WFA stores a node per way; gathering a record touches 4 interleaved
+    words.  The throughput benchmark contrasts this with the SoA layout to
+    reproduce the paper's KW-WFA vs KW-WFSC comparison on vector hardware.
+    """
+    return jnp.stack(
+        [
+            state.keys.astype(jnp.int32),
+            state.vals,
+            state.meta_a,
+            state.meta_b,
+        ],
+        axis=-1,
+    )
+
+
+def unpack_aos(rec: jnp.ndarray, clock: jnp.ndarray) -> KWayState:
+    keys = rec[..., 0].astype(jnp.uint32)
+    return KWayState(
+        keys=keys,
+        fprint=hashing.fingerprint(keys),
+        vals=rec[..., 1],
+        meta_a=rec[..., 2],
+        meta_b=rec[..., 3],
+        clock=clock,
+    )

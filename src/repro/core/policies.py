@@ -1,0 +1,105 @@
+"""Eviction policies over per-way metadata — the paper's O(k) realization.
+
+The paper's central simplification: with limited associativity, every classic
+policy reduces to "keep one or two short counters per way; on eviction scan
+the k counters of one set and pick the extremum".  We encode that contract as
+three pure functions per policy:
+
+  * ``victim_scores(meta_a, meta_b, now, rng)`` -> float scores, *lower* means
+    "evict sooner".  Empty ways are handled by the caller (forced to -inf).
+  * ``on_hit(meta_a, meta_b, now)``     -> updated metadata for a cache hit.
+  * ``on_insert(now)``                  -> fresh metadata for an admitted key.
+
+Metadata is two int32 lanes (``meta_a``, ``meta_b``) — enough for every policy
+in the paper (Hyperbolic needs both: access count and insertion time).  All
+functions are elementwise over arbitrary leading shapes, so the same code
+serves the k-way cache (shape [B, k]), the fully-associative oracle (shape
+[1, C]) and the Pallas kernel reference.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+class Policy(enum.IntEnum):
+    LRU = 0
+    LFU = 1
+    FIFO = 2
+    RANDOM = 3
+    HYPERBOLIC = 4
+
+    @staticmethod
+    def parse(name: str) -> "Policy":
+        return Policy[name.upper()]
+
+
+def victim_scores(
+    policy: int,
+    meta_a: jnp.ndarray,
+    meta_b: jnp.ndarray,
+    now: jnp.ndarray,
+    stored_keys: jnp.ndarray,
+) -> jnp.ndarray:
+    """Score every way; the eviction victim is the argmin.
+
+    ``now`` is the logical clock (int32, broadcastable).  ``stored_keys``
+    feeds the RANDOM policy's stateless per-epoch permutation (hash of key and
+    clock epoch — matches the paper's "Random" without carrying PRNG state in
+    the cache pytree).
+    """
+    a = meta_a.astype(jnp.float32)
+    if policy == Policy.LRU:
+        return a  # last-access time: oldest == smallest == victim
+    if policy == Policy.LFU:
+        return a  # access count: least frequent == victim
+    if policy == Policy.FIFO:
+        return a  # insertion time: oldest insert == victim
+    if policy == Policy.RANDOM:
+        # Stateless random: hash(key, clock_epoch).  Changes every access so
+        # repeated evictions in one set do not always pick the same way.
+        epoch = (now.astype(jnp.uint32) if hasattr(now, "astype") else jnp.uint32(now))
+        h = hashing.hash_u32(stored_keys ^ epoch, seed=0xBADA)
+        return h.astype(jnp.float32)
+    if policy == Policy.HYPERBOLIC:
+        # priority = n_accesses / age ; evict the smallest priority.
+        n = meta_a.astype(jnp.float32)
+        age = (now - meta_b).astype(jnp.float32) + 1.0
+        return n / age
+    raise ValueError(f"unknown policy {policy}")
+
+
+def on_hit(
+    policy: int, meta_a: jnp.ndarray, meta_b: jnp.ndarray, now: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Metadata transition on a cache hit."""
+    if policy == Policy.LRU:
+        return jnp.broadcast_to(now, meta_a.shape).astype(meta_a.dtype), meta_b
+    if policy in (Policy.LFU, Policy.HYPERBOLIC):
+        return meta_a + 1, meta_b
+    if policy in (Policy.FIFO, Policy.RANDOM):
+        return meta_a, meta_b
+    raise ValueError(f"unknown policy {policy}")
+
+
+def on_insert(
+    policy: int, now: jnp.ndarray, shape: tuple[int, ...] = ()
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fresh metadata for a newly admitted key."""
+    now_arr = jnp.broadcast_to(jnp.asarray(now, jnp.int32), shape)
+    one = jnp.ones(shape, jnp.int32)
+    zero = jnp.zeros(shape, jnp.int32)
+    if policy == Policy.LRU:
+        return now_arr, zero
+    if policy == Policy.LFU:
+        return one, zero
+    if policy == Policy.FIFO:
+        return now_arr, zero
+    if policy == Policy.RANDOM:
+        return zero, zero
+    if policy == Policy.HYPERBOLIC:
+        return one, now_arr  # (n=1, t0=now)
+    raise ValueError(f"unknown policy {policy}")

@@ -1,0 +1,114 @@
+"""Serial Python oracle of the k-way cache — ground truth for tests.
+
+A direct, unoptimized transcription of the paper's Algorithms 1-6 semantics
+(single-threaded).  The JAX implementation at batch size 1 must agree with
+this oracle exactly; at batch size B it must agree with *some* serialization
+per the documented conflict-resolution rules (property-tested separately).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.policies import Policy
+
+
+def _h32(key: int, seed: int) -> int:
+    return int(hashing.hash_u32(np.uint32(key), seed))
+
+
+class RefKWay:
+    def __init__(self, num_sets: int, ways: int, policy: Policy, seed: int = 0x51CA):
+        self.num_sets, self.ways, self.policy, self.seed = num_sets, ways, policy, seed
+        # each set: fixed array of `ways` slots; None == empty way.  Matching
+        # the JAX layout slot-for-slot makes tie-breaking identical (lowest
+        # way index wins ties, empty ways fill first).
+        self.sets = [[None] * ways for _ in range(num_sets)]
+        self.clock = 0
+
+    def _set_of(self, key: int) -> int:
+        return _h32(key, self.seed) & (self.num_sets - 1)
+
+    def _score(self, node, now):
+        p = self.policy
+        if p in (Policy.LRU, Policy.LFU, Policy.FIFO):
+            return float(node["a"])
+        if p == Policy.RANDOM:
+            return float(_h32(node["key"] ^ (now & 0xFFFFFFFF), 0xBADA))
+        if p == Policy.HYPERBOLIC:
+            return node["a"] / float(now - node["b"] + 1)
+        raise ValueError(p)
+
+    def _touch(self, node, now):
+        if self.policy == Policy.LRU:
+            node["a"] = now
+        elif self.policy in (Policy.LFU, Policy.HYPERBOLIC):
+            node["a"] += 1
+
+    def get(self, key: int):
+        now = self.clock
+        self.clock += 1
+        s = self.sets[self._set_of(key)]
+        for node in s:
+            if node is not None and node["key"] == key:
+                self._touch(node, now)
+                return node["val"]
+        return None
+
+    def put(self, key: int, val: int, admit: bool = True):
+        now = self.clock
+        self.clock += 1
+        s = self.sets[self._set_of(key)]
+        for node in s:
+            if node is not None and node["key"] == key:
+                node["val"] = val
+                self._touch(node, now)
+                return None
+        if not admit:
+            return None
+        # victim way: empty ways first (lowest index), else min score with
+        # lowest way index breaking ties — exactly the JAX stable argsort.
+        evicted = None
+        way = None
+        for i, node in enumerate(s):
+            if node is None:
+                way = i
+                break
+        if way is None:
+            scored = [(self._score(n, now), i) for i, n in enumerate(s)]
+            _, way = min(scored)
+            evicted = s[way]["key"]
+        a, b = self._insert_meta(now)
+        s[way] = {"key": key, "val": val, "a": a, "b": b}
+        return evicted
+
+    def _insert_meta(self, now):
+        p = self.policy
+        if p == Policy.LRU or p == Policy.FIFO:
+            return now, 0
+        if p == Policy.LFU:
+            return 1, 0
+        if p == Policy.RANDOM:
+            return 0, 0
+        if p == Policy.HYPERBOLIC:
+            return 1, now
+        raise ValueError(p)
+
+    def access(self, key: int, val: int):
+        """get-then-put-on-miss; returns hit bool.
+
+        Mirrors ``kway.access`` clock semantics exactly: the write phase
+        advances the logical clock even when the lane is disabled by a hit.
+        """
+        got = self.get(key)
+        if got is None:
+            self.put(key, val)
+            return False
+        self.clock += 1  # disabled put lane still advances the clock
+        return True
+
+    def contents(self):
+        return {n["key"] for s in self.sets for n in s if n is not None}
+
+    def occupancy(self):
+        return sum(1 for s in self.sets for n in s if n is not None)

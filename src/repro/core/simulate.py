@@ -1,0 +1,89 @@
+"""Jitted trace replay — the hit-ratio study engine (paper §5.2).
+
+Replays a request trace through any (policy × associativity × admission)
+configuration and reports the hit ratio.  The replay is a ``lax.scan`` over
+the trace with batch size 1 (exact sequential semantics, matching the paper's
+single-threaded hit-ratio measurements), jit-compiled once per cache shape —
+million-request traces replay in seconds on CPU and would be trivially fast
+on TPU.
+
+A batched variant (``replay_batched``) replays B requests per step with the
+deterministic conflict-resolution semantics of ``kway.access`` — this is the
+throughput path and also demonstrates that batching barely perturbs the hit
+ratio (the vectorized analogue of the paper's observation that racy metadata
+updates do not hurt policy quality).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import admission, kway
+from repro.core.kway import KWayConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    cache: KWayConfig
+    tinylfu: Optional[admission.TinyLFUConfig] = None  # None = admit always
+
+
+@partial(jax.jit, static_argnums=0)
+def _replay_scan(sim: SimConfig, trace: jnp.ndarray):
+    cache = kway.make_cache(sim.cache)
+    sketch = admission.make_sketch(sim.tinylfu) if sim.tinylfu else None
+
+    def step(carry, key):
+        cache, sketch, hits = carry
+        kb = key[None]
+        if sim.tinylfu is None:
+            cache, hit, _, _, _ = kway.access(sim.cache, cache, kb, kb.astype(jnp.int32))
+        else:
+            sketch = admission.record(sim.tinylfu, sketch, kb)
+            vkeys, vvalid = kway.peek_victims(sim.cache, cache, kb)
+            ok = admission.admit(sim.tinylfu, sketch, kb, vkeys, vvalid)
+            cache, hit, _, _, _ = kway.access(
+                sim.cache, cache, kb, kb.astype(jnp.int32), admit_on_miss=ok
+            )
+        return (cache, sketch, hits + hit[0]), ()
+
+    (cache, _, hits), _ = jax.lax.scan(
+        step, (cache, sketch, jnp.zeros((), jnp.int32)), trace
+    )
+    return hits, cache
+
+
+def replay(sim: SimConfig, trace: np.ndarray) -> float:
+    """Exact sequential replay -> hit ratio."""
+    trace = jnp.asarray(trace, jnp.uint32)
+    hits, _ = _replay_scan(sim, trace)
+    return float(hits) / trace.shape[0]
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
+    cache = kway.make_cache(sim.cache)
+    steps = trace.shape[0] // batch
+    chunks = trace[: steps * batch].reshape(steps, batch)
+
+    def step(carry, keys):
+        cache, hits = carry
+        cache, hit, _, _, _ = kway.access(
+            sim.cache, cache, keys, keys.astype(jnp.int32)
+        )
+        return (cache, hits + jnp.sum(hit.astype(jnp.int32))), ()
+
+    (cache, hits), _ = jax.lax.scan(step, (cache, jnp.zeros((), jnp.int32)), chunks)
+    return hits, cache
+
+
+def replay_batched(sim: SimConfig, trace: np.ndarray, batch: int = 64) -> float:
+    trace = jnp.asarray(trace, jnp.uint32)
+    n = (trace.shape[0] // batch) * batch
+    hits, _ = _replay_batched_scan(sim, trace, batch)
+    return float(hits) / n

@@ -1,0 +1,96 @@
+"""Synthetic trace families standing in for the paper's workload suite.
+
+The paper evaluates on Wikipedia, Sprite, multi1-3, OLTP, DS1, S1/S3, P8-14,
+F1/F2 and W2/W3 traces — none redistributable offline.  Each family below is
+parameterized to match a *class* of those workloads (DESIGN.md §6):
+
+  zipf            — web/CDN-like skewed popularity (wiki*, S*, W*)
+  zipf_shift      — popularity drifts in phases (multi1-3 mixtures)
+  scan_loop       — cyclic scans larger than the cache (glimpse/postgres;
+                    the classic LRU-killer)
+  recency         — stack-distance-driven, strongly recency-biased (sprite,
+                    filesystem traces)
+  oltp_mix        — skewed working set + uniform background writes (OLTP,
+                    F1/F2 financial)
+
+Generators are seeded numpy (host side — traces are inputs, not model state).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["generate", "FAMILIES"]
+
+
+def _zipf_catalog(rng: np.random.Generator, n: int, catalog: int, alpha: float):
+    ranks = np.arange(1, catalog + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    p /= p.sum()
+    # Random identity permutation so key id != popularity rank.
+    ident = rng.permutation(catalog).astype(np.uint32)
+    draws = rng.choice(catalog, size=n, p=p)
+    return ident[draws]
+
+
+def zipf(rng, n, catalog=1 << 16, alpha=0.9):
+    return _zipf_catalog(rng, n, catalog, alpha)
+
+
+def zipf_shift(rng, n, catalog=1 << 16, alpha=0.9, phases=4):
+    """Popularity permutation re-drawn each phase (multi* style)."""
+    per = n // phases
+    parts = []
+    for p in range(phases):
+        m = per if p < phases - 1 else n - per * (phases - 1)
+        parts.append(_zipf_catalog(rng, m, catalog, alpha) + np.uint32(p * catalog))
+    return np.concatenate(parts)
+
+
+def scan_loop(rng, n, working=1 << 14, noise=0.1, catalog=1 << 20):
+    """Sequential loop over `working` keys with `noise` random accesses."""
+    base = np.arange(n, dtype=np.uint32) % np.uint32(working)
+    mask = rng.random(n) < noise
+    base[mask] = rng.integers(0, catalog, size=mask.sum(), dtype=np.uint32)
+    return base
+
+
+def recency(rng, n, catalog=1 << 18, theta=0.8):
+    """Stack-distance model: each access re-references a recently used key
+    with probability theta (distance ~ geometric), else a fresh key."""
+    window = 4096
+    recent = np.full(window, 0, dtype=np.uint32)
+    out = np.empty(n, dtype=np.uint32)
+    head = 0
+    fresh = iter(rng.integers(0, catalog, size=n, dtype=np.uint32))
+    reuse = rng.random(n) < theta
+    dist = rng.geometric(0.02, size=n) % window
+    for i in range(n):
+        if reuse[i] and i > 0:
+            k = recent[(head - 1 - dist[i]) % window]
+        else:
+            k = next(fresh)
+        out[i] = k
+        recent[head % window] = k
+        head += 1
+    return out
+
+
+def oltp_mix(rng, n, catalog=1 << 17, alpha=1.1, hot_frac=0.7):
+    hot = _zipf_catalog(rng, n, max(1024, catalog // 64), alpha)
+    cold = rng.integers(0, catalog, size=n, dtype=np.uint32)
+    take_hot = rng.random(n) < hot_frac
+    return np.where(take_hot, hot, cold + np.uint32(1 << 24)).astype(np.uint32)
+
+
+FAMILIES = {
+    "zipf": zipf,
+    "zipf_shift": zipf_shift,
+    "scan_loop": scan_loop,
+    "recency": recency,
+    "oltp_mix": oltp_mix,
+}
+
+
+def generate(family: str, n: int, seed: int = 0, **kw) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return FAMILIES[family](rng, n, **kw).astype(np.uint32)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+    kway_probe      — batched set probe + victim select (the paper's O(k) scan)
+    paged_attention — flash-decode GQA over the K-way-managed paged KV pool
+    ops             — public jit'd wrappers (auto interpret off-TPU)
+    ref             — pure-jnp oracles for allclose validation
+"""

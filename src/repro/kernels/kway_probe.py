@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: batched K-way set probe + policy victim selection.
+
+This is the paper's hot loop — "scan the k ways of one set, find the key or
+the policy victim" (Algorithms 2/3/5/6) — as a VMEM-tiled TPU kernel.
+
+TPU adaptation (DESIGN.md §2):
+  * The cache's SoA lanes (keys / meta_a / meta_b / vals) are VMEM-resident:
+    a hot cache of S×k ≤ 64Ki entries is ≤ 1 MiB per lane — the software
+    analogue of the paper's "short continuous region of memory" argument,
+    transplanted to the HBM→VMEM hierarchy.  BlockSpecs map each full lane
+    into VMEM once; every grid step reuses it (index_map is constant).
+  * Each grid step processes ``qt`` queries.  Per query, the set row is
+    fetched with a dynamic slice (``pl.ds``) — the TPU equivalent of the
+    paper's pointer-free set scan; ways are padded to the 128-lane register
+    width so the k-wide compare/reduce is a single VPU op.
+  * Set indices arrive via scalar prefetch (PrefetchScalarGridSpec) so they
+    are available to index VMEM before the vector body runs.
+
+The kernel returns probe *decisions* (hit, way, victim way, victim key);
+applying them is a single XLA scatter done by the caller (``ops.py``) — a
+clean read-kernel / write-scatter split that keeps the kernel free of
+scatter hazards (the paper's CAS loop lives in the caller's deterministic
+conflict resolution, see core/kway.py).
+
+Validated in ``interpret=True`` mode against ``ref.py`` (pure jnp oracle)
+over shape/dtype/policy sweeps in tests/test_kway_kernel.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policies import Policy
+
+NEG_INF = -3.0e38  # python literal: jnp module-level constants would be
+POS_INF = 3.0e38   # captured by the kernel trace and rejected by pallas_call
+LANES = 128  # TPU vector register lane width
+
+
+def _scores_for_policy(policy: int, keys, meta_a, meta_b, now):
+    """Victim scores, lower == evict first.  Mirrors core/policies.py but is
+    written with only Pallas-TPU-lowerable ops (no gather, no PRNG)."""
+    a = meta_a.astype(jnp.float32)
+    if policy == Policy.RANDOM:
+        x = keys.astype(jnp.uint32) ^ now.astype(jnp.uint32)
+        x = x ^ (x >> 16)
+        x = x * jnp.uint32(0x85EBCA6B)
+        x = x ^ (x >> 13)
+        return x.astype(jnp.float32)
+    if policy == Policy.HYPERBOLIC:
+        age = (now - meta_b).astype(jnp.float32) + 1.0
+        return a / age
+    return a  # LRU / LFU / FIFO share "argmin meta_a"
+
+
+def _probe_kernel(
+    # scalar prefetch
+    sets_ref,            # int32 [B]    set index per query
+    # VMEM inputs
+    keys_ref,            # int32 [S, kp]   stored keys (bit-cast uint32)
+    meta_a_ref,          # int32 [S, kp]
+    meta_b_ref,          # int32 [S, kp]
+    qkeys_ref,           # int32 [qt]      query keys for this tile
+    times_ref,           # int32 [qt]      logical timestamps
+    # VMEM outputs
+    hit_ref,             # int32 [qt]
+    way_ref,             # int32 [qt]
+    vway_ref,            # int32 [qt]
+    vkey_ref,            # int32 [qt]
+    *,
+    policy: int,
+    ways: int,
+    qt: int,
+    empty_key: int,
+):
+    tile = pl.program_id(0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+    valid_way = lane < ways
+
+    for i in range(qt):  # unrolled: qt dynamic row slices per grid step
+        q = tile * qt + i
+        s = sets_ref[q]
+        row_keys = keys_ref[pl.ds(s, 1), :]          # [1, kp]
+        row_a = meta_a_ref[pl.ds(s, 1), :]
+        row_b = meta_b_ref[pl.ds(s, 1), :]
+        qk = qkeys_ref[i]
+        now = times_ref[i]
+
+        occupied = (row_keys != empty_key) & valid_way
+        eq = (row_keys == qk) & occupied
+        hit = jnp.any(eq)
+        # first matching way (stable argmax over the 128-lane mask)
+        way = jnp.min(jnp.where(eq, lane, LANES))
+
+        scores = _scores_for_policy(policy, row_keys, row_a, row_b, now)
+        scores = jnp.where(occupied, scores, NEG_INF)  # empty ways first
+        scores = jnp.where(valid_way, scores, POS_INF)  # padding ways last
+        vscore = jnp.min(scores)
+        vway = jnp.min(jnp.where(scores == vscore, lane, LANES))
+
+        hit_ref[i] = hit.astype(jnp.int32)
+        way_ref[i] = jnp.where(hit, way, 0)
+        vway_ref[i] = vway
+        vkey_ref[i] = jnp.sum(
+            jnp.where(lane == vway, row_keys, 0).astype(jnp.int32)
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "ways", "qt", "interpret")
+)
+def kway_probe(
+    keys: jnp.ndarray,     # int32 [S, kp] (ways padded to LANES multiple.. or any kp>=ways)
+    meta_a: jnp.ndarray,   # int32 [S, kp]
+    meta_b: jnp.ndarray,   # int32 [S, kp]
+    sets: jnp.ndarray,     # int32 [B]
+    qkeys: jnp.ndarray,    # int32 [B]
+    times: jnp.ndarray,    # int32 [B]
+    *,
+    policy: int,
+    ways: int,
+    qt: int = 8,
+    interpret: bool = True,
+):
+    """Run the probe kernel.  B must be a multiple of qt; kp (padded ways)
+    must equal LANES (one VREG row per set)."""
+    s, kp = keys.shape
+    b = sets.shape[0]
+    assert kp == LANES, f"pad ways to {LANES} lanes (got {kp})"
+    assert b % qt == 0
+    grid = (b // qt,)
+
+    kernel = functools.partial(
+        _probe_kernel,
+        policy=policy,
+        ways=ways,
+        qt=qt,
+        empty_key=-1,  # EMPTY_KEY 0xFFFFFFFF viewed as int32
+    )
+    out_shape = [jax.ShapeDtypeStruct((b,), jnp.int32)] * 4
+    full = lambda: pl.BlockSpec((s, kp), lambda i, *_: (0, 0))  # noqa: E731
+    qtile = lambda: pl.BlockSpec((qt,), lambda i, *_: (i,))  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[full(), full(), full(), qtile(), qtile()],
+            out_specs=[qtile()] * 4,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sets, keys, meta_a, meta_b, qkeys, times)

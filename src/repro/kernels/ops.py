@@ -1,0 +1,91 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These adapt the framework's pytree state to the kernels' padded VMEM layouts
+and pick interpret mode automatically (interpret=True off-TPU, compiled on
+TPU).  The rest of the framework calls only these entry points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.kway import KWayConfig, KWayState
+from repro.kernels import kway_probe as _kp
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_ways(arr: jnp.ndarray, lanes: int = _kp.LANES) -> jnp.ndarray:
+    s, k = arr.shape
+    if k == lanes:
+        return arr
+    pad = jnp.full((s, lanes - k), -1, arr.dtype)
+    return jnp.concatenate([arr, pad], axis=1)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
+def probe(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+):
+    """Kernel-accelerated probe of the K-way cache.
+
+    Returns (hit bool[B], way int32[B], victim_way int32[B], victim_key
+    uint32[B]) — the decisions the caller's scatter applies.  Falls back to
+    the pure-jnp oracle when the batch doesn't tile (or use_kernel=False).
+    """
+    qkeys = hashing.sanitize_keys(qkeys)
+    sets = hashing.set_index(qkeys, cfg.num_sets, cfg.seed)
+    b = qkeys.shape[0]
+    times = state.clock + jnp.arange(b, dtype=jnp.int32)
+
+    keys_i = _pad_ways(state.keys.astype(jnp.int32))
+    ma = _pad_ways(state.meta_a)
+    mb = _pad_ways(state.meta_b)
+    qk_i = qkeys.astype(jnp.int32)
+
+    qt = 8
+    if use_kernel and b % qt == 0:
+        hit, way, vway, vkey = _kp.kway_probe(
+            keys_i, ma, mb, sets, qk_i, times,
+            policy=int(cfg.policy), ways=cfg.ways, qt=qt,
+            interpret=not _on_tpu(),
+        )
+    else:
+        hit, way, vway, vkey = _ref.kway_probe_ref(
+            keys_i, ma, mb, sets, qk_i, times,
+            policy=int(cfg.policy), ways=cfg.ways,
+        )
+    return hit.astype(jnp.bool_), way, vway, vkey.astype(jnp.uint32)
+
+
+def attend_paged(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    softcap: float = 0.0,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Paged GQA decode attention (see kernels/paged_attention.py)."""
+    if use_kernel:
+        return _pa.paged_attention(
+            q, k_pages, v_pages, page_table, seq_lens,
+            scale=scale, softcap=softcap, interpret=not _on_tpu(),
+        )
+    return _ref.paged_attention_ref(
+        q, k_pages, v_pages, page_table, seq_lens, scale=scale, softcap=softcap
+    )

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle computes exactly what the kernel computes, with plain XLA ops and
+no tiling — the correctness reference for the interpret-mode sweeps in
+tests/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import Policy
+
+NEG_INF = jnp.float32(-3.0e38)
+POS_INF = jnp.float32(3.0e38)
+
+
+# ---------------------------------------------------------------------------
+# kway_probe oracle
+# ---------------------------------------------------------------------------
+
+def _scores(policy, keys_u32, meta_a, meta_b, now):
+    a = meta_a.astype(jnp.float32)
+    if policy == Policy.RANDOM:
+        x = keys_u32 ^ now.astype(jnp.uint32)
+        x = x ^ (x >> 16)
+        x = x * jnp.uint32(0x85EBCA6B)
+        x = x ^ (x >> 13)
+        return x.astype(jnp.float32)
+    if policy == Policy.HYPERBOLIC:
+        age = (now - meta_b).astype(jnp.float32) + 1.0
+        return a / age
+    return a
+
+
+def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways):
+    """Oracle for kernels.kway_probe (identical outputs, any kp >= ways)."""
+    kp = keys.shape[1]
+    lane = jnp.arange(kp, dtype=jnp.int32)[None, :]
+    row_keys = keys[sets]                        # [B, kp]
+    row_a = meta_a[sets]
+    row_b = meta_b[sets]
+    valid = lane < ways
+    occupied = (row_keys != -1) & valid
+    eq = (row_keys == qkeys[:, None]) & occupied
+    hit = jnp.any(eq, axis=-1)
+    way = jnp.min(jnp.where(eq, lane, kp), axis=-1)
+    way = jnp.where(hit, way, 0)
+
+    sc = _scores(policy, row_keys.astype(jnp.uint32), row_a, row_b, times[:, None])
+    sc = jnp.where(occupied, sc, NEG_INF)
+    sc = jnp.where(valid, sc, POS_INF)
+    vscore = jnp.min(sc, axis=-1, keepdims=True)
+    vway = jnp.min(jnp.where(sc == vscore, lane, kp), axis=-1)
+    vkey = jnp.take_along_axis(row_keys, vway[:, None], axis=-1)[:, 0]
+    return (
+        hit.astype(jnp.int32),
+        way.astype(jnp.int32),
+        vway.astype(jnp.int32),
+        vkey.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# paged_attention oracle
+# ---------------------------------------------------------------------------
+
+def paged_attention_ref(
+    q: jnp.ndarray,           # [B, H, D]
+    k_pages: jnp.ndarray,     # [KVH, P, page, D]  (head-major page pool)
+    v_pages: jnp.ndarray,     # [KVH, P, page, D]
+    page_table: jnp.ndarray,  # [B, pages_per_seq] int32
+    seq_lens: jnp.ndarray,    # [B] int32
+    *,
+    scale: float | None = None,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Single-token decode attention over a paged KV cache (GQA).
+
+    Gathers each sequence's pages, masks beyond seq_len, standard softmax.
+    Empty sequences (seq_len == 0) return zeros, matching the kernel.
+    """
+    b, h, d = q.shape
+    kvh, _, page, _ = k_pages.shape
+    pps = page_table.shape[1]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+
+    k = k_pages[:, page_table]                   # [KVH, B, pps, page, D]
+    v = v_pages[:, page_table]
+    k = k.reshape(kvh, b, pps * page, d)
+    v = v.reshape(kvh, b, pps * page, d)
+    pos = jnp.arange(pps * page)[None, :]
+    mask = pos < seq_lens[:, None]               # [B, T]
+
+    qg = q.reshape(b, kvh, g, d)
+    logits = jnp.einsum("bkgd,kbtd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.where(mask[:, None, None, :], jnp.exp(logits - m), 0.0)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    w = e / jnp.where(l > 0.0, l, 1.0)           # zeros for empty sequences
+    o = jnp.einsum("bkgt,kbtd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions cleanly on the
+    16×16 single-pod mesh AND the 2×16×16 multi-pod mesh);
+  * it fits (memory_analysis of the full scanned+remat step);
+  * and extracts the roofline terms (cost_analysis + HLO collective scrape
+    from unrolled p/2p-layer lowerings; see repro/roofline/analysis.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --skip-multi-pod
+Results accumulate in dryrun_results.json (resumable; --force recomputes).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import adamw
+from repro.roofline import analysis as roof
+from repro.train.step import TrainConfig, make_train_step
+
+RESULTS_PATH = "dryrun_results.json"
+
+
+def _pattern_period(cfg: ModelConfig) -> int:
+    return 2 if cfg.alt_local_global else 1
+
+
+def _reduced(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    kw = {"num_layers": n_layers}
+    if cfg.enc_layers > 0:
+        kw["enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# step builders (full-L scanned, or reduced unrolled)
+# ---------------------------------------------------------------------------
+
+def build_train_fn(cfg: ModelConfig, unroll: bool, act_spec=None,
+                   microbatches: int = 1):
+    """Train step.  The production (scanned) variant microbatches with
+    gradient accumulation — peak activation memory scales 1/mb.  The
+    roofline (unrolled) variant runs the full batch in one pass: FLOPs are
+    linear in tokens so the totals are identical, and cost_analysis would
+    count an accumulation scan body only once."""
+    tcfg = TrainConfig()
+
+    def loss_fn(params, batch):
+        from repro.train.step import cross_entropy
+        logits = lm.forward(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            unroll=unroll, act_spec=act_spec,
+        )
+        labels = batch["labels"][:, : logits.shape[1]]
+        return cross_entropy(cfg, logits, labels)
+
+    def step(params, opt_state, batch):
+        mb = 1 if unroll else microbatches
+        if mb > 1:
+            def acc(carry, i):
+                loss_acc, grad_acc = carry
+                mbatch = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // mb), x.shape[0] // mb, 0
+                    ),
+                    batch,
+                )
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                return (loss_acc + l,
+                        jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     grad_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zeros), jnp.arange(mb)
+            )
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = adamw.update(
+            tcfg.optimizer, grads, opt_state, params
+        )
+        return params, opt_state, {"loss": loss, **om}
+
+    return step
+
+
+def build_prefill_fn(cfg: ModelConfig, unroll: bool, act_spec=None):
+    def step(params, batch):
+        return lm.forward(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            unroll=unroll, act_spec=act_spec,
+        )
+
+    return step
+
+
+def build_decode_fn(cfg: ModelConfig, unroll: bool, act_spec=None):
+    def step(params, cache, batch):
+        return lm.decode_step(
+            cfg, params, batch["token"], batch["pos"], cache, unroll=unroll,
+            act_spec=act_spec,
+        )
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell on one mesh
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *, unroll: bool):
+    """Lower (not compile) one cell.  Returns (lowered, donate_info)."""
+    pspecs = configs.param_specs(cfg)
+    pshard = shd.param_shardings(cfg, pspecs, mesh)
+    ispecs = configs.input_specs(cfg, shape)
+    ishard = shd.input_shardings(cfg, shape, ispecs, mesh)
+    aspec = NamedSharding(mesh, shd.batch_pspec(cfg, shape.global_batch, mesh))
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        ostate = jax.eval_shape(adamw.init, pspecs)
+        oshard = adamw.state_shardings(pshard, mesh, pspecs)
+        mb = 8 if shape.global_batch % 8 == 0 else 1
+        fn = build_train_fn(cfg, unroll, aspec, microbatches=mb)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, oshard, ishard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(pspecs, ostate, ispecs)
+    elif shape.kind == "prefill":
+        fn = build_prefill_fn(cfg, unroll, aspec)
+        jitted = jax.jit(fn, in_shardings=(pshard, ishard))
+        lowered = jitted.lower(pspecs, ispecs)
+    else:  # decode
+        cspecs = configs.cache_specs(cfg, shape)
+        cshard = shd.cache_shardings(cfg, shape, cspecs, mesh)
+        fn = build_decode_fn(cfg, unroll, aspec)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, cshard, ishard),
+            out_shardings=(rep, cshard),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(pspecs, cspecs, ispecs)
+    return lowered
+
+
+def run_cell(arch_id: str, shape: ShapeConfig, *, multi_pod: bool,
+             roofline: bool = True, mesh=None) -> dict:
+    """Compile one cell; return the record for dryrun_results.json."""
+    spec = configs.get(arch_id)
+    cfg = spec.config
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rec = {
+        "arch": arch_id, "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips,
+    }
+    t0 = time.time()
+
+    # 1) production artifact -> memory + provability.
+    #    train/prefill: full L, scanned + remat (small HLO).
+    #    decode: full L, UNROLLED — a layer scan would capture the multi-TB
+    #    KV cache in the while-loop state (measured: +2x cache temp copies);
+    #    unrolled, the cache stays a jit-level donated buffer and the
+    #    append aliases in place.  Decode HLO per layer is tiny, so the
+    #    unrolled module stays manageable and cost_analysis is exact.
+    is_decode = shape.kind == "decode"
+    lowered = lower_cell(cfg, shape, mesh, unroll=is_decode)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    if not roofline:
+        return rec
+
+    if is_decode:
+        # the production artifact is already fully unrolled: costs are exact
+        ca = compiled.cost_analysis()
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+        coll_dev = roof.collective_bytes_per_device(compiled.as_text())
+    else:
+        # 2) roofline: unrolled p / 2p layer lowerings (exact, no while loop)
+        p = _pattern_period(cfg)
+        costs = {}
+        for n in (p, 2 * p):
+            rcfg = _reduced(cfg, n)
+            lo = lower_cell(rcfg, shape, mesh, unroll=True)
+            co = lo.compile()
+            ca = co.cost_analysis()
+            costs[n] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll": roof.collective_bytes_per_device(co.as_text()),
+            }
+        periods = cfg.num_layers // p
+        flops_dev = roof.extrapolate(
+            costs[p]["flops"], costs[2 * p]["flops"], periods
+        )
+        bytes_dev = roof.extrapolate(
+            costs[p]["bytes"], costs[2 * p]["bytes"], periods
+        )
+        coll_dev = roof.extrapolate_dict(
+            costs[p]["coll"], costs[2 * p]["coll"], periods
+        )
+
+    cell = roof.CellRoofline(
+        arch=arch_id, shape=shape.name, mesh=rec["mesh"], chips=chips,
+        hlo_flops=flops_dev * chips,
+        hlo_bytes=bytes_dev * chips,
+        coll_bytes=float(sum(coll_dev.values())) * chips,
+        coll_breakdown={k: v * chips for k, v in coll_dev.items()},
+        model_flops=roof.model_flops(cfg, shape),
+        per_device_peak_memory=rec["memory"]["argument_bytes"]
+        + rec["memory"]["temp_bytes"] + rec["memory"]["output_bytes"],
+    )
+    rec["roofline"] = cell.to_json()
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def all_cells():
+    for arch_id in configs.ARCH_IDS:
+        spec = configs.get(arch_id)
+        for shape in spec.shapes():
+            yield arch_id, shape
+        for shape in spec.skipped_shapes():
+            yield arch_id, shape  # recorded as documented skips
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--skip-multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    def save():
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    n_fail = 0
+    for arch_id, shape in all_cells():
+        if args.arch and arch_id != args.arch:
+            continue
+        if args.shape and shape.name != args.shape:
+            continue
+        spec = configs.get(arch_id)
+        skipped = shape.name == "long_500k" and not spec.supports_long_context
+
+        meshes = [("single", False)] + ([] if args.skip_multi_pod else [("multi", True)])
+        for mesh_name, mp in meshes:
+            key = f"{arch_id}|{shape.name}|{mesh_name}"
+            if key in results and results[key].get("status") in ("ok", "skipped"):
+                continue
+            if skipped:
+                results[key] = {
+                    "arch": arch_id, "shape": shape.name, "mesh": mesh_name,
+                    "status": "skipped",
+                    "reason": "pure full-attention arch; long_500k requires "
+                              "sub-quadratic attention (DESIGN.md §4)",
+                }
+                save()
+                continue
+            print(f"=== {key} ===", flush=True)
+            try:
+                rec = run_cell(
+                    arch_id, shape, multi_pod=mp,
+                    roofline=(mesh_name == "single"),
+                )
+                rec["status"] = "ok"
+                results[key] = rec
+                extra = ""
+                if "roofline" in rec:
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" frac={r['roofline_fraction']:.3f}")
+                print(f"    ok in {rec.get('total_s', rec['compile_s'])}s"
+                      f" mem/dev={rec['memory']['temp_bytes']/2**30:.2f}GiB"
+                      + extra, flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                n_fail += 1
+                results[key] = {
+                    "arch": arch_id, "shape": shape.name, "mesh": mesh_name,
+                    "status": "fail", "error": f"{type(e).__name__}: {e}",
+                }
+                print("    FAIL:", type(e).__name__, str(e)[:500], flush=True)
+                traceback.print_exc()
+            save()
+
+    ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    sk = sum(1 for r in results.values() if r.get("status") == "skipped")
+    fl = sum(1 for r in results.values() if r.get("status") == "fail")
+    print(f"\nDONE ok={ok} skipped={sk} fail={fl}")
+    return 0 if fl == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,600 @@
+"""Model-layer primitives: norms, RoPE, GQA attention, MLP, MoE, Mamba2 SSD.
+
+Pure functions over param pytrees (no framework dependency).  Conventions:
+  * params are plain nested dicts of jnp arrays; per-layer params are
+    *stacked* on a leading L axis and consumed by ``lax.scan`` in lm.py.
+  * compute dtype follows the input x (bf16 in production configs); softmax,
+    SSM recurrences and losses accumulate in f32.
+  * attention variants needed by the assigned archs are all here: GQA,
+    sliding window, local/global alternation (per-layer dynamic window),
+    logit softcap, encoder (bidirectional) and cross attention, decode
+    against a KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis] if in_axis is not None else shape[0]
+    scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply rotary embedding.  x: [..., S, H, D], positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d_model, num_heads * head_dim)),
+        "wk": dense_init(k2, (d_model, num_kv_heads * head_dim)),
+        "wv": dense_init(k3, (d_model, num_kv_heads * head_dim)),
+        "wo": dense_init(k4, (num_heads * head_dim, d_model)),
+    }
+
+
+def _attn_weights(q, k, mask, scale, softcap):
+    """q: [B,S,KVH,G,D]  k: [B,T,KVH,D]  mask: [B or 1, S, T] -> [B,S,KVH,G,T].
+
+    bf16 operands accumulate into f32 via preferred_element_type — casting
+    the operands to f32 first would materialize an f32 copy of the whole KV
+    cache (measured: 7.5 GiB x 62 buffers on deepseek decode_32k).
+    """
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+ATTN_Q_CHUNK = 2048  # q-block size for long sequences (see attention())
+
+
+def attention(
+    p: dict,
+    x: jnp.ndarray,              # [B, S, d]
+    positions: jnp.ndarray,      # [1 or B, S]
+    mask: Optional[jnp.ndarray] = None,  # [B or 1, S, T]; None => causal
+    kv: Optional[tuple] = None,  # cross-attn: precomputed (k, v) [B,T,KVH,D]
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    softcap: float = 0.0,
+    use_rope: bool = True,
+    window: jnp.ndarray | int = 0,
+    q_chunk: int = ATTN_Q_CHUNK,
+    unroll: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    For causal self-attention with S > 2·q_chunk the query axis is blocked
+    (flash-style memory behaviour from plain XLA ops): peak logits are
+    [B, H, q_chunk, S] instead of [B, H, S, S] — at 32k context that is
+    17 GiB -> 1 GiB per device.  The block loop is a ``lax.scan`` (or
+    Python-unrolled under the roofline pass, which must not contain while
+    loops).  Cross/encoder attention is left unblocked (masks are dense).
+    """
+    b, s, _ = x.shape
+    g = num_heads // num_kv_heads
+    q = (x @ p["wq"]).reshape(b, s, num_heads, head_dim)
+    if kv is None:
+        k = (x @ p["wk"]).reshape(b, s, num_kv_heads, head_dim)
+        v = (x @ p["wv"]).reshape(b, s, num_kv_heads, head_dim)
+        if use_rope:
+            q = rope(q, positions, rope_theta)
+            k = rope(k, positions, rope_theta)
+        causal_self = True
+    else:
+        k, v = kv
+        causal_self = False
+    q = q.reshape(b, s, num_kv_heads, g, head_dim)
+
+    if causal_self and q_chunk and s > 2 * q_chunk and s % q_chunk == 0:
+        nc = s // q_chunk
+        q_c = q.reshape(b, nc, q_chunk, num_kv_heads, g, head_dim)
+        q_c = jnp.moveaxis(q_c, 1, 0)                   # [nc, b, qc, ...]
+        pos_k = positions                                # [1, S]
+        pos_c = positions.reshape(positions.shape[0], nc, q_chunk)
+        pos_c = jnp.moveaxis(pos_c, 1, 0)                # [nc, 1, qc]
+
+        def one_chunk(q_blk, pos_blk):
+            m = causal_mask(pos_blk, pos_k, window=window)
+            w = _attn_weights(q_blk, k, m, head_dim ** -0.5, softcap)
+            return jnp.einsum(
+                "bkgst,btkd->bskgd", w.astype(v.dtype), v,
+                preferred_element_type=jnp.float32,
+            )
+
+        if unroll:
+            o = jnp.concatenate(
+                [one_chunk(q_c[i], pos_c[i]) for i in range(nc)], axis=1
+            )
+        else:
+            _, o_c = jax.lax.scan(
+                lambda c, inp: (c, one_chunk(*inp)), None, (q_c, pos_c)
+            )
+            o = jnp.moveaxis(o_c, 0, 1).reshape(
+                b, s, num_kv_heads, g, head_dim
+            )
+        o = o.reshape(b, s, num_heads * head_dim).astype(x.dtype)
+        return o @ p["wo"]
+
+    if mask is None:
+        mask = causal_mask(positions, positions, window=window)
+    w = _attn_weights(q, k, mask, head_dim ** -0.5, softcap)
+    o = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, s, num_heads * head_dim).astype(x.dtype)
+    return o @ p["wo"]
+
+
+def cross_kv(p: dict, enc_out: jnp.ndarray, *, num_kv_heads: int, head_dim: int):
+    b, t, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(b, t, num_kv_heads, head_dim)
+    v = (enc_out @ p["wv"]).reshape(b, t, num_kv_heads, head_dim)
+    return k, v
+
+
+def causal_mask(
+    positions_q: jnp.ndarray,    # [B, S] absolute positions of queries
+    positions_k: jnp.ndarray,    # [B, T]
+    window: jnp.ndarray | int = 0,  # 0 = full causal; >0 = sliding window
+    valid_k: Optional[jnp.ndarray] = None,  # [B, T] key validity (decode)
+) -> jnp.ndarray:
+    """Causal (+ optional sliding window) mask.  ``window`` may be a traced
+    scalar — that's how gemma2's local/global alternation rides one scan."""
+    diff = positions_q[:, :, None] - positions_k[:, None, :]
+    m = diff >= 0
+    w = jnp.asarray(window)
+    m = m & ((w <= 0) | (diff < w))
+    if valid_k is not None:
+        m = m & valid_k[:, None, :]
+    return m
+
+
+def decode_attention(
+    p: dict,
+    x: jnp.ndarray,              # [B, 1, d] current token
+    pos: jnp.ndarray,            # [B] current position
+    k_cache: jnp.ndarray,        # [B, T, KVH, D] — positions < pos are valid;
+    v_cache: jnp.ndarray,        #  the CURRENT token is NOT in the cache
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    softcap: float = 0.0,
+    window: jnp.ndarray | int = 0,
+    is_cross: bool = False,
+    cross_len: Optional[jnp.ndarray] = None,
+    kv_new: Optional[tuple] = None,   # (k,v) [B,1,KVH,D] of the current token
+):
+    """Single-step decode: attend-then-append.
+
+    The cache is READ-ONLY here; the current token's (k, v) arrive as
+    ``kv_new`` and enter the softmax as an extra lane (two-part flash
+    combine).  This lets the layer scan consume the cache as pure xs —
+    no in-scan cache write, so XLA never materializes a second copy of a
+    multi-TB KV cache (the caller appends once, outside the scan).
+    """
+    b = x.shape[0]
+    t = k_cache.shape[1]
+    g = num_heads // num_kv_heads
+    scale = head_dim ** -0.5
+    q = (x @ p["wq"]).reshape(b, 1, num_heads, head_dim)
+    if not is_cross:
+        q = rope(q, pos[:, None], rope_theta)
+    q = q.reshape(b, 1, num_kv_heads, g, head_dim)
+
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, :]
+    if is_cross:
+        mask = (kpos < cross_len[:, None])[:, None, :]
+    else:
+        diff = pos[:, None, None] - kpos[:, None, :]    # [B, 1, T]
+        mask = diff >= 1                                 # strictly older
+        w_ = jnp.asarray(window)
+        mask = mask & ((w_ <= 0) | (diff < w_))
+
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst", q, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+
+    if kv_new is not None:
+        k_new, v_new = kv_new                           # [B, 1, KVH, D]
+        l_self = jnp.einsum(
+            "bskgd,bskd->bkgs", q, k_new, preferred_element_type=jnp.float32,
+        )[..., None] * scale                            # [B,KVH,G,1,1]
+        if softcap > 0.0:
+            l_self = jnp.tanh(l_self / softcap) * softcap
+        m = jnp.maximum(jnp.max(logits, axis=-1, keepdims=True), l_self)
+        w_c = jnp.exp(logits - m)
+        w_s = jnp.exp(l_self - m)
+        num = jnp.einsum("bkgst,btkd->bskgd", w_c.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+        num = num + w_s.transpose(0, 3, 1, 2, 4) * v_new.astype(jnp.float32)[
+            :, :, :, None, :
+        ]
+        den = jnp.sum(w_c, axis=-1, keepdims=True) + w_s
+        o = num / den.transpose(0, 3, 1, 2, 4)
+    else:
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bskgd", w.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, num_heads * head_dim).astype(x.dtype)
+    return o @ p["wo"]
+
+
+def project_kv_step(p, x, pos, *, num_kv_heads, head_dim, rope_theta=10000.0):
+    """K/V for the current decode token (to be written into the cache)."""
+    b = x.shape[0]
+    k = (x @ p["wk"]).reshape(b, 1, num_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, 1, num_kv_heads, head_dim)
+    k = rope(k, pos[:, None], rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated) and MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff)),
+        "wg": dense_init(k2, (d_model, d_ff)),
+        "wo": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+
+
+def init_moe(key, d_model, d_ff, num_experts, ff_shards: int = 1):
+    """Expert weights, stored in the virtual-expert layout: each real expert
+    is ``ff_shards`` slices of d_ff (exact partition of the gated-MLP sum;
+    routing stays over real experts)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ev, ffv = num_experts * ff_shards, d_ff // ff_shards
+    return {
+        "router": dense_init(k1, (d_model, num_experts), dtype=jnp.float32),
+        "wi": dense_init(k2, (ev, d_model, ffv), in_axis=1),
+        "wg": dense_init(k3, (ev, d_model, ffv), in_axis=1),
+        "wo": dense_init(k4, (ev, ffv, d_model), in_axis=1),
+    }
+
+
+def _moe_constrain(arr, act_spec, ep: bool):
+    """Shard MoE dispatch buffers [B, E, cap, d]: batch over the data axes,
+    experts over `model` when EP applies (unconstrained, GSPMD replicates
+    the buffers — measured +20 GiB/device on mixtral)."""
+    if act_spec is None:
+        return arr
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = act_spec.mesh
+    b0 = act_spec.spec[0] if len(act_spec.spec) else None
+    dims = [None] * arr.ndim
+    if b0 is not None and arr.shape[0] % _axes_size(mesh, b0) == 0:
+        dims[0] = b0
+    if ep:
+        dims[1] = "model"
+    return jax.lax.with_sharding_constraint(arr, NamedSharding(mesh, P(*dims)))
+
+
+def _axes_size(mesh, axes):
+    if isinstance(axes, str):
+        axes = (axes,)
+    import numpy as _np
+
+    return int(_np.prod([mesh.shape[a] for a in axes]))
+
+
+def moe(
+    p: dict,
+    x: jnp.ndarray,              # [B, S, d]
+    *,
+    num_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act_spec=None,
+    ff_shards: int = 1,
+) -> jnp.ndarray:
+    """Top-k MoE with capacity-bounded, batch-grouped dispatch (GShard).
+
+    Each batch row is a dispatch group with its own expert capacity, so the
+    scatter/gather carries a leading [B] dim that GSPMD partitions over the
+    data axes.  (A single flat [T·K, d] scatter is NOT partitionable and
+    was replicated — measured 96 GiB/layer all-gathers on dbrx.)  With
+    experts sharded over `model` (EP) the group->expert movement lowers to
+    all-to-all-style collectives; token overflow beyond the per-group
+    capacity is dropped (standard).
+    """
+    b, s, d = x.shape
+
+    logits = x.astype(jnp.float32) @ p["router"]            # [B, S, E_real]
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(gates_full, top_k)  # [B, S, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    if ff_shards > 1:
+        # expand to virtual experts: token routed to real expert r goes to
+        # slices (r*fs .. r*fs+fs-1), each with the same gate (the combine
+        # sums the slices' partial outputs — exact ff partition)
+        fs = ff_shards
+        gate_idx = (gate_idx[..., None] * fs
+                    + jnp.arange(fs, dtype=gate_idx.dtype)).reshape(
+                        b, s, top_k * fs)
+        gate_vals = jnp.repeat(gate_vals, fs, axis=-1)
+        top_k = top_k * fs
+    e = num_experts * ff_shards
+    cap = int(s * top_k * capacity_factor / e)
+    cap = max(cap, top_k)
+
+    # Position of each (token, k) within its expert's per-group capacity.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)   # [B, S, K, E]
+    flat_oh = onehot.reshape(b, s * top_k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=1) - flat_oh        # exclusive, per row
+    pos = jnp.sum(pos_in_e * flat_oh, axis=-1).reshape(b, s, top_k)
+    keep = pos < cap                                        # overflow dropped
+
+    ep = act_spec is not None and e % _axes_size(act_spec.mesh, "model") == 0
+
+    slot = gate_idx * cap + jnp.where(keep, pos, 0)         # [B,S,K] in [0,E*cap)
+    w8 = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+    src = (x[:, :, None, :] * w8[..., None]).reshape(b, s * top_k, d)
+    # The scatter itself must be constrained batch-only: an expert/model
+    # sharding on the scatter target is not partitionable (indices span all
+    # experts) and GSPMD replicates the whole dispatch.  The EP boundary is
+    # owned by the expert einsums below (wi/wg/wo are E-sharded over model),
+    # so the model-axis movement happens on the small capacity buffers.
+    buf = _moe_constrain(jnp.zeros((b, e * cap, d), x.dtype), act_spec, False)
+    # vmap'd 1-D scatter => operand_batching_dims on the HLO scatter, which
+    # GSPMD partitions on the batch axis.  (A 2-D scatter indexed with a
+    # broadcast arange(b) column loses the batch sharding in the transpose:
+    # measured 96 GiB batch-replicated all-reduce in the backward.)
+    buf = jax.vmap(lambda bb, ss, vv: bb.at[ss].add(vv))(
+        buf, slot.reshape(b, s * top_k), src
+    )
+    buf = buf.reshape(b, e, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"])) * jnp.einsum(
+        "becd,edf->becf", buf, p["wi"]
+    )
+    h = _moe_constrain(h, act_spec, ep)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out_buf = _moe_constrain(out_buf, act_spec, False)
+    out_buf = out_buf.reshape(b, e * cap, d)
+
+    gathered = jax.vmap(lambda ob, ss: ob[ss])(
+        out_buf, slot.reshape(b, s * top_k)
+    )
+    gathered = _moe_constrain(gathered, act_spec, False)
+    gathered = gathered.reshape(b, s, top_k, d)
+    combined = jnp.sum(
+        gathered * (gate_vals.astype(x.dtype) * w8)[..., None], axis=2
+    )
+    return combined
+
+
+def moe_aux_loss(p: dict, x: jnp.ndarray, *, num_experts: int, top_k: int):
+    """Load-balancing auxiliary loss (Switch/Mixtral form)."""
+    t = x.shape[0] * x.shape[1]
+    logits = x.reshape(t, -1).astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(gates, top_k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx, num_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_prob = jnp.mean(gates, axis=0)
+    return num_experts * jnp.sum(frac_tokens * frac_prob)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD — state space duality, arXiv:2405.21060)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_inner: int
+    nheads: int
+    head_dim: int
+    state: int    # N
+    conv: int
+
+    @staticmethod
+    def from_config(d_model, state, expand=2, head_dim=64, conv=4):
+        d_inner = expand * d_model
+        return SSMDims(d_model, d_inner, d_inner // head_dim, head_dim, state, conv)
+
+
+def init_ssm(key, dims: SSMDims):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    zxbcdt = 2 * dims.d_inner + 2 * dims.state + dims.nheads
+    return {
+        "in_proj": dense_init(k1, (dims.d_model, zxbcdt)),
+        "conv_w": dense_init(k2, (dims.conv, dims.d_inner + 2 * dims.state)),
+        "A_log": jnp.zeros((dims.nheads,), jnp.float32),
+        "D": jnp.ones((dims.nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((dims.nheads,), jnp.float32),
+        "norm": jnp.zeros((dims.d_inner,), jnp.float32),
+        "out_proj": dense_init(k3, (dims.d_inner, dims.d_model)),
+    }
+
+
+def _split_zxbcdt(p, u, dims: SSMDims):
+    zxbcdt = u @ p["in_proj"]
+    di, n, nh = dims.d_inner, dims.state, dims.nheads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv over the sequence.  xbc: [B, S, C]."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+k-1, C]
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * conv_w[i][None, None, :] for i in range(k)
+    )
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def ssd_scan(
+    p: dict,
+    u: jnp.ndarray,              # [B, S, d_model]
+    dims: SSMDims,
+    chunk: int = 128,
+    init_state=None,             # ([B, nh, hp, N], conv_state) or None
+):
+    """Chunked SSD forward (training / prefill).
+
+    Implements the Mamba2 block: in_proj -> causal conv -> selective state
+    update, with the quadratic-intra-chunk / recurrent-inter-chunk
+    decomposition.  Returns (y [B,S,d_model], (ssm_state, conv_state)).
+    """
+    b, s, _ = u.shape
+    di, n, nh, hp = dims.d_inner, dims.state, dims.nheads, dims.head_dim
+    z, xbc, dt = _split_zxbcdt(p, u, dims)
+    conv_in_state = None if init_state is None else init_state[1]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_in_state)
+    x, B_, C_ = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,nh]
+    a = -jnp.exp(p["A_log"])                                      # [nh]
+    dA = dt * a                                                   # log-decay
+    xh = x.reshape(b, s, nh, hp).astype(jnp.float32)
+    xdt = xh * dt[..., None]                                      # [B,S,nh,hp]
+    Bf = B_.astype(jnp.float32)                                   # [B,S,N]
+    Cf = C_.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    nc = s // chunk
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    r = lambda t_, tail: t_.reshape((b, nc, chunk) + tail)  # noqa: E731
+    dA_c = r(dA, (nh,))
+    x_c = r(xdt, (nh, hp))
+    B_c = r(Bf, (n,))
+    C_c = r(Cf, (n,))
+
+    # within-chunk cumulative log decay
+    lt = jnp.cumsum(dA_c, axis=2)                                 # [B,nc,Q,nh]
+    # intra-chunk (quadratic in Q): M[i,j] = exp(lt_i - lt_j) for i >= j
+    diff = lt[:, :, :, None, :] - lt[:, :, None, :, :]            # [B,nc,Q,Q,nh]
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))[None, None, :, :, None]
+    # mask BEFORE exp: the upper triangle has large positive diffs that would
+    # overflow to inf (and inf * 0 = NaN after masking)
+    M = jnp.exp(jnp.where(tri, diff, NEG_INF))
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)                  # [B,nc,Q,Q]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, M, x_c)
+
+    # inter-chunk recurrence over states [B, nh, hp, N]
+    decay_end = jnp.exp(lt[:, :, -1:, :] - lt)                    # [B,nc,Q,nh]
+    chunk_states = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", decay_end, x_c, B_c)
+    chunk_decay = jnp.exp(lt[:, :, -1, :])                        # [B,nc,nh]
+
+    s0 = (
+        jnp.zeros((b, nh, hp, n), jnp.float32)
+        if init_state is None
+        else init_state[0].astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        cdecay, cstate = inp  # [B,nh], [B,nh,hp,N]
+        out_state = state
+        state = state * cdecay[:, :, None, None] + cstate
+        return state, out_state
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (chunk_decay.swapaxes(0, 1), chunk_states.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)                      # [B,nc,nh,hp,N]
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", C_c, jnp.exp(lt), prev_states
+    )
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hp)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2's norm-before-out_proj)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"])
+    return (y.astype(u.dtype) @ p["out_proj"]), (final_state, conv_state)
+
+
+def ssd_step(p: dict, u: jnp.ndarray, state, dims: SSMDims):
+    """Single-token decode: recurrent state update.  u: [B, 1, d_model]."""
+    b = u.shape[0]
+    di, n, nh, hp = dims.d_inner, dims.state, dims.nheads, dims.head_dim
+    ssm_state, conv_state = state                                 # [B,nh,hp,N]
+    z, xbc, dt = _split_zxbcdt(p, u, dims)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_state)
+    x, B_, C_ = jnp.split(xbc[:, 0], [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    a = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * a)                                          # [B,nh]
+    xh = x.reshape(b, nh, hp).astype(jnp.float32)
+    Bf = B_.astype(jnp.float32)
+    Cf = C_.astype(jnp.float32)
+
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bf)
+    new_state = ssm_state.astype(jnp.float32) * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cf) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"])
+    return (y.astype(u.dtype) @ p["out_proj"]), (new_state.astype(ssm_state.dtype), conv_state)

@@ -1,0 +1,405 @@
+"""Composable LM definition covering all 10 assigned architectures.
+
+One parameterized model family: decoder-only transformer (dense / MoE /
+sliding-window / local-global / softcap), pure SSM (mamba2), hybrid
+parallel attn+SSM (hymba), encoder-decoder (seamless backbone) and
+prefix-embedding VLM (internvl backbone).
+
+Layer parameters are stacked on a leading L axis and consumed with
+``lax.scan`` (small HLO, one compile per 40 dry-run cells) under per-layer
+``jax.checkpoint`` (remat).  Heterogeneous per-layer behaviour (gemma2's
+local/global alternation) is expressed as *data* — a [L] window array scanned
+alongside the params — so one homogeneous scan serves every config.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import SSMDims
+
+VOCAB_ALIGN = 256
+
+
+def _constrain(x, act_spec):
+    """Anchor the activation batch sharding.  GSPMD propagation through
+    while loops + broadcast masks is lossy (measured: batch-replicated
+    32 GiB attention logits on deepseek-7b without this).
+
+    ``act_spec`` is a NamedSharding whose spec's first entry is the batch
+    axes (so no mesh context manager is needed at trace time)."""
+    if act_spec is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    spec = act_spec.spec
+    b0 = spec[0] if len(spec) else None
+    full = NamedSharding(
+        act_spec.mesh, PartitionSpec(b0, *([None] * (x.ndim - 1)))
+    )
+    return jax.lax.with_sharding_constraint(x, full)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return (cfg.vocab_size + VOCAB_ALIGN - 1) // VOCAB_ALIGN * VOCAB_ALIGN
+
+
+def ssm_dims(cfg: ModelConfig) -> SSMDims:
+    return SSMDims.from_config(
+        cfg.d_model, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_conv
+    )
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (0 = full).  gemma2: even layers local."""
+    if cfg.alt_local_global:
+        w = [cfg.sliding_window if i % 2 == 0 else 0 for i in range(cfg.num_layers)]
+    else:
+        w = [cfg.sliding_window] * cfg.num_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, key, *, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+         "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.has_attention:
+        p["attn"] = L.init_attention(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        )
+    if cfg.has_ssm:
+        p["ssm"] = L.init_ssm(ks[1], ssm_dims(cfg))
+    if cross:
+        p["cross"] = L.init_attention(
+            ks[2], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        )
+        p["ln_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(ks[3], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                              cfg.moe_ff_shards)
+    elif cfg.d_ff > 0:
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kemb, kblocks, khead, kenc = jax.random.split(key, 4)
+    vp = padded_vocab(cfg)
+    is_encdec = cfg.enc_layers > 0
+    blocks = jax.vmap(
+        lambda k: _init_block(cfg, k, cross=is_encdec)
+    )(jax.random.split(kblocks, cfg.num_layers))
+    params = {
+        "embed": L.dense_init(kemb, (vp, cfg.d_model), in_axis=1),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(khead, (cfg.d_model, vp))
+    if is_encdec:
+        enc_cfg = cfg  # same width; bidirectional blocks without cross/moe
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_block(enc_cfg, k, cross=False)
+        )(jax.random.split(kenc, cfg.enc_layers))
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks (full-sequence: train / prefill / encode)
+# ---------------------------------------------------------------------------
+
+def _block_seq(cfg: ModelConfig, p, x, positions, window, enc_out, enc_mask,
+               unroll=False, act_spec=None):
+    """One decoder block over a full sequence."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    mix = jnp.zeros_like(x)
+    if cfg.has_attention:
+        mix = mix + L.attention(
+            p["attn"], h, positions, None,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+            softcap=cfg.attn_softcap, window=window, unroll=unroll,
+        )
+    if cfg.has_ssm:
+        y, _ = L.ssd_scan(p["ssm"], h, ssm_dims(cfg))
+        mix = mix + y
+    if cfg.has_attention and cfg.has_ssm:
+        mix = mix * 0.5  # hymba: mean-fused parallel heads
+    x = x + mix
+    if "cross" in p:
+        hc = L.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        kv = L.cross_kv(p["cross"], enc_out, num_kv_heads=cfg.num_kv_heads,
+                        head_dim=cfg.hd)
+        x = x + L.attention(
+            p["cross"], hc, positions, enc_mask, kv=kv,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, use_rope=False,
+        )
+    if cfg.is_moe:
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.moe(p["moe"], h2, num_experts=cfg.num_experts,
+                      top_k=cfg.top_k, act_spec=act_spec,
+                      ff_shards=cfg.moe_ff_shards)
+    elif cfg.d_ff > 0:
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h2)
+    return x
+
+
+def _scan_blocks(cfg, blocks, x, positions, windows, enc_out=None, enc_mask=None,
+                 remat: bool = True, unroll: bool = False, act_spec=None):
+    def body(carry, xs):
+        p, w = xs
+        carry = _constrain(carry, act_spec)
+        return _block_seq(cfg, p, carry, positions, w, enc_out, enc_mask,
+                          unroll=unroll, act_spec=act_spec), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    if unroll:
+        # Python-unrolled variant: same math, no while loop.  Used by the
+        # roofline pass (cost_analysis counts a scan body once regardless of
+        # trip count — unrolled 1/2-layer compiles give exact per-layer costs).
+        for i in range(cfg.num_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], (blocks, windows)))
+        return x
+    x, _ = jax.lax.scan(body, x, (blocks, windows))
+    return x
+
+
+def _encode(cfg: ModelConfig, params, enc_embeds, unroll: bool = False,
+            act_spec=None):
+    """Bidirectional encoder over stub frame embeddings [B, T, d]."""
+    b, t, _ = enc_embeds.shape
+    pos = jnp.arange(t, dtype=jnp.int32)[None]
+    full = jnp.ones((1, t, t), jnp.bool_)
+
+    def body(carry, p):
+        carry = _constrain(carry, act_spec)
+        h = L.rms_norm(carry, p["ln1"], cfg.norm_eps)
+        a = L.attention(
+            p["attn"], h, pos, full,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+        )
+        x = carry + a
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h2), None
+
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    if unroll:
+        x = enc_embeds
+        for i in range(cfg.enc_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_blocks"]))
+    else:
+        x, _ = jax.lax.scan(body, enc_embeds, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jnp.ndarray,                   # [B, S_tok]
+    prefix_embeds: Optional[jnp.ndarray] = None,  # [B, P, d] (vlm stub)
+    enc_embeds: Optional[jnp.ndarray] = None,     # [B, T_enc, d] (audio stub)
+    unroll: bool = False,
+    act_spec: Optional[PartitionSpec] = None,
+) -> jnp.ndarray:
+    """Returns logits [B, S, padded_vocab] over the full (prefix+token) seq."""
+    x = params["embed"][tokens] * jnp.asarray(cfg.scale_emb, jnp.bfloat16)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = _constrain(x, act_spec)
+    b, s, _ = x.shape
+    # positions/masks are batch-free ([1, S]): a [B, S, S] mask would
+    # materialize a replicated 16 GiB int tensor at production shapes
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+
+    enc_out = enc_mask = None
+    if cfg.enc_layers > 0:
+        assert enc_embeds is not None
+        enc_out = _encode(cfg, params, enc_embeds, unroll=unroll,
+                          act_spec=act_spec)
+        enc_mask = jnp.ones((1, s, enc_out.shape[1]), jnp.bool_)
+
+    x = _scan_blocks(cfg, params["blocks"], x, positions, layer_windows(cfg),
+                     enc_out, enc_mask, unroll=unroll, act_spec=act_spec)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.final_softcap > 0:
+        lf = logits.astype(jnp.float32)
+        logits = (jnp.tanh(lf / cfg.final_softcap) * cfg.final_softcap).astype(
+            logits.dtype
+        )
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Decode-state pytree.  Shapes are the serve_step roofline inputs."""
+    cache = {}
+    if cfg.has_attention:
+        shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.hd)
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+    if cfg.has_ssm:
+        d = ssm_dims(cfg)
+        cache["ssm"] = jnp.zeros(
+            (cfg.num_layers, batch, d.nheads, d.head_dim, d.state), jnp.float32
+        )
+        cache["conv"] = jnp.zeros(
+            (cfg.num_layers, batch, d.conv - 1, d.d_inner + 2 * d.state), dtype
+        )
+    if cfg.enc_layers > 0:
+        enc_t = max_seq // 2
+        kv = (cfg.num_layers, batch, enc_t, cfg.num_kv_heads, cfg.hd)
+        cache["cross_k"] = jnp.zeros(kv, dtype)
+        cache["cross_v"] = jnp.zeros(kv, dtype)
+        cache["cross_len"] = jnp.full((batch,), enc_t, jnp.int32)
+    return cache
+
+
+def _block_decode(cfg, p, x, pos, window, ck, cv, cssm, cconv, xk, xv, xlen):
+    """One decoder block for one token.
+
+    The KV cache (ck/cv) is read-only here (attend-then-append: the new
+    token's k/v are returned for the caller to write OUTSIDE the layer
+    scan — in-scan writes would force XLA to double-buffer the whole
+    multi-TB cache).  Returns (x, k_new, v_new, ssm, conv).
+    """
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    mix = jnp.zeros_like(x)
+    k_new = v_new = None
+    if cfg.has_attention:
+        k_new, v_new = L.project_kv_step(
+            p["attn"], h, pos, num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta,
+        )
+        mix = mix + L.decode_attention(
+            p["attn"], h, pos, ck, cv,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+            softcap=cfg.attn_softcap, window=window,
+            kv_new=(k_new, v_new),
+        )
+    if cfg.has_ssm:
+        y, (cssm, cconv) = L.ssd_step(p["ssm"], h, (cssm, cconv), ssm_dims(cfg))
+        mix = mix + y
+    if cfg.has_attention and cfg.has_ssm:
+        mix = mix * 0.5
+    x = x + mix
+    if "cross" in p:
+        hc = L.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + L.decode_attention(
+            p["cross"], hc, pos, xk, xv,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+            is_cross=True, cross_len=xlen,
+        )
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        x = x + L.moe(p["moe"], h2, num_experts=cfg.num_experts,
+                      top_k=cfg.top_k, ff_shards=cfg.moe_ff_shards)
+    elif cfg.d_ff > 0:
+        x = x + L.mlp(p["mlp"], h2)
+    return x, k_new, v_new, cssm, cconv
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    token: jnp.ndarray,      # [B] int32 — the newly sampled token
+    pos: jnp.ndarray,        # [B] int32 — its position (== current length)
+    cache: dict,
+    unroll: bool = False,
+    act_spec: Optional[PartitionSpec] = None,
+):
+    """One serve step: append token, attend to cache, return next logits."""
+    x = params["embed"][token][:, None, :] * jnp.asarray(
+        cfg.scale_emb, jnp.bfloat16
+    )
+    x = _constrain(x, act_spec)
+    windows = layer_windows(cfg)
+    dummy = jnp.zeros((cfg.num_layers,), jnp.int32)
+
+    def body(carry, xs):
+        x = _constrain(carry, act_spec)
+        p = xs["p"]
+        w = xs["w"]
+        x, k_new, v_new, cssm, cconv = _block_decode(
+            cfg, p, x, pos, w,
+            xs.get("ck"), xs.get("cv"), xs.get("cssm"), xs.get("cconv"),
+            xs.get("xk"), xs.get("xv"), xs.get("xlen"),
+        )
+        out = {}
+        if k_new is not None:
+            out["k_new"], out["v_new"] = k_new, v_new
+        if cssm is not None:
+            out["cssm"], out["cconv"] = cssm, cconv
+        return x, out
+
+    xs = {"p": params["blocks"], "w": windows}
+    if cfg.has_attention:
+        xs["ck"], xs["cv"] = cache["k"], cache["v"]
+    if cfg.has_ssm:
+        xs["cssm"], xs["cconv"] = cache["ssm"], cache["conv"]
+    if cfg.enc_layers > 0:
+        xs["xk"], xs["xv"] = cache["cross_k"], cache["cross_v"]
+        xs["xlen"] = jnp.broadcast_to(cache["cross_len"], (cfg.num_layers,) + cache["cross_len"].shape)
+    del dummy
+
+    if unroll:
+        outs = []
+        for i in range(cfg.num_layers):
+            x, o = body(x, jax.tree.map(lambda a: a[i], xs))
+            outs.append(o)
+        new = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+    else:
+        x, new = jax.lax.scan(body, x, xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype))[:, 0]
+    if cfg.final_softcap > 0:
+        lf = logits.astype(jnp.float32)
+        logits = (jnp.tanh(lf / cfg.final_softcap) * cfg.final_softcap).astype(
+            logits.dtype
+        )
+    new_cache = dict(cache)
+    if cfg.has_attention:
+        # Single append OUTSIDE the scan, as an elementwise select on the
+        # donated buffer (a vmapped dynamic_update_slice over the batch
+        # lowers to transposes that copy the multi-TB cache; a where() is
+        # in-place-aliasable).  c: [L,B,T,KVH,D], n: [L,B,1,KVH,D].
+        t = cache["k"].shape[2]
+        at_pos = (jnp.arange(t, dtype=jnp.int32)[None] == pos[:, None])
+
+        def append(c, n):
+            return jnp.where(at_pos[None, :, :, None, None], n, c)
+
+        new_cache["k"] = append(cache["k"], new["k_new"])
+        new_cache["v"] = append(cache["v"], new["v_new"])
+    if cfg.has_ssm:
+        new_cache["ssm"], new_cache["conv"] = new["cssm"], new["cconv"]
+    return logits, new_cache

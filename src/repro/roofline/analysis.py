@@ -1,0 +1,167 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs        / (chips × peak_FLOPs)
+    memory     = HLO_bytes        / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Sources and the scan-trip-count problem: ``compiled.cost_analysis()`` counts
+a ``lax.scan`` body ONCE regardless of trip count (verified empirically).
+The dry-run therefore lowers each step three times:
+  * full-L **scanned** — the production artifact: memory_analysis + the
+    proof that it compiles on the production mesh;
+  * **unrolled** with p and 2p layers (p = layer-pattern period, 2 for
+    gemma2's local/global alternation, 1 otherwise) — no while loops, so
+    cost_analysis and the HLO collective scrape are exact; per-period costs
+    extrapolate linearly:  total(L) = c(p) + (L/p - 1) · (c(2p) - c(p)).
+
+Collective bytes are scraped from the *post-SPMD* HLO text (per-device
+shapes): we sum the result-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute and multiply by the device
+count to get global bytes, matching the formula's chips-normalized form.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# --- hardware constants (TPU v5e) ---
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (per chip, one direction)
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str) -> dict:
+    """Sum result bytes of collective ops in a (post-SPMD) HLO module.
+
+    Returns {op_kind: bytes} per device.  Must be called on HLO without
+    while loops (the dry-run's unrolled lowerings) for exact totals.
+    """
+    out: dict = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # global, extrapolated to full L
+    hlo_bytes: float             # global HBM traffic
+    coll_bytes: float            # global collective bytes
+    coll_breakdown: dict
+    model_flops: float           # analytic 6·N·D (active params for MoE)
+    per_device_peak_memory: float  # from memory_analysis (scanned compile)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPs/s achieved at the roofline step time vs peak — the
+        MFU the compiled program could reach if perfectly overlapped."""
+        if self.step_time == 0:
+            return 0.0
+        return self.model_flops / (self.step_time * self.chips * PEAK_FLOPS)
+
+    def to_json(self) -> dict:
+        return {
+            **{f.name: getattr(self, f.name) for f in dataclasses.fields(self)},
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "step_time": self.step_time,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def extrapolate(c_p: float, c_2p: float, num_periods: int) -> float:
+    """total(L) = c(p) + (L/p - 1) · (c(2p) - c(p));  num_periods = L/p."""
+    per_period = c_2p - c_p
+    return c_p + (num_periods - 1) * per_period
+
+
+def extrapolate_dict(d_p: dict, d_2p: dict, num_periods: int) -> dict:
+    keys = set(d_p) | set(d_2p)
+    return {
+        k: extrapolate(d_p.get(k, 0), d_2p.get(k, 0), num_periods) for k in keys
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for one step of this cell.
+
+    train: 6·N·D (fwd+bwd, D = tokens/step).   prefill: 2·N·D.
+    decode: 2·N·B (one token per sequence) — attention-over-cache flops are
+    excluded by convention (they are reported via HLO flops instead).
+    """
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,323 @@
+"""Continuous-batching serving engine with a K-way set-associative prefix
+cache — the paper's technique as the page-residency manager of a paged KV
+cache.
+
+Design (DESIGN.md §2): the page pool is split into
+  * a **shared region** of exactly ``num_sets × ways`` pages, owned 1:1 by
+    the K-way cache slots: cache value == page id.  A full prompt block
+    (page_size tokens) keyed by its *prefix-chain hash* lives at most once;
+    eviction policy (LRU/LFU/Hyperbolic + optional TinyLFU admission)
+    decides residency, and evicting a key automatically frees its page —
+    the paper's "dense, static memory, no pointers" argument applied to KV
+    paging;
+  * a **private region** with a free list for decode-time pages (partial
+    blocks are not content-addressable until full).
+
+The engine is single-host (batched requests on one device — CPU here, one
+TPU chip in production; the multi-chip serve path is the dry-run's
+``decode_*`` cells).  Host-side bookkeeping is numpy; all tensor work is
+jitted (serve/paged_model.py; attention via the Pallas paged kernel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import admission, kway
+from repro.core.kway import KWayConfig
+from repro.core.policies import Policy
+from repro.serve import paged_model as pm
+
+
+def prefix_block_hashes(tokens: np.ndarray, page: int) -> np.ndarray:
+    """Rolling prefix-chain hash per full block (content addressing).
+
+    block_hash[i] covers tokens[0 : (i+1)*page] — a block only matches when
+    its entire prefix matches, so a page hit guarantees identical KV.
+    """
+    n = len(tokens) // page
+    out = np.empty(n, np.uint32)
+    h = np.uint32(2166136261)
+    for i in range(n):
+        for t in tokens[i * page : (i + 1) * page]:
+            h = np.uint32((int(h) ^ int(t)) * 16777619 & 0xFFFFFFFF)
+        out[i] = h if h not in (0xFFFFFFFF,) else np.uint32(1)
+    return out
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    slot: int = -1                    # batch slot when running
+    pos: int = 0                      # tokens materialized so far
+    pages: list = dataclasses.field(default_factory=list)   # page ids in order
+    private: list = dataclasses.field(default_factory=list)  # owned free-pool pages
+    done: bool = False
+    prefix_hits: int = 0
+    prefix_lookups: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    page: int = 16
+    num_sets: int = 64                # shared region = num_sets × ways pages
+    ways: int = 8
+    policy: Policy = Policy.LRU
+    tinylfu: bool = False
+    max_batch: int = 8
+    max_seq: int = 512
+    private_pages: int = 256
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        assert cfg.has_attention and cfg.enc_layers == 0, (
+            "paged engine serves decoder-only attention archs; attention-free"
+            " archs bypass it (DESIGN.md §4)"
+        )
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.kcfg = KWayConfig(
+            num_sets=ecfg.num_sets, ways=ecfg.ways, policy=ecfg.policy
+        )
+        self.kstate = kway.make_cache(self.kcfg)
+        self.sketch_cfg = (
+            admission.for_capacity(self.kcfg.capacity) if ecfg.tinylfu else None
+        )
+        self.sketch = (
+            admission.make_sketch(self.sketch_cfg) if ecfg.tinylfu else None
+        )
+        shared = self.kcfg.capacity
+        total = shared + ecfg.private_pages
+        shape = (cfg.num_layers, cfg.num_kv_heads, total, ecfg.page, cfg.hd)
+        self.pool_k = jnp.zeros(shape, jnp.bfloat16)
+        self.pool_v = jnp.zeros(shape, jnp.bfloat16)
+        self.free = list(range(shared, total))
+        self.pps = ecfg.max_seq // ecfg.page
+        self.slots: list[Optional[Request]] = [None] * ecfg.max_batch
+        self.waiting: list[Request] = []
+        self.finished: dict[int, Request] = {}
+        self._next_rid = 0
+        self.stats = {"prefix_hits": 0, "prefix_lookups": 0, "prefills": 0,
+                      "decode_steps": 0, "evictions": 0}
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt, max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    def step(self, greedy: bool = True):
+        """One engine iteration: admit + prefill waiting, decode running."""
+        self._admit()
+        self._decode(greedy)
+
+    def run(self, greedy: bool = True, max_steps: int = 10_000):
+        steps = 0
+        while (self.waiting or any(self.slots)) and steps < max_steps:
+            self.step(greedy)
+            steps += 1
+        return self.finished
+
+    # ------------------------------------------------------------- internals
+    def _admit(self):
+        for i in range(self.ecfg.max_batch):
+            if self.slots[i] is None and self.waiting:
+                req = self.waiting.pop(0)
+                if self._prefill(req, i):
+                    self.slots[i] = req
+                else:
+                    self.waiting.insert(0, req)  # no free pages: back off
+                    break
+
+    def _probe_prefix(self, hashes: np.ndarray):
+        """K-way lookup of the prompt's block chain; stop at first miss
+        (later blocks can't be valid without their prefix)."""
+        if len(hashes) == 0:
+            return 0, []
+        keys = jnp.asarray(hashes, jnp.uint32)
+        self.kstate, hit, vals = kway.get(self.kcfg, self.kstate, keys)
+        hit = np.asarray(hit)
+        vals = np.asarray(vals)
+        n_hit = 0
+        pages = []
+        for h, v in zip(hit, vals):
+            if not h:
+                break
+            n_hit += 1
+            pages.append(int(v))
+        return n_hit, pages
+
+    def _insert_blocks(self, hashes: np.ndarray):
+        """Admit missed blocks; returns their assigned page ids (== slot
+        index in the shared region) or -1 when not admitted."""
+        if len(hashes) == 0:
+            return []
+        keys = jnp.asarray(hashes, jnp.uint32)
+        admit_mask = None
+        if self.sketch is not None:
+            self.sketch = admission.record(self.sketch_cfg, self.sketch, keys)
+            vk, vv = kway.peek_victims(self.kcfg, self.kstate, keys)
+            admit_mask = admission.admit(self.sketch_cfg, self.sketch, keys, vk, vv)
+        # value payload: the slot index the key lands in == page id.  We
+        # don't know it before the put, so we put with placeholder and read
+        # back the slots via a get.
+        self.kstate, ek, ev = kway.put(
+            self.kcfg, self.kstate, keys,
+            jnp.zeros(len(hashes), jnp.int32), admit=admit_mask,
+        )
+        self.stats["evictions"] += int(np.asarray(ev).sum())
+        # locate each key's (set, way) -> page id; write it as the value
+        qkeys, sets, _, present, way = kway._probe(self.kcfg, self.kstate, keys)
+        slots = np.where(
+            np.asarray(present),
+            np.asarray(sets) * self.kcfg.ways + np.asarray(way),
+            -1,
+        )
+        if np.any(np.asarray(present)):
+            vals = self.kstate.vals.at[sets, way].set(
+                jnp.where(present, jnp.asarray(slots, jnp.int32),
+                          self.kstate.vals[sets, way])
+            )
+            self.kstate = dataclasses.replace(self.kstate, vals=vals)
+        return [int(s) for s in slots]
+
+    def _prefill(self, req: Request, slot: int) -> bool:
+        page = self.ecfg.page
+        prompt = req.prompt
+        hashes = prefix_block_hashes(prompt, page)
+        n_hit, hit_pages = self._probe_prefix(hashes)
+        req.prefix_lookups = len(hashes)
+        req.prefix_hits = n_hit
+        self.stats["prefix_lookups"] += len(hashes)
+        self.stats["prefix_hits"] += n_hit
+
+        # compute KV for everything past the shared hit (simplicity: one
+        # prefill over the full prompt; reuse would skip the hit tokens —
+        # recorded as a hillclimb TODO since hits still save *decode* pages)
+        miss_hashes = hashes[n_hit:]
+        new_slots = self._insert_blocks(miss_hashes)
+
+        ntok = len(prompt)
+        n_full = ntok // page
+        tail = ntok - n_full * page
+        need_private = (1 if tail else 0) + sum(1 for s in new_slots if s < 0)
+        if len(self.free) < need_private + 2:
+            return False
+
+        logits, ks, vs = pm.prefill_with_kv(
+            self.cfg, self.params, jnp.asarray(prompt[None])
+        )
+        self.stats["prefills"] += 1
+
+        # page assignment for the full blocks
+        pages = list(hit_pages)
+        blk_slots = []
+        for s in new_slots:
+            if s < 0:              # not admitted by TinyLFU: private page
+                s = self.free.pop()
+                req.private.append(s)
+            pages.append(s)
+            blk_slots.append(s)
+        if blk_slots:
+            slot_arr = jnp.asarray(
+                np.array(blk_slots, np.int32)[None], jnp.int32
+            )
+            # write only the missed blocks' KV (slice from n_hit)
+            kseg = ks[:, :, n_hit * page : n_full * page]
+            vseg = vs[:, :, n_hit * page : n_full * page]
+            self.pool_k, self.pool_v = pm.write_pages(
+                self.cfg, (kseg, vseg), slot_arr, self.pool_k, self.pool_v,
+                jnp.ones((1, len(blk_slots)), bool),
+            )
+        # tail tokens -> one private page
+        if tail:
+            p = self.free.pop()
+            req.private.append(p)
+            pages.append(p)
+            kt = jnp.zeros(
+                (self.cfg.num_layers, 1, page, self.cfg.num_kv_heads, self.cfg.hd),
+                jnp.bfloat16,
+            ).at[:, :, :tail].set(ks[:, :, n_full * page :])
+            vt = jnp.zeros_like(kt).at[:, :, :tail].set(vs[:, :, n_full * page :])
+            self.pool_k, self.pool_v = pm.write_pages(
+                self.cfg, (kt, vt),
+                jnp.asarray([[p]], jnp.int32), self.pool_k, self.pool_v,
+                jnp.ones((1, 1), bool),
+            )
+        req.pages = pages
+        req.pos = ntok
+        req.slot = slot
+        tok = int(jnp.argmax(logits[0]))
+        req.generated.append(tok)
+        return True
+
+    def _page_table(self):
+        b = self.ecfg.max_batch
+        pt = np.zeros((b, self.pps), np.int32)
+        pos = np.zeros(b, np.int32)
+        tok = np.zeros(b, np.int32)
+        active = np.zeros(b, bool)
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            pt[i, : len(req.pages)] = req.pages
+            pos[i] = req.pos
+            tok[i] = req.generated[-1]
+            active[i] = True
+        return pt, pos, tok, active
+
+    def _decode(self, greedy: bool):
+        pt, pos, tok, active = self._page_table()
+        if not active.any():
+            return
+        # ensure every active request has a page for the incoming token
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            if req.pos % self.ecfg.page == 0 and req.pos // self.ecfg.page >= len(req.pages):
+                if not self.free:
+                    req.done = True  # out of pages: finish early
+                    continue
+                p = self.free.pop()
+                req.private.append(p)
+                req.pages.append(p)
+                pt[i, len(req.pages) - 1] = p
+        logits, self.pool_k, self.pool_v = pm.decode_paged(
+            self.cfg, self.params,
+            jnp.asarray(tok), jnp.asarray(pos),
+            self.pool_k, self.pool_v,
+            jnp.asarray(pt), jnp.asarray(active),
+        )
+        self.stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                if req is not None and req.done:
+                    self._retire(i)
+                continue
+            req.pos += 1
+            req.generated.append(int(nxt[i]))
+            if len(req.generated) >= req.max_new + 1 or req.pos >= self.ecfg.max_seq - 1:
+                req.done = True
+                self._retire(i)
+
+    def _retire(self, slot: int):
+        req = self.slots[slot]
+        self.free.extend(req.private)
+        req.private = []
+        self.finished[req.rid] = req
+        self.slots[slot] = None
+
+    def hit_ratio(self) -> float:
+        if self.stats["prefix_lookups"] == 0:
+            return 0.0
+        return self.stats["prefix_hits"] / self.stats["prefix_lookups"]

@@ -1,0 +1,152 @@
+"""Model entry points for the paged serving engine.
+
+Two jitted functions per config:
+  * ``prefill_with_kv``  — forward over prompt tokens returning last-token
+    logits AND the per-layer K/V [L, B, S, KVH, D] (to be scattered into
+    the page pool at the slots the K-way cache assigned);
+  * ``decode_paged``     — one decode token per sequence, attending through
+    the page table with the Pallas paged_attention kernel (ops.attend_paged)
+    and writing the new token's K/V into the current private page slot.
+
+The page pool layout is [L, KVH, P, page, D] (head-major per layer, matching
+kernels/paged_attention.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models import lm
+
+
+@partial(jax.jit, static_argnums=0)
+def prefill_with_kv(cfg: ModelConfig, params, tokens):
+    """Run the prompt; return (logits_last [B, Vp], k, v [L,B,S,KVH,D])."""
+    x = params["embed"][tokens] * jnp.asarray(cfg.scale_emb, jnp.bfloat16)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    windows = lm.layer_windows(cfg)
+
+    def body(carry, xs):
+        p, w = xs
+        h = L.rms_norm(carry, p["ln1"], cfg.norm_eps)
+        k = (h @ p["attn"]["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.hd)
+        v = (h @ p["attn"]["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.hd)
+        k = L.rope(k, positions, cfg.rope_theta)
+        x2 = lm._block_seq(cfg, p, carry, positions, w, None, None)
+        return x2, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, -1] @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits, ks, vs
+
+
+@partial(jax.jit, static_argnums=0, donate_argnums=(3, 4))
+def write_pages(cfg: ModelConfig, kv, slots, pool_k, pool_v, valid):
+    """Scatter prefill KV into pool pages.
+
+    kv: (k, v) [L, B, S, KVH, D];  slots: [B, nblocks] page ids (-1 = skip);
+    pool: [L, KVH, P, page, D].  Writes whole pages (S must be a multiple of
+    the page size).
+    """
+    k, v = kv
+    lnum, b, s, kvh, d = k.shape
+    page = pool_k.shape[3]
+    nb = s // page
+    kp = k.reshape(lnum, b, nb, page, kvh, d)
+    vp = v.reshape(lnum, b, nb, page, kvh, d)
+    kp = jnp.moveaxis(kp.reshape(lnum, b * nb, page, kvh, d), 3, 1)
+    vp = jnp.moveaxis(vp.reshape(lnum, b * nb, page, kvh, d), 3, 1)
+    flat_slots = slots.reshape(-1)
+    ok = (flat_slots >= 0) & valid.reshape(-1)
+    safe = jnp.where(ok, flat_slots, 0)
+    kp = jnp.where(ok[None, None, :, None, None], kp, pool_k[:, :, safe])
+    vp = jnp.where(ok[None, None, :, None, None], vp, pool_v[:, :, safe])
+    pool_k = pool_k.at[:, :, safe].set(kp)
+    pool_v = pool_v.at[:, :, safe].set(vp)
+    return pool_k, pool_v
+
+
+@partial(jax.jit, static_argnums=0, donate_argnums=(4, 5))
+def decode_paged(
+    cfg: ModelConfig,
+    params,
+    token,        # [B] int32
+    pos,          # [B] int32 current position (== tokens so far)
+    pool_k,       # [L, KVH, P, page, D]
+    pool_v,
+    page_table,   # [B, PPS] int32
+    active,       # [B] bool
+):
+    """One paged decode step.  Returns (logits [B, Vp], pool_k, pool_v)."""
+    x = params["embed"][token][:, None, :] * jnp.asarray(
+        cfg.scale_emb, jnp.bfloat16
+    )
+    b = token.shape[0]
+    page = pool_k.shape[3]
+    windows = lm.layer_windows(cfg)
+    seq_with_new = jnp.where(active, pos + 1, 0)
+
+    # Inactive slots (active=False) must not write: their pos=0 would land
+    # in page_table[.,0] slot 0 and corrupt a live request's first token.
+    # Route them out of bounds — .set(mode="drop") discards OOB writes.
+    total_pages = pool_k.shape[2]
+    cur_page = jnp.where(
+        active, page_table[jnp.arange(b), pos // page], total_pages
+    )                                                    # [B]
+    cur_off = pos % page
+
+    def body(carry, xs):
+        x = carry
+        p, w, pk, pv = xs["p"], xs["w"], xs["pk"], xs["pv"]
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        k_new, v_new = L.project_kv_step(
+            p["attn"], h, pos, num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta,
+        )
+        # write the new token into its private page slot
+        pk = pk.at[:, cur_page, cur_off].set(
+            jnp.moveaxis(k_new[:, 0], 1, 0), mode="drop"
+        )
+        pv = pv.at[:, cur_page, cur_off].set(
+            jnp.moveaxis(v_new[:, 0], 1, 0), mode="drop"
+        )
+        q = (h @ p["attn"]["wq"]).reshape(b, 1, cfg.num_heads, cfg.hd)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)[:, 0]
+        o = kops.attend_paged(
+            q, pk, pv, xs["pt"], seq_with_new,
+            softcap=cfg.attn_softcap,
+        )
+        o = o.reshape(b, 1, cfg.num_heads * cfg.hd)
+        x = x + o @ p["attn"]["wo"]
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            x = x + L.moe(p["moe"], h2, num_experts=cfg.num_experts,
+                          top_k=cfg.top_k, ff_shards=cfg.moe_ff_shards)
+        else:
+            x = x + L.mlp(p["mlp"], h2)
+        return x, {"pk": pk, "pv": pv}
+
+    xs = {
+        "p": params["blocks"],
+        "w": windows,
+        "pk": pool_k,
+        "pv": pool_v,
+        "pt": jnp.broadcast_to(page_table, (cfg.num_layers,) + page_table.shape),
+    }
+    x, pools = jax.lax.scan(body, x, xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits, pools["pk"], pools["pv"]

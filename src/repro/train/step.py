@@ -1,0 +1,102 @@
+"""Training step: loss, grads, optimizer update; microbatch accumulation.
+
+``make_train_step`` closes over static configs and returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with in/out shardings — the object the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1           # gradient accumulation steps
+    z_loss: float = 0.0             # optional logit regularizer
+    moe_aux_weight: float = 0.01
+
+
+def cross_entropy(
+    cfg: ModelConfig, logits: jnp.ndarray, labels: jnp.ndarray, z_loss: float = 0.0
+):
+    """Mean CE over tokens; padded-vocab lanes masked out."""
+    vp = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if vp != cfg.vocab_size:
+        lane = jnp.arange(vp)
+        lf = jnp.where(lane < cfg.vocab_size, lf, -1e30)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - gold)
+    if z_loss > 0:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        logits = lm.forward(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+        )
+        labels = batch["labels"][:, : logits.shape[1]]
+        return cross_entropy(cfg, logits, labels, tcfg.z_loss)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(cfg, tcfg)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            # gradient accumulation: scan over microbatch slices so peak
+            # activation memory is 1/microbatches of the full batch
+            mb = tcfg.microbatches
+
+            def slice_mb(x, i):
+                per = x.shape[0] // mb
+                return jax.lax.dynamic_slice_in_dim(x, i * per, per, 0)
+
+            def acc(carry, i):
+                loss_acc, grad_acc = carry
+                mbatch = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                return (loss_acc + l, jax.tree.map(jnp.add, grad_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zeros),
+                jnp.arange(mb),
+            )
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        params, opt_state, om = adamw.update(tcfg.optimizer, grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    loss_fn = make_loss_fn(cfg, tcfg or TrainConfig())
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step

@@ -1,0 +1,116 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policies import Policy
+from repro.kernels import ref
+from repro.kernels.kway_probe import kway_probe
+from repro.kernels.paged_attention import paged_attention
+
+POLICIES = [Policy.LRU, Policy.LFU, Policy.FIFO, Policy.RANDOM, Policy.HYPERBOLIC]
+
+
+def _mk_cache(rng, s, ways, kp=128, fill=0.7):
+    keys = np.full((s, kp), -1, np.int32)
+    occ = rng.random((s, ways)) < fill
+    vals = rng.integers(0, 5000, (s, ways)).astype(np.int32)
+    keys[:, :ways] = np.where(occ, vals, -1)
+    ma = rng.integers(0, 100, (s, kp)).astype(np.int32)
+    mb = rng.integers(0, 50, (s, kp)).astype(np.int32)
+    return keys, ma, mb
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("s,ways,b", [(16, 4, 16), (64, 8, 32), (128, 16, 64)])
+def test_kway_probe_sweep(policy, s, ways, b, rng):
+    keys, ma, mb = _mk_cache(rng, s, ways)
+    sets = rng.integers(0, s, b).astype(np.int32)
+    qk = np.where(
+        rng.random(b) < 0.5,
+        keys[sets, rng.integers(0, ways, b)],
+        rng.integers(0, 5000, b),
+    ).astype(np.int32)
+    times = (np.arange(b) + 7).astype(np.int32)
+    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    out_k = kway_probe(*args, policy=int(policy), ways=ways, qt=8)
+    out_r = ref.kway_probe_ref(*args, policy=int(policy), ways=ways)
+    for name, a, b_ in zip(["hit", "way", "vway", "vkey"], out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_), err_msg=name)
+
+
+def test_kway_probe_empty_cache(rng):
+    keys = np.full((8, 128), -1, np.int32)
+    zeros = np.zeros((8, 128), np.int32)
+    sets = np.zeros(8, np.int32)
+    qk = np.arange(8, dtype=np.int32)
+    t = np.arange(8, dtype=np.int32)
+    hit, way, vway, vkey = kway_probe(
+        *[jnp.asarray(a) for a in (keys, zeros, zeros, sets, qk, t)],
+        policy=int(Policy.LRU), ways=8, qt=8)
+    assert not np.asarray(hit).any()
+    assert (np.asarray(vway) == 0).all()  # first empty way
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kvh,d,page,pages,pps",
+    [(2, 4, 2, 32, 8, 16, 4), (4, 8, 8, 64, 16, 32, 6), (1, 8, 1, 128, 16, 8, 2)],
+)
+def test_paged_attention_sweep(b, h, kvh, d, page, pages, pps, dtype, rng):
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    kp = rng.standard_normal((kvh, pages, page, d)).astype(np.float32)
+    vp = rng.standard_normal((kvh, pages, page, d)).astype(np.float32)
+    pt = rng.integers(0, pages, (b, pps)).astype(np.int32)
+    sl = rng.integers(0, pps * page + 1, b).astype(np.int32)
+    sl[0] = 0  # empty sequence edge case
+    args = (jnp.asarray(q, dtype), jnp.asarray(kp, dtype), jnp.asarray(vp, dtype),
+            jnp.asarray(pt), jnp.asarray(sl))
+    out_k = paged_attention(*args)
+    out_r = ref.paged_attention_ref(*args)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_paged_attention_softcap(rng):
+    b, h, kvh, d, page, pages, pps = 2, 4, 2, 32, 8, 16, 4
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((kvh, pages, page, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((kvh, pages, page, d)), jnp.float32)
+    pt = jnp.asarray(rng.integers(0, pages, (b, pps)), jnp.int32)
+    sl = jnp.asarray([13, 32], jnp.int32)
+    for cap in (0.0, 30.0, 5.0):
+        o1 = paged_attention(q, kp, vp, pt, sl, softcap=cap)
+        o2 = ref.paged_attention_ref(q, kp, vp, pt, sl, softcap=cap)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=2e-5)
+
+
+def test_paged_vs_contiguous_attention(rng):
+    """Paged decode == contiguous decode when pages are laid out in order."""
+    from repro.models import layers as L
+    b, h, kvh, d, page, pps = 2, 4, 2, 32, 8, 4
+    t = page * pps
+    pages = pps * b
+    k_cont = rng.standard_normal((b, t, kvh, d)).astype(np.float32)
+    v_cont = rng.standard_normal((b, t, kvh, d)).astype(np.float32)
+    kp = np.moveaxis(k_cont.reshape(b * pps, page, kvh, d), 2, 0).copy()
+    vp = np.moveaxis(v_cont.reshape(b * pps, page, kvh, d), 2, 0).copy()
+    pt = np.arange(pages).reshape(b, pps).astype(np.int32)
+    sl = np.array([t, t - 5], np.int32)
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+
+    out_p = paged_attention(jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+                            jnp.asarray(pt), jnp.asarray(sl))
+    # contiguous reference: plain softmax attention with length mask
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    logits = np.einsum("bkgd,btkd->bkgt", qg, k_cont) * (d ** -0.5)
+    mask = np.arange(t)[None] < sl[:, None]
+    logits = np.where(mask[:, None, None], logits, -1e30)
+    w = np.exp(logits - logits.max(-1, keepdims=True))
+    w /= w.sum(-1, keepdims=True)
+    out_c = np.einsum("bkgt,btkd->bkgd", w, v_cont).reshape(b, h, d)
+    np.testing.assert_allclose(np.asarray(out_p), out_c, atol=2e-5, rtol=2e-5)

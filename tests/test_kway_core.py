@@ -1,0 +1,156 @@
+"""K-way cache unit + oracle-agreement + property tests (the paper's core)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kway
+from repro.core.hashing import EMPTY_KEY
+from repro.core.kway import KWayConfig, fully_associative
+from repro.core.policies import Policy
+from repro.core.refimpl import RefKWay
+
+POLICIES = [Policy.LRU, Policy.LFU, Policy.FIFO, Policy.RANDOM, Policy.HYPERBOLIC]
+
+
+def _run_trace(cfg, trace):
+    st_ = kway.make_cache(cfg)
+    hits = []
+    for t in trace:
+        st_, h, v, ek, ev = kway.access(
+            cfg, st_, jnp.array([t], jnp.uint32), jnp.array([int(t)], jnp.int32)
+        )
+        hits.append(bool(h[0]))
+    return st_, hits
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_exact_oracle_agreement(policy, rng):
+    """JAX cache at B=1 == serial transcription of the paper's algorithms."""
+    trace = rng.integers(0, 150, size=600, dtype=np.uint32)
+    cfg = KWayConfig(num_sets=8, ways=4, policy=policy)
+    ref = RefKWay(8, 4, policy)
+    st_ = kway.make_cache(cfg)
+    for t in trace:
+        st_, h, _, _, _ = kway.access(
+            cfg, st_, jnp.array([t], jnp.uint32), jnp.array([int(t)], jnp.int32)
+        )
+        rh = ref.access(int(t), int(t))
+        assert bool(h[0]) == rh
+    jax_keys = {int(x) for x in np.asarray(st_.keys).ravel() if x != 0xFFFFFFFF}
+    assert jax_keys == ref.contents()
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("layout", ["soa", "aos"])
+def test_capacity_never_exceeded(policy, layout, rng):
+    cfg = KWayConfig(num_sets=4, ways=4, policy=policy, layout=layout)
+    st_, _ = _run_trace(cfg, rng.integers(0, 1000, 300, dtype=np.uint32))
+    assert int(st_.occupancy()) <= cfg.capacity
+    # no key stored twice
+    keys = [int(x) for x in np.asarray(st_.keys).ravel() if x != 0xFFFFFFFF]
+    assert len(keys) == len(set(keys))
+
+
+def test_hit_implies_present(rng):
+    cfg = KWayConfig(num_sets=8, ways=4, policy=Policy.LRU)
+    st_ = kway.make_cache(cfg)
+    seen = set()
+    for t in rng.integers(0, 100, 400, dtype=np.uint32):
+        st_, h, v, _, _ = kway.access(
+            cfg, st_, jnp.array([t], jnp.uint32), jnp.array([int(t)], jnp.int32)
+        )
+        if bool(h[0]):
+            assert int(t) in seen
+            assert int(v[0]) == int(t)  # value integrity
+        seen.add(int(t))
+
+
+def test_fully_associative_is_one_set():
+    cfg = fully_associative(16, Policy.LRU)
+    assert cfg.num_sets == 1 and cfg.ways == 16
+    st_, hits = _run_trace(cfg, np.arange(16, dtype=np.uint32))
+    assert int(st_.occupancy()) == 16
+    # LRU eviction order: access 16 (evicts 0), then 0 must miss
+    st_, h, _, _, _ = kway.access(cfg, st_, jnp.array([16], jnp.uint32),
+                                  jnp.array([16], jnp.int32))
+    assert not bool(h[0])
+    st_, h, _, _, _ = kway.access(cfg, st_, jnp.array([0], jnp.uint32),
+                                  jnp.array([0], jnp.int32))
+    assert not bool(h[0])  # 0 was the LRU victim
+
+
+def test_batched_matches_serial_when_sets_distinct(rng):
+    """The paper's embarrassing parallelism: requests to different sets
+    commute — a batched step equals any serialization."""
+    cfg = KWayConfig(num_sets=64, ways=4, policy=Policy.LFU)
+    # distinct sets: pick keys with distinct set indices
+    from repro.core import hashing
+    keys, seen = [], set()
+    k = 0
+    while len(keys) < 16:
+        s = int(hashing.set_index(jnp.array([k], jnp.uint32), 64)[0])
+        if s not in seen:
+            seen.add(s)
+            keys.append(k)
+        k += 1
+    keys = np.array(keys, np.uint32)
+
+    st_b = kway.make_cache(cfg)
+    st_b, hb, _, _, _ = kway.access(cfg, st_b, jnp.asarray(keys),
+                                    jnp.asarray(keys.astype(np.int32)))
+    st_s = kway.make_cache(cfg)
+    for t in keys:
+        st_s, _, _, _, _ = kway.access(
+            cfg, st_s, jnp.array([t], jnp.uint32), jnp.array([int(t)], jnp.int32)
+        )
+    jb = {int(x) for x in np.asarray(st_b.keys).ravel() if x != 0xFFFFFFFF}
+    js = {int(x) for x in np.asarray(st_s.keys).ravel() if x != 0xFFFFFFFF}
+    assert jb == js
+
+
+def test_batched_conflict_bounded_and_deduped(rng):
+    """Same-set collisions: ≤ k admissions per set per batch; duplicate keys
+    admitted once (documented CAS-race semantics)."""
+    cfg = KWayConfig(num_sets=2, ways=4, policy=Policy.LRU)
+    st_ = kway.make_cache(cfg)
+    keys = np.array([1, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11], np.uint32)
+    st_, _, _, _, _ = kway.access(cfg, st_, jnp.asarray(keys),
+                                  jnp.asarray(keys.astype(np.int32)))
+    assert int(st_.occupancy()) <= cfg.capacity
+    stored = [int(x) for x in np.asarray(st_.keys).ravel() if x != 0xFFFFFFFF]
+    assert len(stored) == len(set(stored))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.data(),
+    policy=st.sampled_from([Policy.LRU, Policy.LFU, Policy.FIFO]),
+    num_sets=st.sampled_from([2, 8]),
+    ways=st.integers(1, 6),
+)
+def test_property_oracle_agreement(data, policy, num_sets, ways):
+    """Hypothesis: arbitrary short traces agree with the serial oracle."""
+    trace = data.draw(st.lists(st.integers(0, 60), min_size=1, max_size=80))
+    cfg = KWayConfig(num_sets=num_sets, ways=ways, policy=policy)
+    ref = RefKWay(num_sets, ways, policy)
+    st_ = kway.make_cache(cfg)
+    for t in trace:
+        st_, h, _, _, _ = kway.access(
+            cfg, st_, jnp.array([t], jnp.uint32), jnp.array([t], jnp.int32)
+        )
+        assert bool(h[0]) == ref.access(t, t)
+    jax_keys = {int(x) for x in np.asarray(st_.keys).ravel() if x != 0xFFFFFFFF}
+    assert jax_keys == ref.contents()
+
+
+def test_evicted_keys_reported(rng):
+    cfg = KWayConfig(num_sets=1, ways=2, policy=Policy.FIFO)
+    st_ = kway.make_cache(cfg)
+    for k in [1, 2, 3]:
+        st_, _, _, ek, ev = kway.access(
+            cfg, st_, jnp.array([k], jnp.uint32), jnp.array([k], jnp.int32)
+        )
+    assert bool(ev[0]) and int(ek[0]) == 1  # FIFO: 1 evicted by 3

@@ -1,0 +1,95 @@
+"""Roofline analysis unit tests: HLO parsing, extrapolation, term math."""
+import math
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro import configs
+from repro.roofline import analysis as roof
+
+
+def test_shape_bytes():
+    assert roof._shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert roof._shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert roof._shape_bytes("pred[10]") == 10
+    assert roof._shape_bytes("(f32[4], s32[8])") == 16 + 32
+    assert roof._shape_bytes("f32[]") == 4  # scalar
+
+
+def test_collective_scrape():
+    hlo = """
+  %ar = f32[16,4096]{1,0} all-reduce(%x), replica_groups=...
+  %ag.1 = bf16[8,128]{1,0} all-gather(%y), dimensions={0}
+  %notacoll = f32[2,2]{1,0} add(%a, %b)
+  %tup = (f32[4]{0}, f32[4]{0}) all-reduce(%p, %q), to_apply=%add
+  %cp = u32[64]{0} collective-permute(%z), source_target_pairs=...
+"""
+    out = roof.collective_bytes_per_device(hlo)
+    assert out["all-reduce"] == 16 * 4096 * 4 + 2 * 16
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["collective-permute"] == 64 * 4
+    assert "add" not in out
+
+
+def test_extrapolation_linear():
+    # c(p)=fixed+layer, c(2p)=fixed+2*layer -> total(L)=fixed+L*layer
+    fixed, layer, L = 100.0, 7.0, 24
+    total = roof.extrapolate(fixed + layer, fixed + 2 * layer, L)
+    assert math.isclose(total, fixed + L * layer)
+
+
+def test_cell_terms_and_bottleneck():
+    cell = roof.CellRoofline(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=256 * roof.PEAK_FLOPS,        # t_compute = 1 s
+        hlo_bytes=256 * roof.HBM_BW * 2,        # t_memory = 2 s
+        coll_bytes=256 * roof.LINK_BW * 0.5,    # t_collective = 0.5 s
+        coll_breakdown={}, model_flops=256 * roof.PEAK_FLOPS * 0.5,
+        per_device_peak_memory=0,
+    )
+    assert math.isclose(cell.t_compute, 1.0)
+    assert math.isclose(cell.t_memory, 2.0)
+    assert math.isclose(cell.t_collective, 0.5)
+    assert cell.bottleneck == "memory"
+    assert math.isclose(cell.step_time, 2.0)
+    assert math.isclose(cell.useful_flops_ratio, 0.5)
+    # frac = model/(step*chips*peak) = 0.5/2 = 0.25
+    assert math.isclose(cell.roofline_fraction, 0.25)
+    j = cell.to_json()
+    assert j["bottleneck"] == "memory" and "step_time" in j
+
+
+def test_model_flops_conventions():
+    cfg = configs.get("deepseek-7b").config
+    n = cfg.param_count()
+    tr = roof.model_flops(cfg, SHAPES_BY_NAME["train_4k"])
+    pf = roof.model_flops(cfg, SHAPES_BY_NAME["prefill_32k"])
+    dc = roof.model_flops(cfg, SHAPES_BY_NAME["decode_32k"])
+    assert math.isclose(tr, 6.0 * n * 4096 * 256)
+    assert math.isclose(pf, 2.0 * n * 32768 * 32)
+    assert math.isclose(dc, 2.0 * n * 128)
+    # MoE: active < total
+    mx = configs.get("mixtral-8x22b").config
+    assert mx.param_count(active_only=True) < mx.param_count()
+
+
+def test_report_renders():
+    from repro.roofline.report import render
+    fake = {
+        "a|train_4k|single": {
+            "status": "ok", "arch": "a", "shape": "train_4k",
+            "mesh": "16x16", "chips": 256,
+            "memory": {"argument_bytes": 1 << 30, "output_bytes": 0,
+                       "temp_bytes": 2 << 30, "generated_code_bytes": 0},
+            "compile_s": 1.0,
+            "roofline": {
+                "t_compute": 1.0, "t_memory": 2.0, "t_collective": 0.5,
+                "bottleneck": "memory", "model_flops": 1e15,
+                "useful_flops_ratio": 0.5, "roofline_fraction": 0.25,
+            },
+        },
+        "a|long_500k|single": {
+            "status": "skipped", "arch": "a", "shape": "long_500k",
+            "mesh": "single", "reason": "pure full-attention arch",
+        },
+    }
+    txt = render(fake)
+    assert "train_4k" in txt and "skip" in txt and "0.250" in txt
