@@ -36,10 +36,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default=None,
+                    choices=["jnp", "pallas", "ref"],
+                    help="restrict the throughput backend sweep to one "
+                         "CacheBackend (default: compare all three)")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count for the sharded-vs-single throughput "
+                         "row (power of two)")
     args = ap.parse_args()
+    if args.shards < 1 or args.shards & (args.shards - 1):
+        ap.error(f"--shards must be a power of two, got {args.shards}")
 
     from benchmarks import (hit_ratio, kernels_bench, serving, synthetic_mix,
                             theorem41, throughput)
+
+    backends = (args.backend,) if args.backend else ("jnp", "pallas", "ref")
+    shards = (1, args.shards) if args.shards > 1 else (1,)
 
     sections = {
         "hit_ratio": (lambda: hit_ratio.run(n=20_000, ks=(4, 8),
@@ -47,8 +59,9 @@ def main():
                                             policies=(hit_ratio.Policy.LRU,
                                                       hit_ratio.Policy.LFU)))
         if args.quick else hit_ratio.run,
-        "throughput": (lambda: throughput.run(batches=(64, 256)))
-        if args.quick else throughput.run,
+        "throughput": (lambda: throughput.run(
+            batches=(64, 256) if args.quick else (64, 256, 1024),
+            backends=backends, shards=shards)),
         "synthetic_mix": synthetic_mix.run,
         "theorem41": (lambda: theorem41.run(ks=(8, 64), trials=10))
         if args.quick else theorem41.run,

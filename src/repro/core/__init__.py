@@ -5,9 +5,17 @@ Public API:
     fully_associative  — the paper's baseline as the S=1 corner case
     Policy             — LRU / LFU / FIFO / RANDOM / HYPERBOLIC
     TinyLFU admission  — admission.{TinyLFUConfig, make_sketch, record, admit}
+    CacheBackend layer — backend.{make_backend, available_backends}
+                         ("jnp" | "pallas" | "ref", one contract — DESIGN.md §3)
+    Set sharding       — sharded.{ShardedConfig, ShardedCache} (DESIGN.md §5)
     simulate.replay    — jitted hit-ratio trace replay
     traces.generate    — synthetic workload families
 """
+from repro.core.backend import (  # noqa: F401
+    CacheBackend,
+    available_backends,
+    make_backend,
+)
 from repro.core.kway import (  # noqa: F401
     KWayConfig,
     KWayState,

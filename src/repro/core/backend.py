@@ -1,0 +1,288 @@
+"""Unified CacheBackend layer — one API over the jnp / Pallas / oracle paths.
+
+The paper's limited-associativity design makes each set an independent unit
+of work, which is why the same cache runs on three execution substrates in
+this repo: vectorized XLA ops (core/kway.py), a Pallas TPU kernel
+(kernels/kway_probe.py), and a sequential Python oracle (core/refimpl.py).
+This module gives them one contract (DESIGN.md §3):
+
+    backend = make_backend("jnp" | "pallas" | "ref", cfg)
+    state = backend.init()
+    state, hit, vals = backend.get(state, keys)
+    state, ek, ev, slot_sets, slot_ways = backend.put(state, keys, vals)
+    state, hit, vals, ek, ev = backend.access(state, keys, vals)
+    vkeys, vvalid = backend.peek_victims(state, keys)
+
+All backends are functional (state in, state out) over the same ``KWayState``
+pytree, so states are interchangeable between backends mid-stream — the
+differential test suite replays one trace through all three and asserts
+bit-identical hits, evictions and final state.
+
+``put`` returns the landing ``(set, way)`` slot per request (-1 when the key
+did not land), which is what lets serve/engine.py store "payload == slot id"
+in a single call instead of probing again after the write.
+
+Semantics:
+  * ``jnp`` and ``pallas`` share the deterministic batched conflict
+    resolution of core/kway.apply_put and agree bit-for-bit at any batch
+    size (the kernel emits the same probe decisions the jnp path computes).
+  * ``ref`` processes lanes of a batch sequentially within each phase; it is
+    bit-identical to the others at batch size 1 and a valid serialization at
+    larger batches (the documented CAS-race outcomes may differ).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, kway
+from repro.core.hashing import EMPTY_KEY
+from repro.core.kway import KWayConfig, KWayState
+from repro.core.refimpl import RefKWay
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a CacheBackend implementation under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_backend(name: str, cfg: KWayConfig) -> "CacheBackend":
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown cache backend {name!r}; available: {available_backends()}"
+        )
+    return _REGISTRY[name](cfg)
+
+
+class CacheBackend:
+    """The backend contract.  Subclasses implement get/put/peek_victims;
+    ``access`` (get; on miss, put) is derived and shared."""
+
+    name = "?"
+    traceable = True   # safe under jit/vmap/shard_map (False: host Python)
+
+    def __init__(self, cfg: KWayConfig):
+        self.cfg = cfg
+
+    def init(self) -> KWayState:
+        return kway.make_cache(self.cfg)
+
+    # -- required ----------------------------------------------------------
+    def get(self, state, qkeys, enabled=None):
+        """-> (state', hit bool[B], vals int32[B])"""
+        raise NotImplementedError
+
+    def put(self, state, qkeys, qvals, admit=None, enabled=None, *,
+            slot_value: bool = False):
+        """-> (state', evicted_keys[B], evicted_valid[B], slot_sets[B],
+        slot_ways[B]); slot_* == -1 where the key did not land."""
+        raise NotImplementedError
+
+    def peek_victims(self, state, qkeys):
+        """-> (victim_keys uint32[B], victim_valid bool[B]), no mutation."""
+        raise NotImplementedError
+
+    # -- derived -----------------------------------------------------------
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+        """-> (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B])"""
+        state, hit, vals = self.get(state, qkeys, enabled=enabled)
+        en = (~hit) if enabled is None else (enabled & ~hit)
+        state, ek, ev, _, _ = self.put(
+            state, qkeys, qvals, admit=admit_on_miss, enabled=en
+        )
+        vals = jnp.where(hit, vals, qvals)
+        return state, hit, vals, ek, ev
+
+
+@register_backend("jnp")
+class JnpBackend(CacheBackend):
+    """Today's vectorized XLA path (core/kway.py), unchanged semantics."""
+
+    def get(self, state, qkeys, enabled=None):
+        return kway.get(self.cfg, state, qkeys, enabled=enabled)
+
+    def put(self, state, qkeys, qvals, admit=None, enabled=None, *,
+            slot_value: bool = False):
+        return kway.put(self.cfg, state, qkeys, qvals, admit=admit,
+                        enabled=enabled, slot_value=slot_value)
+
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+        return kway.access(self.cfg, state, qkeys, qvals,
+                           admit_on_miss=admit_on_miss, enabled=enabled)
+
+    def peek_victims(self, state, qkeys):
+        return kway.peek_victims(self.cfg, state, qkeys)
+
+
+@register_backend("pallas")
+class PallasBackend(CacheBackend):
+    """Pallas kernel probe (interpret mode off-TPU) + the shared scatter
+    apply.  Bit-identical to ``jnp`` at any batch size: the kernel emits the
+    same (hit, way, victim-order) decisions core/kway computes, and both
+    paths funnel through kway.apply_get / kway.apply_put."""
+
+    def __init__(self, cfg: KWayConfig):
+        from repro.kernels import kway_probe as _kp
+        if cfg.sample:
+            raise ValueError("pallas backend does not support sampled "
+                             "policies (cfg.sample > 0); use the jnp backend")
+        if cfg.ways > _kp.LANES:
+            raise ValueError(
+                f"pallas backend requires ways <= {_kp.LANES} (one VREG row "
+                f"per set); got {cfg.ways}")
+        super().__init__(cfg)
+
+    def get(self, state, qkeys, enabled=None):
+        from repro.kernels import ops
+        _, sets, hit, way, _, _ = ops.probe(
+            self.cfg, state, jnp.asarray(qkeys, jnp.uint32))
+        if enabled is not None:
+            hit = hit & enabled
+        return kway.apply_get(self.cfg, state, sets, hit, way)
+
+    def put(self, state, qkeys, qvals, admit=None, enabled=None, *,
+            slot_value: bool = False):
+        from repro.kernels import ops
+        qk, sets, present, way_present, order = ops.probe_orders(
+            self.cfg, state, jnp.asarray(qkeys, jnp.uint32)
+        )
+        return kway.apply_put(
+            self.cfg, state, qk, qvals, sets, present, way_present, order,
+            admit, enabled, slot_value=slot_value,
+        )
+
+    def peek_victims(self, state, qkeys):
+        from repro.kernels import ops
+        _, _, hit, _, _, vkey = ops.probe(self.cfg, state,
+                                          jnp.asarray(qkeys, jnp.uint32))
+        valid = (vkey != EMPTY_KEY) & (~hit)
+        return vkey, valid
+
+
+@register_backend("ref")
+class RefBackend(CacheBackend):
+    """Sequential Python oracle behind the same functional API.
+
+    Each call imports the KWayState into a RefKWay, replays the batch one
+    lane at a time (phase order matches the batched implementations: a
+    disabled lane still consumes a logical timestamp), and exports back.
+    Intended for differential testing, not throughput — and being host
+    Python, it cannot run under jit/vmap/shard_map (traceable=False).
+    """
+
+    traceable = False
+
+    def _import(self, state: KWayState) -> RefKWay:
+        cfg = self.cfg
+        ref = RefKWay(cfg.num_sets, cfg.ways, cfg.policy, cfg.seed)
+        keys = np.asarray(state.keys)
+        vals = np.asarray(state.vals)
+        ma = np.asarray(state.meta_a)
+        mb = np.asarray(state.meta_b)
+        empty = int(EMPTY_KEY)
+        for s in range(cfg.num_sets):
+            for w in range(cfg.ways):
+                if int(keys[s, w]) != empty:
+                    ref.sets[s][w] = {
+                        "key": int(keys[s, w]), "val": int(vals[s, w]),
+                        "a": int(ma[s, w]), "b": int(mb[s, w]),
+                    }
+        ref.clock = int(state.clock)
+        return ref
+
+    def _export(self, ref: RefKWay) -> KWayState:
+        cfg = self.cfg
+        keys = np.full((cfg.num_sets, cfg.ways), int(EMPTY_KEY), np.uint32)
+        vals = np.zeros((cfg.num_sets, cfg.ways), np.int32)
+        ma = np.zeros((cfg.num_sets, cfg.ways), np.int32)
+        mb = np.zeros((cfg.num_sets, cfg.ways), np.int32)
+        for s in range(cfg.num_sets):
+            for w, node in enumerate(ref.sets[s]):
+                if node is not None:
+                    keys[s, w] = node["key"]
+                    vals[s, w] = node["val"]
+                    ma[s, w] = node["a"]
+                    mb[s, w] = node["b"]
+        keys_j = jnp.asarray(keys)
+        fpr = jnp.where(keys_j == EMPTY_KEY, jnp.uint32(0),
+                        hashing.fingerprint(keys_j))
+        return KWayState(
+            keys=keys_j, fprint=fpr, vals=jnp.asarray(vals),
+            meta_a=jnp.asarray(ma), meta_b=jnp.asarray(mb),
+            clock=jnp.asarray(ref.clock, jnp.int32),
+        )
+
+    @staticmethod
+    def _lanes(qkeys, enabled):
+        ks = [int(k) for k in np.asarray(qkeys, np.uint32)]
+        # sanitize_keys: the EMPTY_KEY sentinel folds onto 0xFFFFFFFE
+        ks = [0xFFFFFFFE if k == 0xFFFFFFFF else k for k in ks]
+        en = (np.ones(len(ks), bool) if enabled is None
+              else np.asarray(enabled, bool))
+        return ks, en
+
+    def get(self, state, qkeys, enabled=None):
+        ref = self._import(state)
+        ks, en = self._lanes(qkeys, enabled)
+        hit = np.zeros(len(ks), bool)
+        vals = np.full(len(ks), -1, np.int32)
+        for i, k in enumerate(ks):
+            if not en[i]:
+                ref.clock += 1  # disabled lane still consumes a timestamp
+                continue
+            v = ref.get(k)
+            if v is not None:
+                hit[i], vals[i] = True, v
+        return self._export(ref), jnp.asarray(hit), jnp.asarray(vals)
+
+    def put(self, state, qkeys, qvals, admit=None, enabled=None, *,
+            slot_value: bool = False):
+        ref = self._import(state)
+        ks, en = self._lanes(qkeys, enabled)
+        vs = np.asarray(qvals, np.int32)
+        ad = (np.ones(len(ks), bool) if admit is None
+              else np.asarray(admit, bool))
+        b = len(ks)
+        ek = np.zeros(b, np.uint32)
+        ev = np.zeros(b, bool)
+        slot_sets = np.full(b, -1, np.int32)
+        slot_ways = np.full(b, -1, np.int32)
+        for i, k in enumerate(ks):
+            if not en[i]:
+                ref.clock += 1
+                continue
+            evicted, s, w = ref.put(k, int(vs[i]), admit=bool(ad[i]))
+            if w is not None:
+                slot_sets[i], slot_ways[i] = s, w
+                if slot_value:
+                    ref.sets[s][w]["val"] = s * self.cfg.ways + w
+            if evicted is not None:
+                ek[i], ev[i] = evicted, True
+        return (self._export(ref), jnp.asarray(ek), jnp.asarray(ev),
+                jnp.asarray(slot_sets), jnp.asarray(slot_ways))
+
+    def peek_victims(self, state, qkeys):
+        ref = self._import(state)
+        ks, _ = self._lanes(qkeys, None)
+        clock0 = ref.clock
+        vk = np.zeros(len(ks), np.uint32)
+        vv = np.zeros(len(ks), bool)
+        for i, k in enumerate(ks):
+            ref.clock = clock0 + i   # lane i probes at logical time clock+i
+            victim = ref.peek_victim(k)
+            if victim is not None:
+                vk[i], vv[i] = victim, True
+        ref.clock = clock0
+        return jnp.asarray(vk), jnp.asarray(vv)

@@ -174,7 +174,10 @@ def _intra_batch_rank(sets: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
 def _first_occurrence(qkeys: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
     """True for the first active occurrence of each key in the batch."""
     b = qkeys.shape[0]
-    order_key = jnp.where(active, qkeys, jnp.uint32(0)).astype(jnp.uint32)
+    # Inactive lanes sort under EMPTY_KEY, which sanitize_keys guarantees is
+    # never a real key — a valid-key sentinel (e.g. 0) would absorb the first
+    # occurrence of that key whenever an inactive lane precedes it.
+    order_key = jnp.where(active, qkeys, EMPTY_KEY).astype(jnp.uint32)
     # sort by (key, arrival); first of each equal-key run wins
     perm = jnp.argsort(order_key, stable=True)
     sorted_keys = order_key[perm]
@@ -214,18 +217,21 @@ def _victim_order(cfg: KWayConfig, state: KWayState, sets, set_keys, times):
 
 
 # ---------------------------------------------------------------------------
-# public operations
+# decision application (shared by every probe implementation)
+#
+# Probing (locate the key / rank the victims) and applying (scatter the new
+# contents) are split so alternative probe substrates — the pure-jnp path
+# below, the Pallas kernel in kernels/kway_probe.py — feed one common apply
+# and stay bit-identical (DESIGN.md §3).
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnums=0)
-def get(cfg: KWayConfig, state: KWayState, qkeys: jnp.ndarray):
-    """Batched read (paper Algorithm 2/5/8).
+def apply_get(cfg: KWayConfig, state: KWayState, sets, hit, way):
+    """Apply read-side policy-metadata updates for already-probed queries.
 
-    Returns (state', hit[B] bool, vals[B] int32).  Hits update policy
-    metadata; misses leave the cache untouched.
+    Returns (state', hit[B], vals[B]).
     """
-    b = qkeys.shape[0]
-    qkeys, sets, set_keys, hit, way = _probe(cfg, state, qkeys)
+    b = sets.shape[0]
     times, clock = _batch_times(state, b)
 
     ma_hit = state.meta_a[sets, way]
@@ -250,28 +256,33 @@ def get(cfg: KWayConfig, state: KWayState, qkeys: jnp.ndarray):
     )
 
 
-@partial(jax.jit, static_argnums=0)
-def put(
+@partial(jax.jit, static_argnums=0, static_argnames=("slot_value",))
+def apply_put(
     cfg: KWayConfig,
     state: KWayState,
     qkeys: jnp.ndarray,
     qvals: jnp.ndarray,
+    sets: jnp.ndarray,
+    present: jnp.ndarray,
+    way_present: jnp.ndarray,
+    order: jnp.ndarray,
     admit: Optional[jnp.ndarray] = None,
     enabled: Optional[jnp.ndarray] = None,
+    *,
+    slot_value: bool = False,
 ):
-    """Batched write (paper Algorithm 3/6/9).
+    """Apply write decisions: deterministic conflict resolution + one scatter.
 
-    Present keys are overwritten in place; absent keys evict a policy victim
-    from their own set.  ``admit`` (bool[B], optional) gates admission of
-    absent keys — the hook the TinyLFU filter plugs into.  ``enabled``
-    (bool[B], optional) disables whole lanes (used by ``access`` so a lane
-    that already hit in the read phase is not written twice).
+    ``order`` is [B, m]: per request, the ways of its set worst-victim-first
+    (m == ways, or the sample size for sampled policies).  ``slot_value``
+    stores ``set * ways + way`` — the landing slot id — as the payload
+    instead of ``qvals`` (the paged-KV engine's page-id convention).
 
-    Returns (state', evicted_keys uint32[B], evicted_valid bool[B]) so callers
-    (e.g. the paged-KV allocator) can recycle the victims' payloads.
+    Returns (state', evicted_keys[B], evicted_valid[B], slot_sets[B],
+    slot_ways[B]); slot_* are -1 for lanes that did not land (not admitted,
+    intra-batch duplicate, per-set overflow, or disabled).
     """
     b = qkeys.shape[0]
-    qkeys, sets, set_keys, present, way_present = _probe(cfg, state, qkeys)
     times, clock = _batch_times(state, b)
     if admit is None:
         admit = jnp.ones((b,), jnp.bool_)
@@ -283,7 +294,6 @@ def put(
     is_insert &= _first_occurrence(qkeys, is_insert)      # dedupe within batch
     rank = _intra_batch_rank(sets, is_insert)
     is_insert &= rank < cfg.ways                          # ≤ k admits per set
-    order = _victim_order(cfg, state, sets, set_keys, times)
     rank_c = jnp.clip(rank, 0, order.shape[1] - 1)  # dropped lanes: safe idx
     way_victim = jnp.take_along_axis(order, rank_c[:, None], axis=-1)[:, 0]
 
@@ -301,22 +311,84 @@ def put(
     new_a = jnp.where(present, ha, ia)
     new_b = jnp.where(present, hb, ib)
 
-    sel = lambda upd, old: jnp.where(active, upd, old)  # noqa: E731
-    sets_w = jnp.where(active, sets, 0)
-    way_w = jnp.where(active, way, 0)
-    # Inactive lanes write slot (0,0) with its own current contents (no-op).
-    cur = lambda arr, upd: jnp.where(active, upd, arr[sets_w, way_w])  # noqa: E731
+    if slot_value:
+        qvals = (sets * jnp.int32(cfg.ways) + way).astype(jnp.int32)
 
-    keys = state.keys.at[sets_w, way_w].set(cur(state.keys, qkeys))
-    fpr = state.fprint.at[sets_w, way_w].set(
-        cur(state.fprint, hashing.fingerprint(qkeys))
-    )
-    vals = state.vals.at[sets_w, way_w].set(cur(state.vals, qvals))
-    meta_a = state.meta_a.at[sets_w, way_w].set(cur(state.meta_a, new_a))
-    meta_b = state.meta_b.at[sets_w, way_w].set(cur(state.meta_b, new_b))
+    # Inactive lanes scatter to an out-of-bounds set index — JAX drops
+    # out-of-bounds scatter updates, making them true no-ops.  (Routing them
+    # to slot (0,0) with its "current" value is NOT a no-op: a duplicate
+    # scatter index lets the stale inactive write clobber an active lane's
+    # genuine insert into (0,0).)
+    sets_w = jnp.where(active, sets, jnp.int32(cfg.num_sets))
+    way_w = jnp.where(active, way, 0)
+
+    keys = state.keys.at[sets_w, way_w].set(qkeys)
+    fpr = state.fprint.at[sets_w, way_w].set(hashing.fingerprint(qkeys))
+    vals = state.vals.at[sets_w, way_w].set(qvals)
+    meta_a = state.meta_a.at[sets_w, way_w].set(new_a)
+    meta_b = state.meta_b.at[sets_w, way_w].set(new_b)
 
     new_state = KWayState(keys, fpr, vals, meta_a, meta_b, clock)
-    return new_state, evicted_keys, evicted_valid
+    slot_sets = jnp.where(active, sets, -1)
+    slot_ways = jnp.where(active, way, -1)
+    return new_state, evicted_keys, evicted_valid, slot_sets, slot_ways
+
+
+# ---------------------------------------------------------------------------
+# public operations
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=0)
+def get(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    enabled: Optional[jnp.ndarray] = None,
+):
+    """Batched read (paper Algorithm 2/5/8).
+
+    Returns (state', hit[B] bool, vals[B] int32).  Hits update policy
+    metadata; misses leave the cache untouched.  ``enabled`` (bool[B],
+    optional) masks whole lanes (they still consume a logical timestamp —
+    used by the sharded layer's padding lanes).
+    """
+    qkeys, sets, set_keys, hit, way = _probe(cfg, state, qkeys)
+    if enabled is not None:
+        hit = hit & enabled
+    return apply_get(cfg, state, sets, hit, way)
+
+
+@partial(jax.jit, static_argnums=0, static_argnames=("slot_value",))
+def put(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    qvals: jnp.ndarray,
+    admit: Optional[jnp.ndarray] = None,
+    enabled: Optional[jnp.ndarray] = None,
+    *,
+    slot_value: bool = False,
+):
+    """Batched write (paper Algorithm 3/6/9).
+
+    Present keys are overwritten in place; absent keys evict a policy victim
+    from their own set.  ``admit`` (bool[B], optional) gates admission of
+    absent keys — the hook the TinyLFU filter plugs into.  ``enabled``
+    (bool[B], optional) disables whole lanes (used by ``access`` so a lane
+    that already hit in the read phase is not written twice).
+
+    Returns (state', evicted_keys uint32[B], evicted_valid bool[B],
+    slot_sets int32[B], slot_ways int32[B]).  The evicted keys let callers
+    (e.g. the paged-KV allocator) recycle the victims' payloads; the slot
+    arrays report where each key landed (-1 when it did not land).
+    """
+    qkeys, sets, set_keys, present, way_present = _probe(cfg, state, qkeys)
+    times, _ = _batch_times(state, qkeys.shape[0])
+    order = _victim_order(cfg, state, sets, set_keys, times)
+    return apply_put(
+        cfg, state, qkeys, qvals, sets, present, way_present, order,
+        admit, enabled, slot_value=slot_value,
+    )
 
 
 @partial(jax.jit, static_argnums=0)
@@ -326,14 +398,16 @@ def access(
     qkeys: jnp.ndarray,
     qvals: jnp.ndarray,
     admit_on_miss: Optional[jnp.ndarray] = None,
+    enabled: Optional[jnp.ndarray] = None,
 ):
     """The canonical cache loop: get; on miss, put (paper §5.1.2 methodology).
 
     Returns (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B]).
     """
-    state, hit, vals = get(cfg, state, qkeys)
+    state, hit, vals = get(cfg, state, qkeys, enabled=enabled)
     admit = admit_on_miss if admit_on_miss is not None else None
-    state, ek, ev = put(cfg, state, qkeys, qvals, admit=admit, enabled=~hit)
+    en = (~hit) if enabled is None else (enabled & ~hit)
+    state, ek, ev, _, _ = put(cfg, state, qkeys, qvals, admit=admit, enabled=en)
     vals = jnp.where(hit, vals, qvals)
     return state, hit, vals, ek, ev
 

@@ -30,13 +30,18 @@ class RefKWay:
         return _h32(key, self.seed) & (self.num_sets - 1)
 
     def _score(self, node, now):
+        """Victim score in the float32 domain the JAX/Pallas paths compare
+        in — float64 here would resolve float32 score *ties* differently
+        (e.g. two RANDOM hashes 2 apart above 2^24 both round to one
+        float32), breaking bit-identical victim choice."""
         p = self.policy
         if p in (Policy.LRU, Policy.LFU, Policy.FIFO):
-            return float(node["a"])
+            return float(np.float32(node["a"]))
         if p == Policy.RANDOM:
-            return float(_h32(node["key"] ^ (now & 0xFFFFFFFF), 0xBADA))
+            return float(np.float32(_h32(node["key"] ^ (now & 0xFFFFFFFF), 0xBADA)))
         if p == Policy.HYPERBOLIC:
-            return node["a"] / float(now - node["b"] + 1)
+            age = np.float32(now - node["b"]) + np.float32(1.0)  # as in jnp
+            return float(np.float32(node["a"]) / age)
         raise ValueError(p)
 
     def _touch(self, node, now):
@@ -56,16 +61,22 @@ class RefKWay:
         return None
 
     def put(self, key: int, val: int, admit: bool = True):
+        """Returns (evicted_key | None, set_idx | None, way | None).
+
+        ``set_idx``/``way`` name the landing slot (present-key overwrite or
+        fresh insert); all three are None when the key was not admitted.
+        """
         now = self.clock
         self.clock += 1
-        s = self.sets[self._set_of(key)]
-        for node in s:
+        si = self._set_of(key)
+        s = self.sets[si]
+        for i, node in enumerate(s):
             if node is not None and node["key"] == key:
                 node["val"] = val
                 self._touch(node, now)
-                return None
+                return None, si, i
         if not admit:
-            return None
+            return None, None, None
         # victim way: empty ways first (lowest index), else min score with
         # lowest way index breaking ties — exactly the JAX stable argsort.
         evicted = None
@@ -80,7 +91,24 @@ class RefKWay:
             evicted = s[way]["key"]
         a, b = self._insert_meta(now)
         s[way] = {"key": key, "val": val, "a": a, "b": b}
-        return evicted
+        return evicted, si, way
+
+    def peek_victim(self, key: int):
+        """Prospective victim of ``key`` without mutating the cache.
+
+        Mirrors ``kway.peek_victims`` at B=1: returns (victim_key | None);
+        None when the key is present or its set has a free way.
+        """
+        now = self.clock
+        s = self.sets[self._set_of(key)]
+        for node in s:
+            if node is not None and node["key"] == key:
+                return None
+        if any(node is None for node in s):
+            return None
+        scored = [(self._score(n, now), i) for i, n in enumerate(s)]
+        _, way = min(scored)
+        return s[way]["key"]
 
     def _insert_meta(self, now):
         p = self.policy

@@ -1,0 +1,185 @@
+"""Set-sharded execution: the paper's "Alice and Bob never synchronize"
+parallelism across devices (DESIGN.md §5).
+
+Sets are data-independent, so a global cache of S sets splits into D
+sub-caches of S/D sets with zero cross-shard traffic: the only cross-shard
+work is bucketing query keys by owning shard, which happens on the host
+before launch.  The shard of a key is the HIGH log2(D) bits of its global
+set index, so each shard's local ``set_index`` (the LOW bits of the same
+hash) needs no rewriting — shard d's local set s is global set
+``d * (S/D) + s``, and the disjoint union of the shard states *is* the
+global cache, slot for slot.
+
+Execution modes:
+  * ``mesh`` given — ``shard_map`` over the set axis; compiles to zero
+    collectives (verified by tests/test_kway_sharding.py).
+  * no mesh (default) — a ``vmap`` over the shard axis on one device: the
+    same math, bucketing and per-shard states, used as the single-device
+    fallback and for CPU benchmarking.
+
+Because every request of one set lands in the same shard bucket with its
+arrival order preserved, the batched conflict resolution inside each shard
+matches the unsharded cache request-for-request: hits, evictions, and final
+keys/vals are identical for the timestamp-order-invariant policies
+(LRU / LFU / FIFO).  RANDOM and HYPERBOLIC score on absolute clock values,
+which shard-local clocks shift, so they are statistically — not bitwise —
+equivalent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.backend import make_backend
+from repro.core.kway import KWayConfig, KWayState
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedConfig:
+    """Global cache shape + how to split its set axis."""
+
+    cache: KWayConfig            # GLOBAL shape: cache.num_sets across all shards
+    num_shards: int = 1
+    backend: str = "jnp"
+
+    def __post_init__(self):
+        assert self.num_shards >= 1
+        assert self.num_shards & (self.num_shards - 1) == 0, \
+            "num_shards must be a power of two (it splits the set-index bits)"
+        assert self.cache.num_sets % self.num_shards == 0 and \
+            self.cache.num_sets >= self.num_shards
+
+    @property
+    def local(self) -> KWayConfig:
+        """Per-shard cache config: same ways/policy, S/D sets."""
+        return dataclasses.replace(
+            self.cache, num_sets=self.cache.num_sets // self.num_shards
+        )
+
+
+class ShardedCache:
+    """A K-way cache whose set axis is sharded D ways.
+
+    The state is the per-shard ``KWayState`` stacked on a leading shard axis
+    (leaves [D, S/D, k]; clock [D]).  ``access`` buckets the batch by owning
+    shard on the host, runs all shards in parallel, and scatters results
+    back to the original request order.
+    """
+
+    def __init__(self, cfg: ShardedConfig, mesh=None):
+        self.cfg = cfg
+        self.backend = make_backend(cfg.backend, cfg.local)
+        if not self.backend.traceable:
+            raise ValueError(
+                f"backend {cfg.backend!r} is host Python and cannot run "
+                "under vmap/shard_map; shard the 'jnp' or 'pallas' backend")
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            if "sets" not in mesh.axis_names or \
+                    mesh.shape["sets"] != cfg.num_shards:
+                raise ValueError(
+                    "mesh must carry a 'sets' axis of exactly num_shards "
+                    f"devices (one shard per device); got axes "
+                    f"{dict(mesh.shape)} for num_shards={cfg.num_shards}")
+
+            def sm_local(*args):
+                out = self._local(*(x[0] for x in args))
+                return tuple(o[None] for o in out)
+
+            spec = (P("sets"),) * 9
+            self._fn = jax.jit(shard_map(
+                sm_local, mesh=mesh, in_specs=spec, out_specs=(P("sets"),) * 10
+            ))
+        else:
+            self._fn = jax.jit(jax.vmap(self._local))
+
+    # ------------------------------------------------------------- plumbing
+    def _local(self, keys, vals, en, k, f, v, a, mb, c):
+        st = KWayState(keys=k, fprint=f, vals=v, meta_a=a, meta_b=mb, clock=c)
+        st, hit, out, ek, ev = self.backend.access(st, keys, vals, enabled=en)
+        return (hit, out, ek, ev,
+                st.keys, st.fprint, st.vals, st.meta_a, st.meta_b, st.clock)
+
+    def init(self) -> KWayState:
+        d = self.cfg.num_shards
+        st = self.backend.init()
+        leaves = [jnp.tile(l[None], (d,) + (1,) * l.ndim)
+                  for l in (st.keys, st.fprint, st.vals, st.meta_a, st.meta_b)]
+        return KWayState(*leaves, clock=jnp.zeros((d,), jnp.int32))
+
+    def owner_of(self, keys) -> np.ndarray:
+        """Owning shard per key: the high bits of the global set index."""
+        gset = hashing.set_index(
+            jnp.asarray(keys, jnp.uint32), self.cfg.cache.num_sets,
+            self.cfg.cache.seed,
+        )
+        return np.asarray(gset) // self.cfg.local.num_sets
+
+    def _bucket(self, keys: np.ndarray):
+        d = self.cfg.num_shards
+        owner = self.owner_of(keys)
+        counts = np.bincount(owner, minlength=d)
+        # pad buckets to a power of two ≥ 8 (kernel query tile) so the jitted
+        # shard function sees few distinct shapes
+        bl = 8
+        while bl < int(counts.max() if counts.size else 1):
+            bl *= 2
+        order = np.argsort(owner, kind="stable")   # arrival order per shard
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        pos = np.empty(len(keys), np.int64)
+        pos[order] = np.arange(len(keys)) - starts[owner[order]]
+        return owner, pos, bl
+
+    # ------------------------------------------------------------------ API
+    def access(self, state: KWayState, keys, vals):
+        """Batched get-or-insert across all shards.
+
+        Returns (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B])
+        in the original request order.
+        """
+        keys = np.asarray(keys, np.uint32)
+        vals = np.asarray(vals, np.int32)
+        d = self.cfg.num_shards
+        owner, pos, bl = self._bucket(keys)
+        keys_b = np.zeros((d, bl), np.uint32)
+        vals_b = np.zeros((d, bl), np.int32)
+        en_b = np.zeros((d, bl), bool)
+        keys_b[owner, pos] = keys
+        vals_b[owner, pos] = vals
+        en_b[owner, pos] = True
+
+        hit_b, val_b, ek_b, ev_b, k2, f2, v2, a2, b2, c2 = self._fn(
+            jnp.asarray(keys_b), jnp.asarray(vals_b), jnp.asarray(en_b),
+            state.keys, state.fprint, state.vals,
+            state.meta_a, state.meta_b, state.clock,
+        )
+        state = KWayState(keys=k2, fprint=f2, vals=v2,
+                          meta_a=a2, meta_b=b2, clock=c2)
+        sel = (np.asarray(owner), np.asarray(pos))
+        return (
+            state,
+            np.asarray(hit_b)[sel],
+            np.asarray(val_b)[sel],
+            np.asarray(ek_b)[sel],
+            np.asarray(ev_b)[sel],
+        )
+
+    def global_view(self, state: KWayState) -> KWayState:
+        """Reassemble the stacked shard states into the equivalent global
+        single-device state (sets of shard d map to global sets
+        [d*S/D, (d+1)*S/D)).  Clock is summed — a diagnostic view; policy
+        metadata keeps its shard-local timestamps."""
+        s, k = self.cfg.cache.num_sets, self.cfg.cache.ways
+        merge = lambda l: l.reshape((s, k))  # noqa: E731
+        return KWayState(
+            keys=merge(state.keys), fprint=merge(state.fprint),
+            vals=merge(state.vals), meta_a=merge(state.meta_a),
+            meta_b=merge(state.meta_b), clock=jnp.sum(state.clock),
+        )

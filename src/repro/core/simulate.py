@@ -1,17 +1,22 @@
 """Jitted trace replay — the hit-ratio study engine (paper §5.2).
 
-Replays a request trace through any (policy × associativity × admission)
-configuration and reports the hit ratio.  The replay is a ``lax.scan`` over
-the trace with batch size 1 (exact sequential semantics, matching the paper's
-single-threaded hit-ratio measurements), jit-compiled once per cache shape —
-million-request traces replay in seconds on CPU and would be trivially fast
-on TPU.
+Replays a request trace through any (policy × associativity × admission ×
+backend) configuration and reports the hit ratio.  The replay is a
+``lax.scan`` over the trace with batch size 1 (exact sequential semantics,
+matching the paper's single-threaded hit-ratio measurements), jit-compiled
+once per cache shape — million-request traces replay in seconds on CPU and
+would be trivially fast on TPU.
 
 A batched variant (``replay_batched``) replays B requests per step with the
 deterministic conflict-resolution semantics of ``kway.access`` — this is the
 throughput path and also demonstrates that batching barely perturbs the hit
 ratio (the vectorized analogue of the paper's observation that racy metadata
 updates do not hurt policy quality).
+
+Both entry points accept ``SimConfig.backend`` ("jnp" | "pallas" | "ref");
+``replay_batched`` additionally takes ``shards`` to run the set-sharded
+execution layer (core/sharded.py).  The ``ref`` backend replays in plain
+Python (it is the differential-testing oracle, not a throughput path).
 """
 from __future__ import annotations
 
@@ -23,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import admission, kway
+from repro.core import admission
+from repro.core.backend import make_backend
 from repro.core.kway import KWayConfig
 
 
@@ -31,24 +37,26 @@ from repro.core.kway import KWayConfig
 class SimConfig:
     cache: KWayConfig
     tinylfu: Optional[admission.TinyLFUConfig] = None  # None = admit always
+    backend: str = "jnp"
 
 
 @partial(jax.jit, static_argnums=0)
 def _replay_scan(sim: SimConfig, trace: jnp.ndarray):
-    cache = kway.make_cache(sim.cache)
+    be = make_backend(sim.backend, sim.cache)
+    cache = be.init()
     sketch = admission.make_sketch(sim.tinylfu) if sim.tinylfu else None
 
     def step(carry, key):
         cache, sketch, hits = carry
         kb = key[None]
         if sim.tinylfu is None:
-            cache, hit, _, _, _ = kway.access(sim.cache, cache, kb, kb.astype(jnp.int32))
+            cache, hit, _, _, _ = be.access(cache, kb, kb.astype(jnp.int32))
         else:
             sketch = admission.record(sim.tinylfu, sketch, kb)
-            vkeys, vvalid = kway.peek_victims(sim.cache, cache, kb)
+            vkeys, vvalid = be.peek_victims(cache, kb)
             ok = admission.admit(sim.tinylfu, sketch, kb, vkeys, vvalid)
-            cache, hit, _, _, _ = kway.access(
-                sim.cache, cache, kb, kb.astype(jnp.int32), admit_on_miss=ok
+            cache, hit, _, _, _ = be.access(
+                cache, kb, kb.astype(jnp.int32), admit_on_miss=ok
             )
         return (cache, sketch, hits + hit[0]), ()
 
@@ -58,32 +66,78 @@ def _replay_scan(sim: SimConfig, trace: jnp.ndarray):
     return hits, cache
 
 
+def _replay_python(sim: SimConfig, trace: np.ndarray):
+    """Sequential replay for backends that cannot live inside lax.scan."""
+    if sim.tinylfu is not None:
+        raise ValueError("TinyLFU replay is not wired for the ref backend")
+    be = make_backend(sim.backend, sim.cache)
+    cache = be.init()
+    hits = 0
+    for t in trace:
+        kb = jnp.asarray([t], jnp.uint32)
+        cache, hit, _, _, _ = be.access(cache, kb, kb.astype(jnp.int32))
+        hits += int(hit[0])
+    return hits, cache
+
+
 def replay(sim: SimConfig, trace: np.ndarray) -> float:
     """Exact sequential replay -> hit ratio."""
-    trace = jnp.asarray(trace, jnp.uint32)
-    hits, _ = _replay_scan(sim, trace)
+    trace = np.asarray(trace, np.uint32)
+    if sim.backend == "ref":
+        hits, _ = _replay_python(sim, trace)
+        return float(hits) / trace.shape[0]
+    hits, _ = _replay_scan(sim, jnp.asarray(trace))
     return float(hits) / trace.shape[0]
 
 
 @partial(jax.jit, static_argnums=(0, 2))
 def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
-    cache = kway.make_cache(sim.cache)
+    be = make_backend(sim.backend, sim.cache)
+    cache = be.init()
     steps = trace.shape[0] // batch
     chunks = trace[: steps * batch].reshape(steps, batch)
 
     def step(carry, keys):
         cache, hits = carry
-        cache, hit, _, _, _ = kway.access(
-            sim.cache, cache, keys, keys.astype(jnp.int32)
-        )
+        cache, hit, _, _, _ = be.access(cache, keys, keys.astype(jnp.int32))
         return (cache, hits + jnp.sum(hit.astype(jnp.int32))), ()
 
     (cache, hits), _ = jax.lax.scan(step, (cache, jnp.zeros((), jnp.int32)), chunks)
     return hits, cache
 
 
-def replay_batched(sim: SimConfig, trace: np.ndarray, batch: int = 64) -> float:
-    trace = jnp.asarray(trace, jnp.uint32)
+def replay_batched(
+    sim: SimConfig, trace: np.ndarray, batch: int = 64, shards: int = 1
+) -> float:
+    """Batched replay -> hit ratio.  ``shards`` > 1 runs the set-sharded
+    layer (shard_map when a device mesh is available, vmap emulation
+    otherwise) with host-side key bucketing per chunk."""
+    trace = np.asarray(trace, np.uint32)
     n = (trace.shape[0] // batch) * batch
-    hits, _ = _replay_batched_scan(sim, trace, batch)
+    if shards > 1:
+        if sim.backend == "ref":
+            raise ValueError(
+                "the ref backend is sequential host Python and cannot be "
+                "sharded; use backend='jnp' or 'pallas' with shards > 1")
+        from repro.core.sharded import ShardedCache, ShardedConfig
+
+        sc = ShardedCache(ShardedConfig(
+            cache=sim.cache, num_shards=shards, backend=sim.backend))
+        state = sc.init()
+        hits = 0
+        for i in range(0, n, batch):
+            chunk = trace[i : i + batch]
+            state, hit, _, _, _ = sc.access(state, chunk, chunk.astype(np.int32))
+            hits += int(hit.sum())
+        return hits / n
+    if sim.backend == "ref":
+        be = make_backend(sim.backend, sim.cache)
+        cache = be.init()
+        hits = 0
+        for i in range(0, n, batch):
+            chunk = jnp.asarray(trace[i : i + batch])
+            cache, hit, _, _, _ = be.access(cache, chunk, chunk.astype(jnp.int32))
+            hits += int(np.asarray(hit).sum())
+        return hits / n
+    hits, _ = _replay_batched_scan(sim, jnp.asarray(trace), batch)
     return float(hits) / n

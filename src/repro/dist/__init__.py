@@ -1,0 +1,1 @@
+"""Distribution helpers: sharding heuristics for params/inputs/caches."""

@@ -1,0 +1,80 @@
+"""Sharding heuristics for the launch drivers (train / dryrun).
+
+The mesh carries a ``data`` axis (plus an optional leading ``pod`` axis —
+see launch/mesh.py) for batch parallelism and a ``model`` axis for tensor
+parallelism.  The rules here are deliberately simple and shape-driven:
+
+  * params — replicate small leaves; for large leaves (≥ 1 MiB elements),
+    shard the largest dimension divisible by the ``model`` axis.  Leaves
+    with no such dimension stay replicated ("dp_only" archs) — their
+    optimizer state is then ZeRO-sharded by adamw.state_shardings.
+  * inputs — batch-shard the leading dimension over the data axes when it
+    divides; everything else replicated.
+  * caches — decode caches are [layers, batch, ...]; batch-shard dim 1.
+
+Every function accepts either concrete arrays or ShapeDtypeStruct specs
+(only ``.shape``/``.size`` are read) and returns pytrees of NamedSharding.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MIN_SHARD_ELEMS = 1 << 20
+
+
+def _data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def batch_pspec(cfg, global_batch: int, mesh) -> P:
+    """PartitionSpec for a leading batch dimension."""
+    axes = _data_axes(mesh)
+    n = _axis_size(mesh, axes)
+    if n > 1 and global_batch % n == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P(None)
+
+
+def _shard_leading(leaf, mesh, dim: int):
+    axes = _data_axes(mesh)
+    n = _axis_size(mesh, axes)
+    dims = [None] * len(leaf.shape)
+    if n > 1 and len(leaf.shape) > dim and leaf.shape[dim] % n == 0:
+        dims[dim] = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, P(*dims))
+
+
+def param_shardings(cfg, params, mesh):
+    """Tensor-parallel parameter shardings over the ``model`` axis."""
+    m = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def one(leaf):
+        shape = leaf.shape
+        if m == 1 or leaf.size < _MIN_SHARD_ELEMS or not shape:
+            return NamedSharding(mesh, P())
+        # largest dimension divisible by the model axis wins
+        cand = [(d, i) for i, d in enumerate(shape) if d % m == 0]
+        if not cand:
+            return NamedSharding(mesh, P())   # dp_only leaf: ZeRO handles it
+        _, i = max(cand)
+        dims = [None] * len(shape)
+        dims[i] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(one, params)
+
+
+def input_shardings(cfg, shape, ispecs, mesh):
+    """Batch-shard every input's leading dimension over the data axes."""
+    return jax.tree.map(lambda l: _shard_leading(l, mesh, 0), ispecs)
+
+
+def cache_shardings(cfg, shape, cspecs, mesh):
+    """Decode caches are [layers, batch, ...]: batch-shard dimension 1."""
+    return jax.tree.map(lambda l: _shard_leading(l, mesh, 1), cspecs)

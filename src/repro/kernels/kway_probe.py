@@ -42,14 +42,23 @@ LANES = 128  # TPU vector register lane width
 
 
 def _scores_for_policy(policy: int, keys, meta_a, meta_b, now):
-    """Victim scores, lower == evict first.  Mirrors core/policies.py but is
+    """Victim scores, lower == evict first.  Bit-identical to
+    core/policies.victim_scores (the backend-equivalence suite relies on it),
     written with only Pallas-TPU-lowerable ops (no gather, no PRNG)."""
     a = meta_a.astype(jnp.float32)
     if policy == Policy.RANDOM:
+        # hashing.hash_u32(keys ^ now, seed=0xBADA): seeded premix + fmix32,
+        # inlined with literal constants because the kernel body cannot close
+        # over hashing's module-level jnp constants (rejected by pallas_call).
+        # tests/test_kernels.py sweeps kernel vs kernels/ref.py — which calls
+        # hash_u32 directly — so any drift in this copy fails loudly.
         x = keys.astype(jnp.uint32) ^ now.astype(jnp.uint32)
+        x = (x + jnp.uint32(0xBADA) * jnp.uint32(0x9E3779B1)) * jnp.uint32(0x85EBCA77)
         x = x ^ (x >> 16)
         x = x * jnp.uint32(0x85EBCA6B)
         x = x ^ (x >> 13)
+        x = x * jnp.uint32(0xC2B2AE35)
+        x = x ^ (x >> 16)
         return x.astype(jnp.float32)
     if policy == Policy.HYPERBOLIC:
         age = (now - meta_b).astype(jnp.float32) + 1.0
@@ -71,12 +80,13 @@ def _probe_kernel(
     way_ref,             # int32 [qt]
     vway_ref,            # int32 [qt]
     vkey_ref,            # int32 [qt]
-    *,
+    *rest,               # (vorder_ref int32 [qt, LANES],) when full_order
     policy: int,
     ways: int,
     qt: int,
     empty_key: int,
 ):
+    vorder_ref = rest[0] if rest else None
     tile = pl.program_id(0)
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
     valid_way = lane < ways
@@ -99,8 +109,25 @@ def _probe_kernel(
         scores = _scores_for_policy(policy, row_keys, row_a, row_b, now)
         scores = jnp.where(occupied, scores, NEG_INF)  # empty ways first
         scores = jnp.where(valid_way, scores, POS_INF)  # padding ways last
-        vscore = jnp.min(scores)
-        vway = jnp.min(jnp.where(scores == vscore, lane, LANES))
+        if vorder_ref is None:
+            vscore = jnp.min(scores)
+            vway = jnp.min(jnp.where(scores == vscore, lane, LANES))
+        else:
+            # Full victim order, worst-first: `ways` rounds of masked
+            # min-extraction (the paper's O(k) scan, k unrolled VPU reduces).
+            # Ties break toward the lowest lane — identical to the stable
+            # argsort in core/kway._victim_order.
+            work = scores
+            ord_row = jnp.full((1, LANES), LANES, jnp.int32)
+            vway = None
+            for r in range(ways):
+                m = jnp.min(work)
+                w = jnp.min(jnp.where(work == m, lane, LANES))
+                ord_row = jnp.where(lane == r, w, ord_row)
+                work = jnp.where(lane == w, POS_INF, work)
+                if r == 0:
+                    vway = w
+            vorder_ref[pl.ds(i, 1), :] = ord_row
 
         hit_ref[i] = hit.astype(jnp.int32)
         way_ref[i] = jnp.where(hit, way, 0)
@@ -111,7 +138,7 @@ def _probe_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("policy", "ways", "qt", "interpret")
+    jax.jit, static_argnames=("policy", "ways", "qt", "interpret", "full_order")
 )
 def kway_probe(
     keys: jnp.ndarray,     # int32 [S, kp] (ways padded to LANES multiple.. or any kp>=ways)
@@ -125,9 +152,16 @@ def kway_probe(
     ways: int,
     qt: int = 8,
     interpret: bool = True,
+    full_order: bool = False,
 ):
     """Run the probe kernel.  B must be a multiple of qt; kp (padded ways)
-    must equal LANES (one VREG row per set)."""
+    must equal LANES (one VREG row per set).
+
+    With ``full_order=True`` a fifth output is returned: vorder int32
+    [B, LANES], the per-query victim order worst-first (entries past ``ways``
+    hold the LANES sentinel) — what the batched conflict resolution in
+    core/kway.apply_put consumes for rank>0 same-set collisions.
+    """
     s, kp = keys.shape
     b = sets.shape[0]
     assert kp == LANES, f"pad ways to {LANES} lanes (got {kp})"
@@ -144,13 +178,17 @@ def kway_probe(
     out_shape = [jax.ShapeDtypeStruct((b,), jnp.int32)] * 4
     full = lambda: pl.BlockSpec((s, kp), lambda i, *_: (0, 0))  # noqa: E731
     qtile = lambda: pl.BlockSpec((qt,), lambda i, *_: (i,))  # noqa: E731
+    out_specs = [qtile()] * 4
+    if full_order:
+        out_shape = out_shape + [jax.ShapeDtypeStruct((b, LANES), jnp.int32)]
+        out_specs = out_specs + [pl.BlockSpec((qt, LANES), lambda i, *_: (i, 0))]
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[full(), full(), full(), qtile(), qtile()],
-            out_specs=[qtile()] * 4,
+            out_specs=out_specs,
         ),
         out_shape=out_shape,
         interpret=interpret,

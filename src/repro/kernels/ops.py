@@ -30,19 +30,13 @@ def _pad_ways(arr: jnp.ndarray, lanes: int = _kp.LANES) -> jnp.ndarray:
     return jnp.concatenate([arr, pad], axis=1)
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
-def probe(
-    cfg: KWayConfig,
-    state: KWayState,
-    qkeys: jnp.ndarray,
-    *,
-    use_kernel: bool = True,
-):
-    """Kernel-accelerated probe of the K-way cache.
+def _probe_impl(cfg, state, qkeys, use_kernel: bool, full_order: bool):
+    """Shared probe core: sanitize + route + pad to the qt=8 query tile.
 
-    Returns (hit bool[B], way int32[B], victim_way int32[B], victim_key
-    uint32[B]) — the decisions the caller's scatter applies.  Falls back to
-    the pure-jnp oracle when the batch doesn't tile (or use_kernel=False).
+    Padding with dummy probes keeps the kernel on every batch size (probing
+    is read-only, so padding lanes are harmless); outputs are sliced back
+    to B.  Returns (qkeys_sanitized, sets, outs) with outs = the kernel's
+    output tuple, already sliced.
     """
     qkeys = hashing.sanitize_keys(qkeys)
     sets = hashing.set_index(qkeys, cfg.num_sets, cfg.seed)
@@ -55,18 +49,64 @@ def probe(
     qk_i = qkeys.astype(jnp.int32)
 
     qt = 8
-    if use_kernel and b % qt == 0:
-        hit, way, vway, vkey = _kp.kway_probe(
-            keys_i, ma, mb, sets, qk_i, times,
+    if use_kernel:
+        pad = (-b) % qt
+        zpad = jnp.zeros((pad,), jnp.int32)
+        outs = _kp.kway_probe(
+            keys_i, ma, mb,
+            jnp.concatenate([sets, zpad]),
+            jnp.concatenate([qk_i, zpad]),
+            jnp.concatenate([times, zpad]),
             policy=int(cfg.policy), ways=cfg.ways, qt=qt,
-            interpret=not _on_tpu(),
+            interpret=not _on_tpu(), full_order=full_order,
         )
     else:
-        hit, way, vway, vkey = _ref.kway_probe_ref(
+        outs = _ref.kway_probe_ref(
             keys_i, ma, mb, sets, qk_i, times,
-            policy=int(cfg.policy), ways=cfg.ways,
+            policy=int(cfg.policy), ways=cfg.ways, full_order=full_order,
         )
-    return hit.astype(jnp.bool_), way, vway, vkey.astype(jnp.uint32)
+    return qkeys, sets, tuple(o[:b] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
+def probe(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+):
+    """Kernel-accelerated probe of the K-way cache.
+
+    Returns (qkeys_sanitized uint32[B], sets int32[B], hit bool[B],
+    way int32[B], victim_way int32[B], victim_key uint32[B]) — the decisions
+    the caller's scatter applies.  ``use_kernel=False`` selects the pure-jnp
+    oracle.
+    """
+    qkeys, sets, (hit, way, vway, vkey) = _probe_impl(
+        cfg, state, qkeys, use_kernel, full_order=False)
+    return (qkeys, sets, hit.astype(jnp.bool_), way, vway,
+            vkey.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
+def probe_orders(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+):
+    """Kernel probe + full victim order — the PallasBackend's write phase.
+
+    Returns (qkeys_sanitized uint32[B], sets int32[B], hit bool[B],
+    way int32[B], order int32[B, ways]) where ``order`` lists each query's
+    set's ways worst-victim-first, exactly what core/kway.apply_put consumes.
+    Requires cfg.ways <= LANES and cfg.sample == 0 (enforced by the backend).
+    """
+    qkeys, sets, (hit, way, _, _, order) = _probe_impl(
+        cfg, state, qkeys, use_kernel, full_order=True)
+    return qkeys, sets, hit.astype(jnp.bool_), way, order[:, : cfg.ways]
 
 
 def attend_paged(

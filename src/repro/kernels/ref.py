@@ -22,19 +22,29 @@ POS_INF = jnp.float32(3.0e38)
 def _scores(policy, keys_u32, meta_a, meta_b, now):
     a = meta_a.astype(jnp.float32)
     if policy == Policy.RANDOM:
-        x = keys_u32 ^ now.astype(jnp.uint32)
-        x = x ^ (x >> 16)
-        x = x * jnp.uint32(0x85EBCA6B)
-        x = x ^ (x >> 13)
-        return x.astype(jnp.float32)
+        # The single shared definition (core/policies.victim_scores uses the
+        # same call).  The Pallas kernel keeps a hand-inlined copy — a
+        # pallas_call body cannot close over hashing's module-level jnp
+        # constants — and the kernel-vs-oracle sweeps guard that copy
+        # against drift.
+        from repro.core import hashing
+        h = hashing.hash_u32(keys_u32 ^ now.astype(jnp.uint32), seed=0xBADA)
+        return h.astype(jnp.float32)
     if policy == Policy.HYPERBOLIC:
         age = (now - meta_b).astype(jnp.float32) + 1.0
         return a / age
     return a
 
 
-def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways):
-    """Oracle for kernels.kway_probe (identical outputs, any kp >= ways)."""
+def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways,
+                   full_order=False):
+    """Oracle for kernels.kway_probe (identical outputs, any kp >= ways).
+
+    With ``full_order=True`` additionally returns vorder int32 [B, kp]: the
+    victim order worst-first (entries past ``ways`` hold the kp sentinel),
+    matching the kernel's masked min-extraction tie-breaking exactly (stable
+    argsort == iterative lowest-lane extraction).
+    """
     kp = keys.shape[1]
     lane = jnp.arange(kp, dtype=jnp.int32)[None, :]
     row_keys = keys[sets]                        # [B, kp]
@@ -53,12 +63,17 @@ def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways):
     vscore = jnp.min(sc, axis=-1, keepdims=True)
     vway = jnp.min(jnp.where(sc == vscore, lane, kp), axis=-1)
     vkey = jnp.take_along_axis(row_keys, vway[:, None], axis=-1)[:, 0]
-    return (
+    out = (
         hit.astype(jnp.int32),
         way.astype(jnp.int32),
         vway.astype(jnp.int32),
         vkey.astype(jnp.int32),
     )
+    if full_order:
+        order = jnp.argsort(sc, axis=-1).astype(jnp.int32)  # stable: lane ties
+        order = jnp.where(jnp.arange(kp)[None, :] < ways, order, kp)
+        out = out + (order,)
+    return out
 
 
 # ---------------------------------------------------------------------------

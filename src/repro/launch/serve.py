@@ -29,6 +29,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--policy", default="lru",
                     choices=[p.name.lower() for p in Policy])
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "ref"],
+                    help="prefix-cache backend (DESIGN.md §3): jnp vector "
+                         "ops, the Pallas probe kernel, or the Python oracle")
     ap.add_argument("--tinylfu", action="store_true")
     ap.add_argument("--shared-prefix", type=int, default=48,
                     help="tokens shared by all prompts (prefix-cache fodder)")
@@ -45,6 +49,7 @@ def main(argv=None):
     eng = Engine(cfg, params, EngineConfig(
         page=8, num_sets=32, ways=8, policy=Policy[args.policy.upper()],
         tinylfu=args.tinylfu, max_batch=8, max_seq=256, private_pages=256,
+        backend=args.backend,
     ))
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(2, cfg.vocab_size - 1, args.shared_prefix)

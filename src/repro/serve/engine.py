@@ -16,7 +16,11 @@ Design (DESIGN.md §2): the page pool is split into
 The engine is single-host (batched requests on one device — CPU here, one
 TPU chip in production; the multi-chip serve path is the dry-run's
 ``decode_*`` cells).  Host-side bookkeeping is numpy; all tensor work is
-jitted (serve/paged_model.py; attention via the Pallas paged kernel).
+jitted (serve/paged_model.py; attention via the Pallas paged kernel).  The
+prefix cache runs on any CacheBackend (DESIGN.md §3) via
+``EngineConfig.backend``: "jnp" vector ops, "pallas" (the probe kernel as
+the residency hot loop), or "ref" (the sequential oracle, for differential
+tests).
 """
 from __future__ import annotations
 
@@ -28,10 +32,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import admission, kway
+from repro.core import admission
+from repro.core.backend import make_backend
 from repro.core.kway import KWayConfig
 from repro.core.policies import Policy
 from repro.serve import paged_model as pm
+
+_FNV_OFFSET = np.uint32(2166136261)
+_FNV_PRIME = np.uint32(16777619)
+_GOLDEN = np.uint32(0x9E3779B1)
+
+
+def _fmix32(x: np.ndarray) -> np.ndarray:
+    """murmur3 finalizer (numpy port of core/hashing._fmix32)."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return x
 
 
 def prefix_block_hashes(tokens: np.ndarray, page: int) -> np.ndarray:
@@ -39,14 +58,29 @@ def prefix_block_hashes(tokens: np.ndarray, page: int) -> np.ndarray:
 
     block_hash[i] covers tokens[0 : (i+1)*page] — a block only matches when
     its entire prefix matches, so a page hit guarantees identical KV.
+
+    Vectorized: an FNV-1a fold over each block's tokens runs across all
+    blocks at once (``page`` numpy steps instead of one interpreted step per
+    prompt token), each block digest is avalanche-mixed with its position,
+    and the prefix chain is a cumulative XOR of the position-salted digests.
+    The content-addressing contract is preserved — same-prefix ⇒ same-hash,
+    change-block-i ⇒ chain differs from i on — but the concrete hash VALUES
+    differ from the earlier token-serial rolling FNV (that recurrence is
+    inherently sequential and cannot be vectorized bit-exactly).  Hashes are
+    ephemeral in-memory keys, never persisted, so only the contract matters.
+    O(page + n) numpy ops instead of O(prompt_len) interpreter work per
+    prefill.
     """
     n = len(tokens) // page
-    out = np.empty(n, np.uint32)
-    h = np.uint32(2166136261)
-    for i in range(n):
-        for t in tokens[i * page : (i + 1) * page]:
-            h = np.uint32((int(h) ^ int(t)) * 16777619 & 0xFFFFFFFF)
-        out[i] = h if h not in (0xFFFFFFFF,) else np.uint32(1)
+    if n == 0:
+        return np.empty(0, np.uint32)
+    blocks = np.asarray(tokens[: n * page], dtype=np.uint32).reshape(n, page)
+    h = np.full(n, _FNV_OFFSET, np.uint32)
+    for j in range(page):                    # page steps, vectorized over n
+        h = (h ^ blocks[:, j]) * _FNV_PRIME
+    salt = (np.arange(1, n + 1, dtype=np.uint32)) * _GOLDEN
+    out = np.bitwise_xor.accumulate(_fmix32(h ^ salt)).astype(np.uint32)
+    out[out == np.uint32(0xFFFFFFFF)] = np.uint32(1)  # avoid EMPTY_KEY
     return out
 
 
@@ -75,6 +109,7 @@ class EngineConfig:
     max_batch: int = 8
     max_seq: int = 512
     private_pages: int = 256
+    backend: str = "jnp"              # cache backend: "jnp" | "pallas" | "ref"
 
 
 class Engine:
@@ -87,7 +122,8 @@ class Engine:
         self.kcfg = KWayConfig(
             num_sets=ecfg.num_sets, ways=ecfg.ways, policy=ecfg.policy
         )
-        self.kstate = kway.make_cache(self.kcfg)
+        self.backend = make_backend(ecfg.backend, self.kcfg)
+        self.kstate = self.backend.init()
         self.sketch_cfg = (
             admission.for_capacity(self.kcfg.capacity) if ecfg.tinylfu else None
         )
@@ -144,7 +180,7 @@ class Engine:
         if len(hashes) == 0:
             return 0, []
         keys = jnp.asarray(hashes, jnp.uint32)
-        self.kstate, hit, vals = kway.get(self.kcfg, self.kstate, keys)
+        self.kstate, hit, vals = self.backend.get(self.kstate, keys)
         hit = np.asarray(hit)
         vals = np.asarray(vals)
         n_hit = 0
@@ -165,29 +201,21 @@ class Engine:
         admit_mask = None
         if self.sketch is not None:
             self.sketch = admission.record(self.sketch_cfg, self.sketch, keys)
-            vk, vv = kway.peek_victims(self.kcfg, self.kstate, keys)
+            vk, vv = self.backend.peek_victims(self.kstate, keys)
             admit_mask = admission.admit(self.sketch_cfg, self.sketch, keys, vk, vv)
-        # value payload: the slot index the key lands in == page id.  We
-        # don't know it before the put, so we put with placeholder and read
-        # back the slots via a get.
-        self.kstate, ek, ev = kway.put(
-            self.kcfg, self.kstate, keys,
-            jnp.zeros(len(hashes), jnp.int32), admit=admit_mask,
+        # value payload: the slot index the key lands in == page id.  The
+        # slot-returning put writes it in the same call (slot_value=True) and
+        # reports where every key landed.
+        self.kstate, ek, ev, slot_sets, slot_ways = self.backend.put(
+            self.kstate, keys, jnp.zeros(len(hashes), jnp.int32),
+            admit=admit_mask, slot_value=True,
         )
         self.stats["evictions"] += int(np.asarray(ev).sum())
-        # locate each key's (set, way) -> page id; write it as the value
-        qkeys, sets, _, present, way = kway._probe(self.kcfg, self.kstate, keys)
+        slot_sets = np.asarray(slot_sets)
+        slot_ways = np.asarray(slot_ways)
         slots = np.where(
-            np.asarray(present),
-            np.asarray(sets) * self.kcfg.ways + np.asarray(way),
-            -1,
+            slot_sets >= 0, slot_sets * self.kcfg.ways + slot_ways, -1
         )
-        if np.any(np.asarray(present)):
-            vals = self.kstate.vals.at[sets, way].set(
-                jnp.where(present, jnp.asarray(slots, jnp.int32),
-                          self.kstate.vals[sets, way])
-            )
-            self.kstate = dataclasses.replace(self.kstate, vals=vals)
         return [int(s) for s in slots]
 
     def _prefill(self, req: Request, slot: int) -> bool:

@@ -40,6 +40,33 @@ def test_kway_probe_sweep(policy, s, ways, b, rng):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b_), err_msg=name)
 
 
+@pytest.mark.parametrize("policy", POLICIES)
+def test_kway_probe_full_order(policy, rng):
+    """full_order=True: the kernel's iterative min-extraction equals the
+    oracle's stable argsort, way for way, over the first `ways` entries."""
+    s, ways, b = 32, 8, 24
+    keys, ma, mb = _mk_cache(rng, s, ways)
+    sets = rng.integers(0, s, b).astype(np.int32)
+    qk = rng.integers(0, 5000, b).astype(np.int32)
+    # times > meta_b everywhere: a real cache never has an insert time in the
+    # future (HYPERBOLIC ages must stay positive, as in live states)
+    times = (np.arange(b) + 60).astype(np.int32)
+    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    out_k = kway_probe(*args, policy=int(policy), ways=ways, qt=8,
+                       full_order=True)
+    out_r = ref.kway_probe_ref(*args, policy=int(policy), ways=ways,
+                               full_order=True)
+    assert len(out_k) == len(out_r) == 5
+    for name, a, b_ in zip(["hit", "way", "vway", "vkey"], out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_),
+                                      err_msg=name)
+    np.testing.assert_array_equal(
+        np.asarray(out_k[4])[:, :ways], np.asarray(out_r[4])[:, :ways])
+    # order[0] is the victim way
+    np.testing.assert_array_equal(np.asarray(out_k[4])[:, 0],
+                                  np.asarray(out_k[2]))
+
+
 def test_kway_probe_empty_cache(rng):
     keys = np.full((8, 128), -1, np.int32)
     zeros = np.zeros((8, 128), np.int32)

@@ -1,0 +1,39 @@
+"""Hypothesis property tests for the K-way cache (oracle agreement).
+
+Skipped cleanly when `hypothesis` is absent (it is a dev-only dependency;
+`pip install -r requirements-dev.txt` brings it in).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import kway  # noqa: E402
+from repro.core.kway import KWayConfig  # noqa: E402
+from repro.core.policies import Policy  # noqa: E402
+from repro.core.refimpl import RefKWay  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.data(),
+    policy=st.sampled_from([Policy.LRU, Policy.LFU, Policy.FIFO]),
+    num_sets=st.sampled_from([2, 8]),
+    ways=st.integers(1, 6),
+)
+def test_property_oracle_agreement(data, policy, num_sets, ways):
+    """Hypothesis: arbitrary short traces agree with the serial oracle."""
+    trace = data.draw(st.lists(st.integers(0, 60), min_size=1, max_size=80))
+    cfg = KWayConfig(num_sets=num_sets, ways=ways, policy=policy)
+    ref = RefKWay(num_sets, ways, policy)
+    st_ = kway.make_cache(cfg)
+    for t in trace:
+        st_, h, _, _, _ = kway.access(
+            cfg, st_, jnp.array([t], jnp.uint32), jnp.array([t], jnp.int32)
+        )
+        assert bool(h[0]) == ref.access(t, t)
+    jax_keys = {int(x) for x in np.asarray(st_.keys).ravel() if x != 0xFFFFFFFF}
+    assert jax_keys == ref.contents()

@@ -35,6 +35,24 @@ def test_prefix_hashes_chain():
     assert (h[:3] == h2[:3]).all() and h[3] != h2[3]
 
 
+def test_prefix_hashes_vectorized_properties(rng):
+    """The numpy block-wise fold keeps the content-addressing contract:
+    deterministic, prefix-extension-stable, position-sensitive, and never
+    the EMPTY_KEY sentinel."""
+    t = rng.integers(0, 1 << 16, 67).astype(np.int32)
+    h = prefix_block_hashes(t, 8)
+    assert len(h) == 8  # trailing partial block is not hashed
+    assert (h == prefix_block_hashes(t, 8)).all()            # deterministic
+    assert (prefix_block_hashes(t[:32], 8) == h[:4]).all()   # prefix-stable
+    # swapping two blocks changes both chains from the first swap onward
+    t2 = t.copy()
+    t2[0:8], t2[8:16] = t[8:16].copy(), t[0:8].copy()
+    h2 = prefix_block_hashes(t2, 8)
+    assert h2[0] != h[0] and h2[1] != h[1]
+    assert len(prefix_block_hashes(np.empty(0, np.int32), 8)) == 0
+    assert not (h == np.uint32(0xFFFFFFFF)).any()
+
+
 def test_engine_completes_and_reuses(small_model, rng):
     cfg, params = small_model
     eng = _engine(cfg, params)
@@ -102,6 +120,28 @@ def test_engine_tinylfu(small_model, rng):
     for _ in range(4):
         eng.submit(rng.integers(2, 400, 16), max_new=2)
     assert len(eng.run()) == 4
+
+
+def test_engine_backends_agree(small_model, rng):
+    """The engine produces identical generations and prefix-cache behaviour
+    on every CacheBackend (DESIGN.md §3)."""
+    cfg, params = small_model
+    shared = rng.integers(2, 400, 32)
+    prompts = [np.concatenate([shared, rng.integers(2, 400, 8)])
+               for _ in range(4)]
+    results = {}
+    for backend in ("jnp", "pallas", "ref"):
+        eng = _engine(cfg, params, backend=backend)
+        for p in prompts:
+            eng.submit(p, max_new=3)
+        fin = eng.run()
+        results[backend] = (
+            {rid: r.generated for rid, r in fin.items()},
+            eng.hit_ratio(),
+            eng.stats["evictions"],
+        )
+    assert results["jnp"] == results["pallas"] == results["ref"]
+    assert results["jnp"][1] > 0.4  # shared prefix blocks hit
 
 
 def test_engine_rejects_ssm():

@@ -1,0 +1,117 @@
+"""Set-sharded execution layer (core/sharded.py, DESIGN.md §5).
+
+The shard_map zero-collectives property is proven separately in
+tests/test_kway_sharding.py (it needs a multi-device subprocess); here we
+verify the semantics on the single-device vmap fallback: host bucketing
+routes every key to the shard owning its set, and the sharded cache matches
+the unsharded cache request-for-request for the timestamp-order-invariant
+policies.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hashing
+from repro.core.backend import make_backend
+from repro.core.kway import KWayConfig
+from repro.core.policies import Policy
+from repro.core.sharded import ShardedCache, ShardedConfig
+
+
+def test_owner_is_high_bits_of_global_set(rng):
+    gcfg = KWayConfig(num_sets=32, ways=2)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=8))
+    keys = rng.integers(0, 1 << 30, 200).astype(np.uint32)
+    owner = sc.owner_of(keys)
+    gset = np.asarray(hashing.set_index(jnp.asarray(keys), 32, gcfg.seed))
+    assert ((owner >= 0) & (owner < 8)).all()
+    np.testing.assert_array_equal(owner, gset // 4)
+
+
+def test_bucketing_preserves_arrival_order(rng):
+    gcfg = KWayConfig(num_sets=16, ways=4)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
+    keys = rng.integers(0, 500, 64).astype(np.uint32)
+    owner, pos, bl = sc._bucket(keys)
+    assert bl >= 8 and bl & (bl - 1) == 0
+    # (owner, pos) pairs are unique and order-preserving per shard
+    pairs = set(zip(owner.tolist(), pos.tolist()))
+    assert len(pairs) == len(keys)
+    for d in range(4):
+        lanes = np.nonzero(owner == d)[0]
+        assert (np.diff(pos[lanes]) > 0).all() if len(lanes) > 1 else True
+
+
+@pytest.mark.parametrize("policy", [Policy.LRU, Policy.LFU, Policy.FIFO])
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_sharded_matches_single_device(policy, num_shards, rng):
+    """Hits, evictions and final keys/vals are identical to the unsharded
+    cache: every set's requests land in one shard in arrival order, so the
+    per-set conflict resolution is unchanged (DESIGN.md §5)."""
+    gcfg = KWayConfig(num_sets=16, ways=4, policy=policy)
+    be = make_backend("jnp", gcfg)
+    st_single = be.init()
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=num_shards))
+    st_shard = sc.init()
+    for step in range(10):
+        keys = rng.integers(0, 200, 32).astype(np.uint32)
+        keys[0] = keys[1]  # duplicate in batch
+        vals = keys.astype(np.int32)
+        st_single, h1, v1, ek1, ev1 = be.access(
+            st_single, jnp.asarray(keys), jnp.asarray(vals))
+        st_shard, h2, v2, ek2, ev2 = sc.access(st_shard, keys, vals)
+        np.testing.assert_array_equal(np.asarray(h1), h2)
+        np.testing.assert_array_equal(np.asarray(v1), v2)
+        np.testing.assert_array_equal(np.asarray(ev1), ev2)
+        np.testing.assert_array_equal(np.asarray(ek1)[np.asarray(ev1)],
+                                      ek2[ev2])
+    gv = sc.global_view(st_shard)
+    np.testing.assert_array_equal(np.asarray(gv.keys),
+                                  np.asarray(st_single.keys))
+    np.testing.assert_array_equal(np.asarray(gv.vals),
+                                  np.asarray(st_single.vals))
+
+
+def test_single_shard_is_plain_backend(rng):
+    gcfg = KWayConfig(num_sets=8, ways=2, policy=Policy.LRU)
+    be = make_backend("jnp", gcfg)
+    st1 = be.init()
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=1))
+    st2 = sc.init()
+    for _ in range(5):
+        keys = rng.integers(0, 64, 16).astype(np.uint32)
+        st1, h1, *_ = be.access(st1, jnp.asarray(keys),
+                                jnp.asarray(keys.astype(np.int32)))
+        st2, h2, *_ = sc.access(st2, keys, keys.astype(np.int32))
+        np.testing.assert_array_equal(np.asarray(h1), h2)
+    np.testing.assert_array_equal(np.asarray(st1.keys),
+                                  np.asarray(sc.global_view(st2).keys))
+
+
+def test_sharded_config_validation():
+    with pytest.raises(AssertionError):
+        ShardedConfig(cache=KWayConfig(num_sets=8, ways=2), num_shards=3)
+    with pytest.raises(AssertionError):
+        ShardedConfig(cache=KWayConfig(num_sets=4, ways=2), num_shards=8)
+
+
+def test_sharded_rejects_host_python_backend():
+    """The ref oracle is host Python — it cannot be vmapped/shard_mapped."""
+    cfg = ShardedConfig(cache=KWayConfig(num_sets=8, ways=2), num_shards=2,
+                        backend="ref")
+    with pytest.raises(ValueError, match="host Python"):
+        ShardedCache(cfg)
+    from repro.core.simulate import SimConfig, replay_batched
+    sim = SimConfig(KWayConfig(num_sets=8, ways=2), backend="ref")
+    with pytest.raises(ValueError, match="sharded"):
+        replay_batched(sim, np.arange(64, dtype=np.uint32), batch=8, shards=2)
+
+
+def test_replay_batched_sharded_matches():
+    from repro.core.simulate import SimConfig, replay_batched
+    from repro.core import traces
+    tr = traces.generate("zipf", 4096, seed=5, catalog=1 << 12)
+    sim = SimConfig(KWayConfig(num_sets=64, ways=4, policy=Policy.LRU))
+    h1 = replay_batched(sim, tr, batch=64)
+    h4 = replay_batched(sim, tr, batch=64, shards=4)
+    assert h1 == pytest.approx(h4, abs=1e-9)
