@@ -1,22 +1,6 @@
-"""Shared benchmark utilities: timing jitted callables, CSV emission."""
-import time
-
-import jax
-
-
-def time_jitted(fn, *args, iters=20, warmup=3):
-    """Median wall time per call of an already-jitted fn (seconds)."""
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+"""Shared benchmark utilities: CSV emission.  Timing helpers live in
+``repro.eval.timing`` (one measurement path); re-exported for back-compat."""
+from repro.eval.timing import time_jitted  # noqa: F401
 
 
 def emit(table, name, value, extra=""):

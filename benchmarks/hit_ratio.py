@@ -1,43 +1,35 @@
-"""Hit ratio vs associativity (paper Figs. 4-13).
+"""Hit ratio vs associativity (paper Figs. 4-13) — thin shim over repro.eval.
 
-For each trace family × policy: k ∈ {4, 8, ..} ways, sampled-8, and fully
-associative.  Reproduces the paper's central claim: the k=8 line sits on the
-fully-associative line.
+The measurement lives in ``repro.eval.figures.hit_ratio_vs_associativity``
+(stacked, vmapped sweep; see DESIGN.md §7); this script keeps the historical
+``table,config,hit_ratio`` CSV row format for eyeballing and CI smoke.
+Values are the figure's grid, not the pre-eval script's: non-quick runs
+report 3-seed means over the full family list (including ``recency``),
+where the old script printed a single seed-42 replay.
 """
-import numpy as np
-
 from benchmarks.common import emit
-from repro.core import admission, traces
-from repro.core.kway import KWayConfig, fully_associative
-from repro.core.policies import Policy
-from repro.core.simulate import SimConfig, replay
-
-CAPACITY = 1024
-DEFAULT_TRACES = ("zipf", "zipf_shift", "scan_loop", "oltp_mix")
-DEFAULT_POLICIES = (Policy.LRU, Policy.LFU, Policy.HYPERBOLIC)
+from repro.eval import figures
 
 
-def run(n=60_000, ks=(4, 8, 32), trace_families=DEFAULT_TRACES,
-        policies=DEFAULT_POLICIES, tinylfu_for=(Policy.LFU,)):
+def run(quick=False, tinylfu=True):
     print("table,config,hit_ratio")
-    for fam in trace_families:
-        tr = traces.generate(fam, n, seed=42)
-        for pol in policies:
-            for k in ks:
-                cfg = KWayConfig(num_sets=CAPACITY // k, ways=k, policy=pol)
-                hr = replay(SimConfig(cfg), tr)
-                emit("hit_ratio", f"{fam}/{pol.name}/k{k}", f"{hr:.4f}")
-            # sampled-8 on the fully associative cache (Redis style)
-            scfg = fully_associative(CAPACITY, pol, sample=8)
-            emit("hit_ratio", f"{fam}/{pol.name}/sampled8",
-                 f"{replay(SimConfig(scfg), tr):.4f}")
-            fcfg = fully_associative(CAPACITY, pol)
-            emit("hit_ratio", f"{fam}/{pol.name}/full",
-                 f"{replay(SimConfig(fcfg), tr):.4f}")
-            if pol in tinylfu_for:
-                cfg8 = KWayConfig(num_sets=CAPACITY // 8, ways=8, policy=pol)
-                hr = replay(SimConfig(cfg8, admission.for_capacity(CAPACITY)), tr)
-                emit("hit_ratio", f"{fam}/{pol.name}/k8+tinylfu", f"{hr:.4f}")
+    # jnp only: backend parity is covered by tests + repro.eval artifacts
+    _, records, skipped = figures.hit_ratio_vs_associativity(
+        quick=quick, backends=("jnp",))
+    for r in records:
+        emit("hit_ratio", f"{r['family']}/{r['policy']}/{r['assoc']}",
+             f"{r['value']:.4f}")
+    if tinylfu:
+        # tinylfu rows only — the "none" half is the k8 sweep above
+        _, records, skipped_adm = figures.admission_ablation(
+            quick=quick, admissions=("tinylfu",))
+        skipped = skipped + skipped_adm
+        for r in records:
+            emit("hit_ratio",
+                 f"{r['family']}/{r['policy']}/{r['assoc']}+tinylfu",
+                 f"{r['value']:.4f}")
+    for s in skipped:
+        print(f"# skipped {s}")
 
 
 if __name__ == "__main__":

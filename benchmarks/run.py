@@ -5,6 +5,10 @@
 Sections: hit_ratio (Figs 4-13), throughput (Figs 14-26),
 synthetic_mix (Figs 27-30), theorem41 (§4), kernels, serving, roofline
 (reads dryrun_results.json when present).
+
+The figure sections are thin shims over ``repro.eval`` (DESIGN.md §7) — for
+machine-readable, baseline-gated artifacts use
+``python -m repro.eval --fig <name> [--quick] [--baseline f.json]``.
 """
 import argparse
 import json
@@ -54,14 +58,9 @@ def main():
     shards = (1, args.shards) if args.shards > 1 else (1,)
 
     sections = {
-        "hit_ratio": (lambda: hit_ratio.run(n=20_000, ks=(4, 8),
-                                            trace_families=("zipf", "scan_loop"),
-                                            policies=(hit_ratio.Policy.LRU,
-                                                      hit_ratio.Policy.LFU)))
-        if args.quick else hit_ratio.run,
+        "hit_ratio": lambda: hit_ratio.run(quick=args.quick),
         "throughput": (lambda: throughput.run(
-            batches=(64, 256) if args.quick else (64, 256, 1024),
-            backends=backends, shards=shards)),
+            quick=args.quick, backends=backends, shards=shards)),
         "synthetic_mix": synthetic_mix.run,
         "theorem41": (lambda: theorem41.run(ks=(8, 64), trials=10))
         if args.quick else theorem41.run,

@@ -1,39 +1,15 @@
-"""End-to-end serving benchmark: prefix-cache effect on a shared-prefix
-request mix (the framework-level analogue of the paper's trace runs)."""
-import time
-
-import jax
-import numpy as np
-
+"""End-to-end serving benchmark — thin shim over
+``repro.eval.figures.serving`` (prefix-cache effect on a shared-prefix
+request mix)."""
 from benchmarks.common import emit
-from repro import configs
-from repro.core.policies import Policy
-from repro.models import lm
-from repro.serve.engine import Engine, EngineConfig
+from repro.eval import figures
 
 
 def run(requests=12, prefix_len=48):
     print("table,config,value")
-    cfg = configs.get("deepseek-7b").smoke
-    params = lm.init_params(cfg, jax.random.key(0))
-    rng = np.random.default_rng(1)
-    shared = rng.integers(2, 400, prefix_len)
-    prompts = [np.concatenate([shared, rng.integers(2, 400, 8)])
-               for _ in range(requests)]
-    for policy in (Policy.LRU, Policy.LFU):
-        eng = Engine(cfg, params, EngineConfig(
-            page=8, num_sets=32, ways=8, policy=policy, max_batch=4,
-            max_seq=256, private_pages=128))
-        t0 = time.time()
-        for pr in prompts:
-            eng.submit(pr, max_new=8)
-        fin = eng.run()
-        dt = time.time() - t0
-        toks = sum(len(r.generated) for r in fin.values())
-        emit("serving", f"{policy.name}/tok_per_s", f"{toks/dt:.1f}")
-        emit("serving", f"{policy.name}/prefix_hit_ratio",
-             f"{eng.hit_ratio():.3f}")
-        emit("serving", f"{policy.name}/evictions", eng.stats["evictions"])
+    _, records, _ = figures.serving(requests=requests, prefix_len=prefix_len)
+    for r in records:
+        emit("serving", r["id"], r["value"])
 
 
 if __name__ == "__main__":

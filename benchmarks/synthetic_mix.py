@@ -1,53 +1,15 @@
-"""Synthetic hit-ratio mixes (paper Figs. 27-30): 100% miss, 100% hit,
-95% and 90% hit workloads; get/put throughput of each implementation."""
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import emit, time_jitted
-from repro.core import kway
-from repro.core.kway import KWayConfig, fully_associative
-from repro.core.policies import Policy
-
-CAPACITY = 4096
-BATCH = 512
-
-
-def _mk_stream(kind, rng, n):
-    if kind == "miss100":   # every key unique
-        return rng.permutation(np.arange(n, dtype=np.uint32) + (1 << 20))
-    resident = rng.integers(0, CAPACITY // 2, n).astype(np.uint32)
-    if kind == "hit100":
-        return resident
-    p_miss = {"hit95": 0.05, "hit90": 0.10}[kind]
-    miss = (np.arange(n, dtype=np.uint32) + (1 << 20))
-    take_miss = rng.random(n) < p_miss
-    return np.where(take_miss, miss, resident).astype(np.uint32)
+"""Synthetic hit-ratio mixes (paper Figs. 27-30) — thin shim over
+``repro.eval.figures.synthetic_mix``."""
+from benchmarks.common import emit
+from repro.eval import figures
 
 
 def run(kinds=("miss100", "hit100", "hit95", "hit90")):
     print("table,config,mops_per_s")
-    rng = np.random.default_rng(11)
-    impls = {
-        "kway-soa": KWayConfig(num_sets=CAPACITY // 8, ways=8, policy=Policy.LRU),
-        "sampled": KWayConfig(num_sets=CAPACITY // 128, ways=128,
-                              policy=Policy.LRU, sample=8),
-        "full": fully_associative(CAPACITY, Policy.LRU),
-    }
-    for kind in kinds:
-        stream = _mk_stream(kind, rng, BATCH)
-        for name, cfg in impls.items():
-            state = kway.make_cache(cfg)
-            resident = jnp.asarray(
-                rng.integers(0, CAPACITY // 2, CAPACITY).astype(np.uint32))
-            for chunk in resident.reshape(-1, 512):
-                state, _, _, _, _ = kway.access(cfg, state, chunk,
-                                                chunk.astype(jnp.int32))
-            keys = jnp.asarray(stream)
-            fn = jax.jit(lambda s, k: kway.access(cfg, s, k,
-                                                  k.astype(jnp.int32))[0])
-            dt = time_jitted(fn, state, keys)
-            emit("synthetic_mix", f"{kind}/{name}", f"{BATCH / dt / 1e6:.3f}")
+    _, records, _ = figures.synthetic_mix(kinds=kinds)
+    for r in records:
+        emit("synthetic_mix", r["id"].rsplit("/batch", 1)[0],
+             f"{r['value']:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,116 +1,19 @@
-"""Cache throughput (paper Figs. 14-26 analogue).
+"""Cache throughput (paper Figs. 14-26 analogue) — thin shim over repro.eval.
 
-Thread count becomes batch size (DESIGN.md §2).  Implementations compared:
-  kway-soa  — KW-WFSC analogue (separate fingerprint/counter lanes)
-  kway-aos  — KW-WFA analogue (interleaved record array, gathered)
-  sampled   — fully associative + sample-8 victim selection (Redis)
-  full      — fully associative, exact victim scan
-Measured: millions of get+put ops/sec of the jitted access() on a real
-zipf trace stream.
-
-Two further sections exercise the unified CacheBackend layer (DESIGN.md §3,
-§5):
-  backend/* — the same kway-soa configuration driven through the "jnp",
-    "pallas" (interpret off-TPU) and "ref" (sequential Python oracle)
-    backends;
-  sharded/* — the set-sharded execution layer, 1 shard vs N shards
-    (shard_map on a real mesh, vmap emulation on a single device),
-    including the host-side bucketing cost.
+The measurement lives in ``repro.eval.figures.throughput_vs_batch`` (layout /
+backend / sharded sections); this script keeps the historical
+``table,config,mops_per_s`` CSV surface.
 """
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import emit, time_jitted
-from repro.core import kway, traces
-from repro.core.backend import make_backend
-from repro.core.kway import KWayConfig, fully_associative
-from repro.core.policies import Policy
-from repro.core.sharded import ShardedCache, ShardedConfig
-
-CAPACITY = 4096
+from benchmarks.common import emit
+from repro.eval import figures
 
 
-def _impl_configs(policy):
-    return {
-        "kway-soa": KWayConfig(num_sets=CAPACITY // 8, ways=8, policy=policy,
-                               layout="soa"),
-        "kway-aos": KWayConfig(num_sets=CAPACITY // 8, ways=8, policy=policy,
-                               layout="aos"),
-        "sampled": KWayConfig(num_sets=CAPACITY // 128, ways=128, policy=policy,
-                              sample=8),  # Redis-like: big buckets, sample 8
-        "full": fully_associative(CAPACITY, policy),
-    }
-
-
-def _warm(cfg, tr, n_warm):
-    state = kway.make_cache(cfg)
-    warm = jnp.asarray(tr[:n_warm].reshape(-1, 512))
-    for chunk in warm:
-        state, _, _, _, _ = kway.access(cfg, state, chunk,
-                                        chunk.astype(jnp.int32))
-    return state
-
-def run(batches=(64, 256, 1024), policy=Policy.LRU, n_warm=20_480,
-        backends=("jnp", "pallas", "ref"), shards=(1, 4)):
+def run(quick=False, backends=("jnp", "pallas", "ref"), shards=(1, 4)):
     print("table,config,mops_per_s")
-    tr = traces.generate("zipf", n_warm + 4096, seed=7, catalog=1 << 14)
-    soa_state = None
-    for name, cfg in _impl_configs(policy).items():
-        state = _warm(cfg, tr, n_warm)
-        if name == "kway-soa":
-            soa_state = state   # reused by the backend section below
-        for b in batches:
-            keys = jnp.asarray(tr[n_warm:n_warm + b])
-            vals = keys.astype(jnp.int32)
-            fn = jax.jit(lambda s, k, v: kway.access(cfg, s, k, v)[0])
-            dt = time_jitted(fn, state, keys, vals)
-            emit("throughput", f"{name}/batch{b}", f"{b / dt / 1e6:.3f}")
-
-    # ---- unified backend layer: jnp vs pallas(interpret) vs ref oracle ----
-    cfg = _impl_configs(policy)["kway-soa"]
-    # states are backend-interchangeable: reuse the warm kway-soa state
-    state = soa_state if soa_state is not None else _warm(cfg, tr, n_warm)
-    for bname in backends:
-        be = make_backend(bname, cfg)
-        # interpret-mode pallas compiles slowly at large B; the ref oracle is
-        # sequential Python — keep their batches proportionate.
-        bl = {"jnp": batches, "pallas": tuple(b for b in batches if b <= 256),
-              "ref": (64,)}.get(bname, batches)
-        for b in bl:
-            keys = jnp.asarray(tr[n_warm:n_warm + b])
-            vals = keys.astype(jnp.int32)
-            if bname == "ref":
-                t0 = time.perf_counter()
-                iters = 3
-                for _ in range(iters):
-                    be.access(state, keys, vals)
-                dt = (time.perf_counter() - t0) / iters
-            else:
-                fn = jax.jit(lambda s, k, v: be.access(s, k, v)[0])
-                dt = time_jitted(fn, state, keys, vals)
-            emit("throughput", f"backend-{bname}/batch{b}", f"{b / dt / 1e6:.3f}")
-
-    # ---- set-sharded execution: 1 shard vs N shards ----------------------
-    b = max(bb for bb in batches)
-    for ns in shards:
-        sc = ShardedCache(ShardedConfig(cache=cfg, num_shards=ns))
-        st = sc.init()
-        chunk = np.asarray(tr[:b], np.uint32)
-        for _ in range(3):  # warm the jit caches + shard states
-            st, *_ = sc.access(st, chunk, chunk.astype(np.int32))
-        t0 = time.perf_counter()
-        iters = 10
-        for i in range(iters):
-            off = n_warm + (i * b) % 4096
-            chunk = np.asarray(tr[off:off + b], np.uint32)
-            if len(chunk) < b:
-                chunk = np.asarray(tr[:b], np.uint32)
-            st, *_ = sc.access(st, chunk, chunk.astype(np.int32))
-        dt = (time.perf_counter() - t0) / iters
-        emit("throughput", f"sharded-{ns}shard/batch{b}", f"{b / dt / 1e6:.3f}")
+    _, records, _ = figures.throughput_vs_batch(
+        quick=quick, backends=backends, shards=shards)
+    for r in records:
+        emit("throughput", r["id"], f"{r['value']:.3f}")
 
 
 if __name__ == "__main__":

@@ -188,19 +188,27 @@ def _first_occurrence(qkeys: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
     return first & active
 
 
+def sampled_way_ids(sample: int, ways: int, times: jnp.ndarray) -> jnp.ndarray:
+    """Pseudo-random way ids (with replacement) for sampled victim selection
+    (Redis-style, O(sample)).  ``times`` int32 [...] -> int32 [..., sample].
+    The single source of truth for the draw scheme — the sweep runner
+    (repro/eval/runner.py) replays it bit-for-bit."""
+    draw = jnp.arange(sample, dtype=jnp.uint32)
+    h = hashing.hash_u32(
+        draw + times[..., None].astype(jnp.uint32) * jnp.uint32(2654435761),
+        seed=0x5A5A,
+    )
+    return (h % jnp.uint32(ways)).astype(jnp.int32)
+
+
 def _victim_order(cfg: KWayConfig, state: KWayState, sets, set_keys, times):
     """Per request: ways of its set ordered worst-victim-first. [B, k]
     (or [B, sample] for sampled policies — see below)."""
     if cfg.sample > 0 and cfg.sample < cfg.ways:
-        # Sampled policy (Redis-style), O(sample) like the original: draw
-        # `sample` pseudo-random ways (with replacement), score only those.
+        # Sampled policy: draw `sample` ways (with replacement), score only
+        # those.
         m = cfg.sample
-        draw = jnp.arange(m, dtype=jnp.uint32)[None, :]
-        h = hashing.hash_u32(
-            draw + (times[:, None].astype(jnp.uint32) * jnp.uint32(2654435761)),
-            seed=0x5A5A,
-        )
-        way_ids = (h % jnp.uint32(cfg.ways)).astype(jnp.int32)      # [B, m]
+        way_ids = sampled_way_ids(m, cfg.ways, times)               # [B, m]
         ma = state.meta_a[sets[:, None], way_ids]
         mb = state.meta_b[sets[:, None], way_ids]
         keys_s = state.keys[sets[:, None], way_ids]

@@ -103,3 +103,44 @@ def on_insert(
     if policy == Policy.HYPERBOLIC:
         return one, now_arr  # (n=1, t0=now)
     raise ValueError(f"unknown policy {policy}")
+
+
+# ---------------------------------------------------------------------------
+# Dynamic dispatch — policy as a *traced* value.
+#
+# The three functions above branch on `policy` in Python, so every policy is
+# its own XLA program.  The sweep runner (repro/eval/runner.py) stacks
+# same-shape configurations with different policies into one compiled replay;
+# for that the policy must be data, not a static argument.  Each _dyn variant
+# evaluates every policy's (cheap, elementwise) transition and selects by the
+# traced `policy_idx` — one compilation covers all policies.
+# ---------------------------------------------------------------------------
+
+def _select_pair(policy_idx, pairs):
+    sel = [policy_idx == int(p) for p in Policy]
+    return (jnp.select(sel, [a for a, _ in pairs]),
+            jnp.select(sel, [b for _, b in pairs]))
+
+
+def victim_scores_dyn(
+    policy_idx: jnp.ndarray,
+    meta_a: jnp.ndarray,
+    meta_b: jnp.ndarray,
+    now: jnp.ndarray,
+    stored_keys: jnp.ndarray,
+) -> jnp.ndarray:
+    """`victim_scores` with `policy_idx` as a traced int32 scalar/array."""
+    branches = [victim_scores(p, meta_a, meta_b, now, stored_keys)
+                for p in Policy]
+    return jnp.select([policy_idx == int(p) for p in Policy], branches)
+
+
+def on_hit_dyn(policy_idx, meta_a, meta_b, now):
+    """`on_hit` with `policy_idx` as a traced value."""
+    return _select_pair(policy_idx, [on_hit(p, meta_a, meta_b, now)
+                                     for p in Policy])
+
+
+def on_insert_dyn(policy_idx, now, shape: tuple[int, ...] = ()):
+    """`on_insert` with `policy_idx` as a traced value."""
+    return _select_pair(policy_idx, [on_insert(p, now, shape) for p in Policy])

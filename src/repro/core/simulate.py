@@ -94,15 +94,31 @@ def replay(sim: SimConfig, trace: np.ndarray) -> float:
 def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
     be = make_backend(sim.backend, sim.cache)
     cache = be.init()
+    sketch = admission.make_sketch(sim.tinylfu) if sim.tinylfu else None
     steps = trace.shape[0] // batch
     chunks = trace[: steps * batch].reshape(steps, batch)
 
     def step(carry, keys):
-        cache, hits = carry
-        cache, hit, _, _, _ = be.access(cache, keys, keys.astype(jnp.int32))
-        return (cache, hits + jnp.sum(hit.astype(jnp.int32))), ()
+        cache, sketch, hits = carry
+        if sim.tinylfu is None:
+            cache, hit, _, _, _ = be.access(cache, keys, keys.astype(jnp.int32))
+        else:
+            # Same phase order as the sequential path, per chunk: record the
+            # accesses, peek each request's prospective victim, gate admission.
+            # Duplicate keys within a chunk coalesce in the sketch (documented
+            # record() approximation), so batched+TinyLFU tracks — not equals —
+            # sequential+TinyLFU; tests bound the hit-ratio gap.
+            sketch = admission.record(sim.tinylfu, sketch, keys)
+            vkeys, vvalid = be.peek_victims(cache, keys)
+            ok = admission.admit(sim.tinylfu, sketch, keys, vkeys, vvalid)
+            cache, hit, _, _, _ = be.access(
+                cache, keys, keys.astype(jnp.int32), admit_on_miss=ok
+            )
+        return (cache, sketch, hits + jnp.sum(hit.astype(jnp.int32))), ()
 
-    (cache, hits), _ = jax.lax.scan(step, (cache, jnp.zeros((), jnp.int32)), chunks)
+    (cache, _, hits), _ = jax.lax.scan(
+        step, (cache, sketch, jnp.zeros((), jnp.int32)), chunks
+    )
     return hits, cache
 
 
@@ -114,6 +130,12 @@ def replay_batched(
     otherwise) with host-side key bucketing per chunk."""
     trace = np.asarray(trace, np.uint32)
     n = (trace.shape[0] // batch) * batch
+    if sim.tinylfu is not None and shards > 1:
+        raise ValueError(
+            "TinyLFU admission is not wired into the set-sharded layer "
+            "(the sketch is global, shards are independent); use shards=1")
+    if sim.tinylfu is not None and sim.backend == "ref":
+        raise ValueError("TinyLFU replay is not wired for the ref backend")
     if shards > 1:
         if sim.backend == "ref":
             raise ValueError(

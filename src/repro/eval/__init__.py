@@ -1,0 +1,20 @@
+"""repro.eval — the paper-figure sweep subsystem.
+
+One measurement path for every figure the paper's evidence rests on:
+
+  * ``runner``    — declarative sweep grids (trace family × policy × ways ×
+    backend × admission), replayed through a config-stacked, vmapped
+    ``lax.scan`` that compiles once per cache *shape* instead of once per
+    config (DESIGN.md §7).
+  * ``figures``   — figure-by-figure reproduction entry points
+    (``hit_ratio_vs_associativity``, ``throughput_vs_batch``,
+    ``sampled_vs_limited``, ``admission_ablation``, ...).
+  * ``artifacts`` — schema-versioned ``BENCH_*.json`` artifacts with
+    env/seed/config provenance, plus baseline comparison with tolerance
+    gating (the CI regression guard).
+  * ``python -m repro.eval --fig <name> [--quick] [--baseline f.json]`` —
+    the CLI over all of the above.
+
+The ad-hoc ``benchmarks/*.py`` scripts are thin shims over this package.
+"""
+from repro.eval import artifacts, figures, runner  # noqa: F401

@@ -1,0 +1,122 @@
+"""Schema-versioned benchmark artifacts + baseline regression gating.
+
+Every figure run produces one JSON artifact (``BENCH_<figure>.json`` by
+default) that is machine-joinable against a checked-in baseline:
+
+    {
+      "schema_version": 1,
+      "kind": "repro.eval.artifact",
+      "figure": "hit_ratio_vs_associativity",
+      "env":    {python/jax/numpy versions, platform, device kind/count},
+      "spec":   {the declarative sweep grid, incl. seeds and trace families},
+      "skipped": ["...unsupported combos, never silently dropped..."],
+      "records": [{"id": "zipf/LRU/k8/jnp/none", "metric": "hit_ratio",
+                   "value": 0.83, "per_seed": [...], "comparable": true,
+                   ...config fields...}, ...]
+    }
+
+``records[*].id`` is the stable join key.  Records with ``comparable: true``
+(deterministic metrics — hit ratios) are tolerance-gated against the
+baseline; timing records (``mops_per_s``, ``tok_per_s``) carry
+``comparable: false`` and are stored for trend inspection only, because CI
+machines differ.  Baseline workflow: see DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+import time
+
+SCHEMA_VERSION = 1
+KIND = "repro.eval.artifact"
+DEFAULT_TOL = 0.01  # hit ratios are deterministic; tol absorbs lib drift
+
+
+def environment() -> dict:
+    import jax
+    import numpy as np
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:  # pragma: no cover - jaxlib always ships with jax
+        jaxlib_version = "unknown"
+    return {
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_version,
+        "numpy": np.__version__,
+        "platform": platform.platform(),
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
+def make_artifact(figure: str, spec: dict, records: list,
+                  skipped: list | None = None) -> dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "kind": KIND,
+        "figure": figure,
+        "created_unix": int(time.time()),
+        "env": environment(),
+        "spec": spec,
+        "skipped": skipped or [],
+        "records": records,
+    }
+
+
+def write_artifact(path: str, artifact: dict) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_artifact(path: str) -> dict:
+    with open(path) as f:
+        art = json.load(f)
+    if art.get("kind") != KIND:
+        raise ValueError(f"{path}: not a {KIND} file")
+    if art.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: schema_version {art.get('schema_version')} != "
+            f"{SCHEMA_VERSION} — regenerate the baseline "
+            "(python -m repro.eval ... --out <baseline>)")
+    return art
+
+
+def compare_to_baseline(fresh: dict, baseline: dict,
+                        tol: float = DEFAULT_TOL) -> list[str]:
+    """Diff a fresh artifact against a baseline.  Returns breach strings
+    (empty == pass).  Rules:
+
+      * every ``comparable`` baseline record must exist in the fresh run
+        (missing coverage is a breach, not a skip);
+      * |fresh - baseline| must be <= the record's ``tol`` (or ``tol`` arg);
+      * non-comparable (timing) records are ignored.
+    """
+    if fresh.get("figure") != baseline.get("figure"):
+        return [f"figure mismatch: fresh={fresh.get('figure')!r} "
+                f"baseline={baseline.get('figure')!r}"]
+    fresh_by_id = {r["id"]: r for r in fresh["records"]}
+    breaches = []
+    for base in baseline["records"]:
+        if not base.get("comparable", False):
+            continue
+        rid = base["id"]
+        new = fresh_by_id.get(rid)
+        if new is None:
+            breaches.append(f"{rid}: present in baseline, missing from run")
+            continue
+        limit = base.get("tol", tol)
+        delta = new["value"] - base["value"]
+        if abs(delta) > limit:
+            breaches.append(
+                f"{rid}: {base['metric']} {new['value']:.4f} vs baseline "
+                f"{base['value']:.4f} (delta {delta:+.4f} > tol {limit})")
+    return breaches

@@ -1,0 +1,27 @@
+"""Timing helpers shared by the throughput figures and benchmark shims."""
+import time
+
+import jax
+
+
+def time_jitted(fn, *args, iters=20, warmup=3):
+    """Median wall time per call of an already-jitted fn (seconds)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def time_host(fn, *args, iters=3):
+    """Mean wall time per call of a host-side (non-jitted) callable."""
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters

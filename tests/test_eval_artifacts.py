@@ -1,0 +1,127 @@
+"""Artifact schema, baseline diffing, and the repro.eval CLI gate."""
+import copy
+import json
+
+import pytest
+
+from repro.eval import artifacts
+from repro.eval.__main__ import main as eval_main
+from repro.eval.figures import FIGURES
+
+
+def _records():
+    return [
+        {"id": "zipf/LRU/k8/jnp/none", "metric": "hit_ratio",
+         "value": 0.83, "comparable": True},
+        {"id": "zipf/LRU/full/jnp/none", "metric": "hit_ratio",
+         "value": 0.85, "comparable": True},
+        {"id": "kway-soa/batch64", "metric": "mops_per_s",
+         "value": 12.0, "comparable": False},
+    ]
+
+
+def _artifact():
+    return artifacts.make_artifact(
+        "hit_ratio_vs_associativity", {"n": 100}, _records(), ["sk"])
+
+
+def test_roundtrip(tmp_path):
+    art = _artifact()
+    assert art["schema_version"] == artifacts.SCHEMA_VERSION
+    assert art["env"]["jax"] and art["env"]["python"]
+    path = artifacts.write_artifact(str(tmp_path / "BENCH_x.json"), art)
+    loaded = artifacts.load_artifact(path)
+    assert loaded["records"] == art["records"]
+    assert loaded["skipped"] == ["sk"]
+
+
+def test_load_rejects_foreign_and_stale(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"kind": "something-else"}))
+    with pytest.raises(ValueError, match="not a"):
+        artifacts.load_artifact(str(p))
+    art = _artifact()
+    art["schema_version"] = artifacts.SCHEMA_VERSION + 1
+    p.write_text(json.dumps(art))
+    with pytest.raises(ValueError, match="schema_version"):
+        artifacts.load_artifact(str(p))
+
+
+def test_compare_passes_on_identical():
+    assert artifacts.compare_to_baseline(_artifact(), _artifact()) == []
+
+
+def test_compare_flags_injected_regression():
+    fresh, base = _artifact(), _artifact()
+    fresh["records"][0]["value"] -= 0.05     # a real hit-ratio regression
+    breaches = artifacts.compare_to_baseline(fresh, base, tol=0.01)
+    assert len(breaches) == 1 and "zipf/LRU/k8" in breaches[0]
+
+
+def test_compare_ignores_timing_records():
+    fresh, base = _artifact(), _artifact()
+    fresh["records"][2]["value"] = 0.001     # 12000x slower: not a breach
+    assert artifacts.compare_to_baseline(fresh, base) == []
+
+
+def test_compare_flags_missing_coverage():
+    fresh, base = _artifact(), _artifact()
+    del fresh["records"][1]
+    breaches = artifacts.compare_to_baseline(fresh, base)
+    assert len(breaches) == 1 and "missing from run" in breaches[0]
+
+
+def test_compare_respects_per_record_tol():
+    fresh, base = _artifact(), _artifact()
+    base["records"][0]["tol"] = 0.2
+    fresh["records"][0]["value"] -= 0.1
+    assert artifacts.compare_to_baseline(fresh, base, tol=0.01) == []
+
+
+def test_compare_rejects_figure_mismatch():
+    fresh, base = _artifact(), _artifact()
+    base["figure"] = "throughput_vs_batch"
+    assert "figure mismatch" in artifacts.compare_to_baseline(fresh, base)[0]
+
+
+# ---------------------------------------------------------------------------
+# CLI — wired through a stub figure so the test is instant
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def stub_fig(monkeypatch):
+    state = {"records": _records()}
+
+    def fake(quick=False, progress=None):
+        return {"quick": quick}, copy.deepcopy(state["records"]), ["sk"]
+
+    monkeypatch.setitem(FIGURES, "hit_ratio",
+                        (fake, "hit_ratio_vs_associativity"))
+    return state
+
+
+def test_cli_writes_artifact(stub_fig, tmp_path):
+    out = tmp_path / "BENCH_hit.json"
+    assert eval_main(["--fig", "hit_ratio", "--quick", "--quiet",
+                      "--out", str(out)]) == 0
+    art = artifacts.load_artifact(str(out))
+    assert art["figure"] == "hit_ratio_vs_associativity"
+    assert art["spec"] == {"quick": True}
+    assert len(art["records"]) == 3
+
+
+def test_cli_baseline_gate_exits_nonzero_on_regression(
+        stub_fig, tmp_path, capsys):
+    base = tmp_path / "baseline.json"
+    out = tmp_path / "BENCH_hit.json"
+    # write the baseline from an identical run -> passes
+    assert eval_main(["--fig", "hit_ratio", "--quiet",
+                      "--out", str(base)]) == 0
+    assert eval_main(["--fig", "hit_ratio", "--quiet", "--out", str(out),
+                      "--baseline", str(base)]) == 0
+    # inject a hit-ratio regression -> exit 2 and a named breach
+    stub_fig["records"][0]["value"] -= 0.5
+    assert eval_main(["--fig", "hit_ratio", "--quiet", "--out", str(out),
+                      "--baseline", str(base)]) == 2
+    err = capsys.readouterr().err
+    assert "BASELINE BREACH" in err and "zipf/LRU/k8" in err

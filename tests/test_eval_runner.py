@@ -1,0 +1,124 @@
+"""repro.eval.runner — stacked-sweep correctness + compile-count guarantees.
+
+Two properties carry the subsystem:
+
+  * exactness — the stacked, vmapped, policy-dynamic replay produces the
+    SAME hit count as core/simulate.replay (the sequential B=1 backend
+    semantics), per policy, per associativity (incl. sampled and fully
+    associative), with and without TinyLFU, on jnp and pallas;
+  * economy — a grid compiles once per cache *shape*, not once per config
+    (the acceptance criterion of the sweep design).
+"""
+import numpy as np
+import pytest
+
+from repro.core import admission, traces
+from repro.core.kway import KWayConfig
+from repro.core.policies import Policy
+from repro.core.simulate import SimConfig, replay
+from repro.eval import runner
+from repro.eval.runner import HitRatioSpec, SweepPoint, assoc_shape
+
+ALL_POLICIES = (Policy.LRU, Policy.LFU, Policy.FIFO, Policy.RANDOM,
+                Policy.HYPERBOLIC)
+
+
+def _sequential(rec, capacity):
+    """Ground truth for one record via core/simulate.replay."""
+    cfg = KWayConfig(num_sets=rec["num_sets"], ways=rec["ways"],
+                     sample=rec["sample"], policy=Policy[rec["policy"]])
+    tl = (admission.for_capacity(capacity)
+          if rec["admission"] == "tinylfu" else None)
+    backend = rec["backend"]
+    tr = traces.generate(rec["family"], rec["n"], seed=rec["seeds"][0])
+    return replay(SimConfig(cfg, tl, backend=backend), tr)
+
+
+def test_assoc_shape():
+    assert assoc_shape("k8", 1024) == (128, 8, 0)
+    assert assoc_shape("full", 1024) == (1, 1024, 0)
+    assert assoc_shape("sampled8", 1024) == (1, 1024, 8)
+    with pytest.raises(ValueError):
+        assoc_shape("k3", 1024)   # capacity not divisible
+    with pytest.raises(ValueError):
+        assoc_shape("bogus", 1024)
+
+
+def test_stacked_replay_matches_sequential_all_policies():
+    """Every policy through one compiled program == per-policy sequential."""
+    spec = HitRatioSpec(
+        families=("zipf",), policies=ALL_POLICIES,
+        assoc=("k4", "sampled4", "full"), backends=("jnp",),
+        capacity=64, n=400, seeds=(5,))
+    records, skipped = runner.run_hit_ratio_sweep(spec)
+    assert not skipped
+    assert len(records) == len(ALL_POLICIES) * 3
+    for rec in records:
+        assert rec["value"] == pytest.approx(_sequential(rec, 64), abs=1e-9), \
+            rec["id"]
+
+
+def test_stacked_replay_matches_sequential_pallas():
+    spec = HitRatioSpec(
+        families=("zipf",), policies=(Policy.LRU, Policy.RANDOM),
+        assoc=("k4",), backends=("pallas",), capacity=64, n=300, seeds=(6,))
+    records, skipped = runner.run_hit_ratio_sweep(spec)
+    assert not skipped and len(records) == 2
+    for rec in records:
+        assert rec["value"] == pytest.approx(_sequential(rec, 64), abs=1e-9), \
+            rec["id"]
+
+
+def test_stacked_replay_matches_sequential_tinylfu():
+    spec = HitRatioSpec(
+        families=("zipf",), policies=(Policy.LFU,), assoc=("k4",),
+        backends=("jnp",), admissions=("tinylfu",),
+        capacity=64, n=400, seeds=(7,))
+    records, skipped = runner.run_hit_ratio_sweep(spec)
+    assert not skipped and len(records) == 1
+    assert records[0]["value"] == pytest.approx(
+        _sequential(records[0], 64), abs=1e-9)
+
+
+def test_compiles_once_per_shape_not_per_config():
+    """The acceptance criterion: O(shapes) compilations for O(configs) cells.
+
+    2 families × 3 policies × 2 associativities × 2 seeds = 24 replays, but
+    only 2 cache shapes — the policy is traced data (policies.*_dyn) and the
+    traces are stacked, so exactly 2 programs are built.
+    """
+    runner.reset_trace_counts()
+    spec = HitRatioSpec(
+        families=("zipf", "oltp_mix"),
+        policies=(Policy.LRU, Policy.LFU, Policy.FIFO),
+        assoc=("k4", "k8"), backends=("jnp",),
+        capacity=256, n=500, seeds=(1, 2))
+    points, _ = spec.expand()
+    assert len(points) == 24
+    records, _ = runner.run_hit_ratio_sweep(spec)
+    assert len(records) == 12          # 24 replays fold to 12 ids x 2 seeds
+    counts = runner.trace_counts()
+    assert sum(counts.values()) == 2, counts   # one compile per cache shape
+    runner.reset_trace_counts()
+
+
+def test_skips_are_loud():
+    """Unsupported combos are reported, never silently dropped."""
+    spec = HitRatioSpec(
+        families=("zipf",), policies=(Policy.LRU,),
+        assoc=("k4", "sampled8", "full"), backends=("jnp", "pallas", "ref"),
+        capacity=256, n=100, seeds=(1,))
+    points, skipped = spec.expand()
+    run_ids = {p.record_id for p in points}
+    assert "zipf/LRU/k4/pallas/none" in run_ids
+    assert any("sampled8/pallas" in s for s in skipped)
+    assert any("full/pallas" in s for s in skipped)
+    assert sum("ref" in s for s in skipped) == 3   # oracle never sweeps
+
+
+def test_record_ids_are_seed_stable():
+    p1 = SweepPoint(family="zipf", policy=Policy.LRU, assoc="k8",
+                    capacity=1024, seed=1)
+    p2 = SweepPoint(family="zipf", policy=Policy.LRU, assoc="k8",
+                    capacity=1024, seed=2)
+    assert p1.record_id == p2.record_id == "zipf/LRU/k8/jnp/none"

@@ -1,0 +1,143 @@
+"""Golden differential trace suite — the hash/probe-order tripwire.
+
+A pinned 512-request zipf trace is replayed at batch size 1 through all
+three CacheBackends (jnp / pallas / ref) and checked request-for-request
+against a checked-in expectation: per-request hit flags, the full eviction
+sequence, and the final cache contents.  Any change to the set-index hash,
+fingerprinting, victim scoring or probe order now fails HERE with a diff,
+instead of silently shifting hit ratios (which is exactly what happened to
+the in-memory hash values in PR 1).
+
+Golden update workflow (DESIGN.md §7) — only after deliberately changing
+hashing/policy semantics:
+
+    PYTHONPATH=src python tests/test_golden_trace.py --regen
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import traces
+from repro.core.backend import make_backend
+from repro.core.kway import KWayConfig
+from repro.core.policies import Policy
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "trace512.json")
+GOLDEN_KIND = "repro.golden.trace"
+N = 512
+CATALOG = 96          # ~1.5x the 64-slot cache: steady eviction pressure
+TRACE_SEED = 2026
+CONFIG = dict(num_sets=16, ways=4)
+# LRU: the paper's default; RANDOM: scores via hash(key, clock) — the most
+# hash-sensitive policy, so silent hash changes cannot survive this file.
+POLICIES = (Policy.LRU, Policy.RANDOM)
+
+
+def golden_trace() -> np.ndarray:
+    tr = traces.generate("zipf", N, seed=TRACE_SEED, catalog=CATALOG)
+    tr[::13] = 0          # key 0 must behave like any other key
+    return tr
+
+
+def replay_events(backend: str, policy: Policy) -> dict:
+    """B=1 replay -> {hits: "0101...", evictions: [[i, key]...],
+    final_keys: [...row-major, EMPTY as -1...]}."""
+    cfg = KWayConfig(policy=policy, **CONFIG)
+    be = make_backend(backend, cfg)
+    state = be.init()
+    hits, evictions = [], []
+    for i, t in enumerate(golden_trace()):
+        k = jnp.asarray([t], jnp.uint32)
+        state, hit, _, ek, ev = be.access(state, k, k.astype(jnp.int32))
+        hits.append("1" if bool(hit[0]) else "0")
+        if bool(ev[0]):
+            evictions.append([i, int(ek[0])])
+    from repro.core.hashing import EMPTY_KEY
+    keys = np.asarray(state.keys).astype(np.int64)
+    keys[keys == int(EMPTY_KEY)] = -1
+    return {"hits": "".join(hits), "evictions": evictions,
+            "final_keys": keys.ravel().tolist()}
+
+
+def regen() -> dict:
+    golden = {
+        "kind": GOLDEN_KIND, "version": 1,
+        "config": {**CONFIG, "n": N, "catalog": CATALOG,
+                   "trace_seed": TRACE_SEED,
+                   "policies": [p.name for p in POLICIES],
+                   "generator": "jnp backend, batch size 1"},
+        "per_policy": {p.name: replay_events("jnp", p) for p in POLICIES},
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1)
+        f.write("\n")
+    return golden
+
+
+def _load_golden() -> dict:
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    assert golden["kind"] == GOLDEN_KIND
+    return golden
+
+
+def test_golden_file_is_current_config():
+    g = _load_golden()["config"]
+    assert (g["num_sets"], g["ways"]) == (CONFIG["num_sets"], CONFIG["ways"])
+    assert g["n"] == N and g["trace_seed"] == TRACE_SEED
+    assert g["policies"] == [p.name for p in POLICIES]
+
+
+def _check(backend: str, policy: Policy):
+    want = _load_golden()["per_policy"][policy.name]
+    got = replay_events(backend, policy)
+    # hit flags: diff the first divergence for a readable failure
+    if got["hits"] != want["hits"]:
+        i = next(i for i, (a, b) in
+                 enumerate(zip(got["hits"], want["hits"])) if a != b)
+        raise AssertionError(
+            f"{backend}/{policy.name}: hit sequence diverges at request {i} "
+            f"(got {got['hits'][i]}, golden {want['hits'][i]}) — a hash or "
+            "probe-order change? If intentional, regen per DESIGN.md §7")
+    assert got["evictions"] == want["evictions"], \
+        f"{backend}/{policy.name}: eviction sequence drifted"
+    assert got["final_keys"] == want["final_keys"], \
+        f"{backend}/{policy.name}: final cache contents drifted"
+
+
+def test_golden_jnp_lru():
+    _check("jnp", Policy.LRU)
+
+
+def test_golden_jnp_random():
+    _check("jnp", Policy.RANDOM)
+
+
+def test_golden_pallas_lru():
+    _check("pallas", Policy.LRU)
+
+
+def test_golden_pallas_random():
+    _check("pallas", Policy.RANDOM)
+
+
+def test_golden_ref_lru():
+    _check("ref", Policy.LRU)
+
+
+def test_golden_ref_random():
+    _check("ref", Policy.RANDOM)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        g = regen()
+        n_ev = {p: len(v["evictions"]) for p, v in g["per_policy"].items()}
+        print(f"wrote {GOLDEN_PATH}: {N} requests, evictions={n_ev}")
+    else:
+        print(__doc__)
