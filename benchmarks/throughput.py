@@ -1,9 +1,19 @@
 """Cache throughput (paper Figs. 14-26 analogue) — thin shim over repro.eval.
 
 The measurement lives in ``repro.eval.figures.throughput_vs_batch`` (layout /
-backend / sharded sections); this script keeps the historical
-``table,config,mops_per_s`` CSV surface.
+backend / sharded sections, fused vs two-phase access variants with p50/p90
+steady-state timing).  Two surfaces:
+
+  * default: the historical ``table,config,mops_per_s`` CSV;
+  * ``--fused-compare``: the fused-vs-two-phase comparison — writes the
+    BENCH artifact, prints the comparison table, and (with
+    ``--hit-ratio-gate BASELINE``) replays a slice of the baseline grid
+    through the fused path and **fails (exit 3)** if any hit ratio diverges
+    from the checked-in baseline.  This is the CI perf-smoke entry point.
 """
+import argparse
+import sys
+
 from benchmarks.common import emit
 from repro.eval import figures
 
@@ -13,8 +23,130 @@ def run(quick=False, backends=("jnp", "pallas", "ref"), shards=(1, 4)):
     _, records, _ = figures.throughput_vs_batch(
         quick=quick, backends=backends, shards=shards)
     for r in records:
+        if r["metric"] != "mops_per_s":
+            continue        # ratio rows (speedup_x) don't fit the CSV unit
         emit("throughput", r["id"], f"{r['value']:.3f}")
 
 
+def fused_hit_ratio_gate(baseline_path: str, tol: float = 1e-6):
+    """Replay a slice of the baseline hit-ratio grid through the *fused*
+    access path (simulate.replay, B=1) and diff against the checked-in
+    values.  The fused path is bit-identical to two-phase, so the tolerance
+    is essentially zero — any divergence means the fusion broke semantics.
+
+    Returns (checked, breaches).
+    """
+    from repro.core import traces
+    from repro.core.kway import KWayConfig
+    from repro.core.policies import Policy
+    from repro.core.simulate import SimConfig, replay
+    from repro.eval import artifacts
+    from repro.eval.runner import assoc_shape
+
+    base = artifacts.load_artifact(baseline_path)
+    by_id = {r["id"]: r for r in base["records"]}
+    checked, breaches = 0, []
+    trace_cache = {}
+    for family in ("zipf", "scan_loop"):
+        for policy in (Policy.LRU, Policy.LFU):
+            for assoc in ("k8", "full"):
+                rid = f"{family}/{policy.name}/{assoc}/jnp/none"
+                rec = by_id.get(rid)
+                if rec is None:
+                    continue
+                seed, n = rec["seeds"][0], rec["n"]
+                if (family, seed, n) not in trace_cache:
+                    trace_cache[(family, seed, n)] = traces.generate(
+                        family, n, seed=seed)
+                s, k, sample = assoc_shape(assoc, rec["capacity"])
+                cfg = KWayConfig(num_sets=s, ways=k, policy=policy,
+                                 sample=sample)
+                hr = replay(SimConfig(cache=cfg),
+                            trace_cache[(family, seed, n)])
+                checked += 1
+                want = rec["per_seed"][0]
+                if abs(hr - want) > tol:
+                    breaches.append(
+                        f"{rid}: fused hit ratio {hr:.6f} vs baseline "
+                        f"{want:.6f} (|delta| > {tol})")
+    if checked == 0:
+        # a gate that matches nothing is a dead gate, not a green one
+        breaches.append(
+            f"no baseline record ids matched in {baseline_path} — id scheme "
+            "or baseline drift has turned this gate into a no-op")
+    return checked, breaches
+
+
+def _fused_compare(args) -> int:
+    from repro.eval import artifacts
+
+    spec, records, skipped = figures.throughput_vs_batch(
+        quick=args.quick, backends=("jnp", "pallas"), shards=(1,),
+        progress=None if args.quiet else
+        (lambda m: print(f"  [throughput] {m}", flush=True)))
+    art = artifacts.make_artifact("throughput_vs_batch", spec, records,
+                                  skipped)
+    out = args.out or "BENCH_throughput_vs_batch.json"
+    artifacts.write_artifact(out, art)
+
+    by_id = {r["id"]: r for r in records}
+    print("\nfused vs two-phase access (p50 steady-state):")
+    print(f"{'backend':<8} {'batch':>6} {'fused Mop/s':>12} "
+          f"{'two-phase Mop/s':>16} {'speedup':>8}")
+    slowdowns = []
+    for r in records:
+        if "-fused-speedup/" not in r["id"]:
+            continue
+        bname = r["id"].split("-")[1]
+        b = r["batch"]
+        fused = by_id[f"backend-{bname}-fused/batch{b}"]["value"]
+        two = by_id[f"backend-{bname}-twophase/batch{b}"]["value"]
+        print(f"{bname:<8} {b:>6} {fused:>12.3f} {two:>16.3f} "
+              f"{r['value']:>7.2f}x")
+        if bname == "jnp" and r["value"] < 1.0:
+            slowdowns.append(f"jnp/batch{b}: {r['value']:.2f}x")
+    print(f"\n{len(records)} records -> {out}")
+    if slowdowns:
+        # advisory, not fatal: CI machines are noisy, and the hit-ratio gate
+        # below is the correctness contract
+        print(f"WARNING: fused path slower than two-phase on "
+              f"{', '.join(slowdowns)}", file=sys.stderr)
+
+    if args.hit_ratio_gate:
+        checked, breaches = fused_hit_ratio_gate(args.hit_ratio_gate)
+        if breaches:
+            print(f"FUSED HIT-RATIO GATE FAILED vs {args.hit_ratio_gate}:",
+                  file=sys.stderr)
+            for b in breaches:
+                print(f"  {b}", file=sys.stderr)
+            return 3
+        print(f"fused hit-ratio gate ok: {checked} records match "
+              f"{args.hit_ratio_gate}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.throughput",
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fused-compare", action="store_true",
+                    help="fused-vs-two-phase comparison + BENCH artifact "
+                         "(the CI perf-smoke mode)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path for --fused-compare "
+                         "(default BENCH_throughput_vs_batch.json)")
+    ap.add_argument("--hit-ratio-gate", default=None, metavar="BASELINE",
+                    help="with --fused-compare: replay a slice of this "
+                         "baseline grid through the fused path; exit 3 on "
+                         "any hit-ratio divergence")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    if args.fused_compare:
+        return _fused_compare(args)
+    run(quick=args.quick)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -95,8 +95,11 @@ class CacheBackend:
         raise NotImplementedError
 
     # -- derived -----------------------------------------------------------
-    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
-        """-> (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B])"""
+    def access_two_phase(self, state, qkeys, qvals, admit_on_miss=None,
+                         enabled=None):
+        """The unfused get-then-put-on-miss composition — two probes, two
+        apply passes.  Kept on every backend as the differential oracle for
+        the fused ``access`` (tests assert bit-identity)."""
         state, hit, vals = self.get(state, qkeys, enabled=enabled)
         en = (~hit) if enabled is None else (enabled & ~hit)
         state, ek, ev, _, _ = self.put(
@@ -104,6 +107,17 @@ class CacheBackend:
         )
         vals = jnp.where(hit, vals, qvals)
         return state, hit, vals, ek, ev
+
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+        """-> (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B])
+
+        Backends with a fused single-probe path override this; the default
+        is the two-phase composition (the ref oracle replays sequentially
+        either way).
+        """
+        return self.access_two_phase(state, qkeys, qvals,
+                                     admit_on_miss=admit_on_miss,
+                                     enabled=enabled)
 
 
 @register_backend("jnp")
@@ -119,8 +133,18 @@ class JnpBackend(CacheBackend):
                         enabled=enabled, slot_value=slot_value)
 
     def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+        # fused single-probe path (kway.apply_access); bit-identical to
+        # access_two_phase
         return kway.access(self.cfg, state, qkeys, qvals,
                            admit_on_miss=admit_on_miss, enabled=enabled)
+
+    def access_donated(self, state, qkeys, qvals, admit_on_miss=None,
+                       enabled=None):
+        """Fused access with the ``state`` buffers donated to XLA —
+        in-place update of the 5 S×k lanes.  The caller must rebind and
+        never reuse the input state."""
+        return kway.access_donated(self.cfg, state, qkeys, qvals,
+                                   admit_on_miss, enabled)
 
     def peek_victims(self, state, qkeys):
         return kway.peek_victims(self.cfg, state, qkeys)
@@ -146,11 +170,24 @@ class PallasBackend(CacheBackend):
 
     def get(self, state, qkeys, enabled=None):
         from repro.kernels import ops
-        _, sets, hit, way, _, _ = ops.probe(
+        # need_victims=False kernel variant: the read path skips the
+        # victim-selection rounds entirely
+        _, sets, hit, way = ops.probe_hits(
             self.cfg, state, jnp.asarray(qkeys, jnp.uint32))
         if enabled is not None:
             hit = hit & enabled
         return kway.apply_get(self.cfg, state, sets, hit, way)
+
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+        # ONE kernel launch (fused probe + victim order on hit-updated
+        # metadata) + the shared fused apply — bit-identical to the
+        # two-launch access_two_phase path
+        from repro.kernels import ops
+        qk, sets, hit_raw, way, order = ops.fused_probe(
+            self.cfg, state, jnp.asarray(qkeys, jnp.uint32), enabled)
+        return kway.apply_access(
+            self.cfg, state, qk, qvals, sets, hit_raw, way,
+            admit_on_miss, enabled, order=order)
 
     def put(self, state, qkeys, qvals, admit=None, enabled=None, *,
             slot_value: bool = False):

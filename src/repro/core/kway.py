@@ -201,27 +201,53 @@ def sampled_way_ids(sample: int, ways: int, times: jnp.ndarray) -> jnp.ndarray:
     return (h % jnp.uint32(ways)).astype(jnp.int32)
 
 
-def _victim_order(cfg: KWayConfig, state: KWayState, sets, set_keys, times):
+def _victim_order_arrays(cfg: KWayConfig, keys_arr, meta_a_arr, meta_b_arr,
+                         sets, set_keys, times):
     """Per request: ways of its set ordered worst-victim-first. [B, k]
-    (or [B, sample] for sampled policies — see below)."""
+    (or [B, sample] for sampled policies — see below).  Takes the state
+    lanes as plain arrays so the fused access path can score on the
+    hit-updated metadata without materialising an intermediate state."""
     if cfg.sample > 0 and cfg.sample < cfg.ways:
         # Sampled policy: draw `sample` ways (with replacement), score only
         # those.
         m = cfg.sample
         way_ids = sampled_way_ids(m, cfg.ways, times)               # [B, m]
-        ma = state.meta_a[sets[:, None], way_ids]
-        mb = state.meta_b[sets[:, None], way_ids]
-        keys_s = state.keys[sets[:, None], way_ids]
+        ma = meta_a_arr[sets[:, None], way_ids]
+        mb = meta_b_arr[sets[:, None], way_ids]
+        keys_s = keys_arr[sets[:, None], way_ids]
         scores = victim_scores(cfg.policy, ma, mb, times[:, None], keys_s)
         scores = jnp.where(keys_s == EMPTY_KEY, NEG_INF, scores)
         order_local = jnp.argsort(scores, axis=-1)
         return jnp.take_along_axis(way_ids, order_local, axis=-1)   # [B, m]
-    ma = state.meta_a[sets]
-    mb = state.meta_b[sets]
+    ma = meta_a_arr[sets]
+    mb = meta_b_arr[sets]
     scores = victim_scores(cfg.policy, ma, mb, times[:, None], set_keys)
     empty = set_keys == EMPTY_KEY
     scores = jnp.where(empty, NEG_INF, scores)  # fill empty ways first
     return jnp.argsort(scores, axis=-1).astype(jnp.int32)  # [B, k]
+
+
+def _victim_order(cfg: KWayConfig, state: KWayState, sets, set_keys, times):
+    return _victim_order_arrays(cfg, state.keys, state.meta_a, state.meta_b,
+                                sets, set_keys, times)
+
+
+def _resolve_inserts(cfg: KWayConfig, qkeys, sets, eligible, order):
+    """Deterministic insert conflict resolution, shared by ``apply_put`` and
+    ``apply_access`` (one definition so the fused and two-phase paths cannot
+    drift): dedupe duplicate keys within the batch, rank same-set collisions
+    by arrival order, cap at k admits per set, and pick each insert's victim
+    way from ``order`` ([B, m], worst-victim-first).
+
+    Returns (is_insert bool[B], way_victim int32[B]); way_victim is the
+    rank-selected way for every lane (callers mask with is_insert).
+    """
+    is_insert = eligible & _first_occurrence(qkeys, eligible)
+    rank = _intra_batch_rank(sets, is_insert)
+    is_insert &= rank < cfg.ways                          # ≤ k admits per set
+    rank_c = jnp.clip(rank, 0, order.shape[1] - 1)  # dropped lanes: safe idx
+    way_victim = jnp.take_along_axis(order, rank_c[:, None], axis=-1)[:, 0]
+    return is_insert, way_victim
 
 
 # ---------------------------------------------------------------------------
@@ -298,12 +324,8 @@ def apply_put(
         enabled = jnp.ones((b,), jnp.bool_)
     present = present & enabled
 
-    is_insert = (~present) & admit & enabled
-    is_insert &= _first_occurrence(qkeys, is_insert)      # dedupe within batch
-    rank = _intra_batch_rank(sets, is_insert)
-    is_insert &= rank < cfg.ways                          # ≤ k admits per set
-    rank_c = jnp.clip(rank, 0, order.shape[1] - 1)  # dropped lanes: safe idx
-    way_victim = jnp.take_along_axis(order, rank_c[:, None], axis=-1)[:, 0]
+    is_insert, way_victim = _resolve_inserts(
+        cfg, qkeys, sets, (~present) & admit & enabled, order)
 
     way = jnp.where(present, way_present, way_victim)
     active = present | is_insert
@@ -400,7 +422,102 @@ def put(
 
 
 @partial(jax.jit, static_argnums=0)
-def access(
+def apply_access(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    qvals: jnp.ndarray,
+    sets: jnp.ndarray,
+    hit_raw: jnp.ndarray,
+    way: jnp.ndarray,
+    admit: Optional[jnp.ndarray] = None,
+    enabled: Optional[jnp.ndarray] = None,
+    order: Optional[jnp.ndarray] = None,
+    set_keys: Optional[jnp.ndarray] = None,
+):
+    """Fused one-pass apply for ``access`` — one probe feeds both phases.
+
+    Consumes one probe's decisions (``hit_raw``/``way``, *unmasked* by
+    ``enabled``) and applies the get-then-put-on-miss composition in a single
+    pass, bit-identical to ``apply_get`` followed by ``apply_put`` (DESIGN.md
+    §8).  Two-phase clock accounting is preserved: hits stamp ``t+i``,
+    inserts stamp ``t+B+i``, and the clock advances by 2B.  Victim scores are
+    computed on the *post-hit-update* metadata (``meta_a1``), exactly what
+    the second probe of the two-phase path would observe — the keys lanes are
+    untouched by the hit phase, so the probe itself never needs repeating.
+
+    ``order`` (int32 [B, m], worst-victim-first) can be supplied by a caller
+    that already derived it from the same post-hit metadata (the fused Pallas
+    kernel); otherwise it is computed here from ``set_keys`` (the [B, k]
+    gather of the first probe).  Exactly one of the two must be given.
+
+    Scatter economy vs the two-phase applies (7 scatters per step): the hit
+    phase scatters only ``meta_a`` (``on_hit`` keeps ``meta_b`` for every
+    policy, and is the identity for FIFO/RANDOM), and the insert phase is
+    one packed scatter pass — a single (set, way) index pair shared by all
+    five state lanes.
+
+    Returns (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B]).
+    """
+    b = qkeys.shape[0]
+    times_get = state.clock + jnp.arange(b, dtype=jnp.int32)
+    times_put = times_get + jnp.int32(b)
+    clock = state.clock + jnp.int32(2 * b)
+
+    hit = hit_raw if enabled is None else (hit_raw & enabled)
+
+    # ---- hit phase (apply_get semantics at times t+i) --------------------
+    ma_hit = state.meta_a[sets, way]
+    new_a, _ = on_hit(cfg.policy, ma_hit, state.meta_b[sets, way], times_get)
+    if cfg.policy in (Policy.LFU, Policy.HYPERBOLIC):
+        meta_a1 = state.meta_a.at[sets, way].add(
+            jnp.where(hit, new_a - ma_hit, 0))
+    elif cfg.policy in (Policy.FIFO, Policy.RANDOM):
+        meta_a1 = state.meta_a          # on_hit is the identity here
+    else:
+        meta_a1 = state.meta_a.at[sets, way].max(
+            jnp.where(hit, new_a, -(2**31 - 1)))
+    # on_hit keeps meta_b for every policy, so the apply_get meta_b
+    # scatter-add is always adding zero — elided.
+    vals_out = jnp.where(hit, state.vals[sets, way], qvals)
+
+    # ---- miss phase (apply_put semantics at times t+B+i) -----------------
+    # In the composition, every lane the put phase sees is either disabled
+    # (it hit in the get phase) or absent, so the present/overwrite branch of
+    # apply_put never fires: the put phase is pure insert resolution.
+    if admit is None:
+        admit = jnp.ones((b,), jnp.bool_)
+    if enabled is None:
+        enabled = jnp.ones((b,), jnp.bool_)
+    if order is None:
+        order = _victim_order_arrays(
+            cfg, state.keys, meta_a1, state.meta_b, sets, set_keys, times_put)
+
+    is_insert, way_victim = _resolve_inserts(
+        cfg, qkeys, sets, (~hit_raw) & admit & enabled, order)
+
+    evicted_keys = state.keys[sets, way_victim]
+    evicted_valid = is_insert & (evicted_keys != EMPTY_KEY)
+
+    ia, ib = on_insert(cfg.policy, times_put, (b,))
+
+    # One packed scatter pass: the (set, way) index pair is computed once and
+    # shared by all five lanes.  Inactive lanes route out of bounds (dropped
+    # by JAX) — see apply_put for why slot (0,0) is not a safe parking spot.
+    sets_w = jnp.where(is_insert, sets, jnp.int32(cfg.num_sets))
+    way_w = jnp.where(is_insert, way_victim, 0)
+
+    keys = state.keys.at[sets_w, way_w].set(qkeys)
+    fpr = state.fprint.at[sets_w, way_w].set(hashing.fingerprint(qkeys))
+    vals = state.vals.at[sets_w, way_w].set(qvals)
+    meta_a = meta_a1.at[sets_w, way_w].set(ia)
+    meta_b = state.meta_b.at[sets_w, way_w].set(ib)
+
+    new_state = KWayState(keys, fpr, vals, meta_a, meta_b, clock)
+    return new_state, hit, vals_out, evicted_keys, evicted_valid
+
+
+def _access_fused(
     cfg: KWayConfig,
     state: KWayState,
     qkeys: jnp.ndarray,
@@ -408,9 +525,38 @@ def access(
     admit_on_miss: Optional[jnp.ndarray] = None,
     enabled: Optional[jnp.ndarray] = None,
 ):
-    """The canonical cache loop: get; on miss, put (paper §5.1.2 methodology).
+    qkeys, sets, set_keys, hit_raw, way = _probe(cfg, state, qkeys)
+    return apply_access(cfg, state, qkeys, qvals, sets, hit_raw, way,
+                        admit_on_miss, enabled, set_keys=set_keys)
 
-    Returns (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B]).
+
+#: The canonical cache loop: get; on miss, put (paper §5.1.2 methodology) —
+#: fused single-probe form.  Returns (state', hit[B], vals[B],
+#: evicted_keys[B], evicted_valid[B]); bit-identical to ``access_two_phase``.
+access = partial(jax.jit, static_argnums=0)(_access_fused)
+
+#: Buffer-donating variant of ``access``: the input ``state`` buffers are
+#: donated to XLA so ``KWayState`` is updated in place (5 S×k arrays are not
+#: copied every batch).  The caller must not reuse ``state`` afterwards.
+#: Backends without donation support (CPU on older jaxlibs) fall back to a
+#: copy with a one-time warning.
+access_donated = partial(
+    jax.jit, static_argnums=0, donate_argnums=1)(_access_fused)
+
+
+@partial(jax.jit, static_argnums=0)
+def access_two_phase(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    qvals: jnp.ndarray,
+    admit_on_miss: Optional[jnp.ndarray] = None,
+    enabled: Optional[jnp.ndarray] = None,
+):
+    """The unfused get-then-put composition — two probes, two apply passes.
+
+    Kept as the differential oracle for ``access``: tests assert the fused
+    path is bit-identical to this one (hits, evictions, final state).
     """
     state, hit, vals = get(cfg, state, qkeys, enabled=enabled)
     admit = admit_on_miss if admit_on_miss is not None else None

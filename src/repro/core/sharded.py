@@ -45,6 +45,11 @@ class ShardedConfig:
     cache: KWayConfig            # GLOBAL shape: cache.num_sets across all shards
     num_shards: int = 1
     backend: str = "jnp"
+    # Donate the stacked state leaves to the jitted shard step so each batch
+    # updates the [D, S/D, k] lanes in place instead of copying them.  The
+    # caller must treat the state passed to ``access`` as consumed (rebind
+    # the returned one) — which is how every replay loop already uses it.
+    donate: bool = False
 
     def __post_init__(self):
         assert self.num_shards >= 1
@@ -94,11 +99,15 @@ class ShardedCache:
                 return tuple(o[None] for o in out)
 
             spec = (P("sets"),) * 9
+            # args 3..8 are the state leaves (keys/fprint/vals/meta_a/meta_b/
+            # clock) — the donated, in-place-updated half of the signature
+            donate = tuple(range(3, 9)) if cfg.donate else ()
             self._fn = jax.jit(shard_map(
                 sm_local, mesh=mesh, in_specs=spec, out_specs=(P("sets"),) * 10
-            ))
+            ), donate_argnums=donate)
         else:
-            self._fn = jax.jit(jax.vmap(self._local))
+            donate = tuple(range(3, 9)) if cfg.donate else ()
+            self._fn = jax.jit(jax.vmap(self._local), donate_argnums=donate)
 
     # ------------------------------------------------------------- plumbing
     def _local(self, keys, vals, en, k, f, v, a, mb, c):

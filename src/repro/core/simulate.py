@@ -38,11 +38,20 @@ class SimConfig:
     cache: KWayConfig
     tinylfu: Optional[admission.TinyLFUConfig] = None  # None = admit always
     backend: str = "jnp"
+    # True: replay through the unfused get-then-put composition
+    # (backend.access_two_phase) instead of the fused single-probe access —
+    # the differential-oracle knob for the fused path.
+    two_phase: bool = False
+
+
+def _access_fn(sim: SimConfig, be):
+    return be.access_two_phase if sim.two_phase else be.access
 
 
 @partial(jax.jit, static_argnums=0)
 def _replay_scan(sim: SimConfig, trace: jnp.ndarray):
     be = make_backend(sim.backend, sim.cache)
+    access = _access_fn(sim, be)
     cache = be.init()
     sketch = admission.make_sketch(sim.tinylfu) if sim.tinylfu else None
 
@@ -50,12 +59,12 @@ def _replay_scan(sim: SimConfig, trace: jnp.ndarray):
         cache, sketch, hits = carry
         kb = key[None]
         if sim.tinylfu is None:
-            cache, hit, _, _, _ = be.access(cache, kb, kb.astype(jnp.int32))
+            cache, hit, _, _, _ = access(cache, kb, kb.astype(jnp.int32))
         else:
             sketch = admission.record(sim.tinylfu, sketch, kb)
             vkeys, vvalid = be.peek_victims(cache, kb)
             ok = admission.admit(sim.tinylfu, sketch, kb, vkeys, vvalid)
-            cache, hit, _, _, _ = be.access(
+            cache, hit, _, _, _ = access(
                 cache, kb, kb.astype(jnp.int32), admit_on_miss=ok
             )
         return (cache, sketch, hits + hit[0]), ()
@@ -71,11 +80,12 @@ def _replay_python(sim: SimConfig, trace: np.ndarray):
     if sim.tinylfu is not None:
         raise ValueError("TinyLFU replay is not wired for the ref backend")
     be = make_backend(sim.backend, sim.cache)
+    access = _access_fn(sim, be)
     cache = be.init()
     hits = 0
     for t in trace:
         kb = jnp.asarray([t], jnp.uint32)
-        cache, hit, _, _, _ = be.access(cache, kb, kb.astype(jnp.int32))
+        cache, hit, _, _, _ = access(cache, kb, kb.astype(jnp.int32))
         hits += int(hit[0])
     return hits, cache
 
@@ -93,6 +103,7 @@ def replay(sim: SimConfig, trace: np.ndarray) -> float:
 @partial(jax.jit, static_argnums=(0, 2))
 def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
     be = make_backend(sim.backend, sim.cache)
+    access = _access_fn(sim, be)
     cache = be.init()
     sketch = admission.make_sketch(sim.tinylfu) if sim.tinylfu else None
     steps = trace.shape[0] // batch
@@ -101,7 +112,7 @@ def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
     def step(carry, keys):
         cache, sketch, hits = carry
         if sim.tinylfu is None:
-            cache, hit, _, _, _ = be.access(cache, keys, keys.astype(jnp.int32))
+            cache, hit, _, _, _ = access(cache, keys, keys.astype(jnp.int32))
         else:
             # Same phase order as the sequential path, per chunk: record the
             # accesses, peek each request's prospective victim, gate admission.
@@ -111,7 +122,7 @@ def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
             sketch = admission.record(sim.tinylfu, sketch, keys)
             vkeys, vvalid = be.peek_victims(cache, keys)
             ok = admission.admit(sim.tinylfu, sketch, keys, vkeys, vvalid)
-            cache, hit, _, _, _ = be.access(
+            cache, hit, _, _, _ = access(
                 cache, keys, keys.astype(jnp.int32), admit_on_miss=ok
             )
         return (cache, sketch, hits + jnp.sum(hit.astype(jnp.int32))), ()
@@ -137,6 +148,10 @@ def replay_batched(
     if sim.tinylfu is not None and sim.backend == "ref":
         raise ValueError("TinyLFU replay is not wired for the ref backend")
     if shards > 1:
+        if sim.two_phase:
+            raise ValueError(
+                "two_phase replay is not wired into the set-sharded layer "
+                "(ShardedCache runs the fused access); use shards=1")
         if sim.backend == "ref":
             raise ValueError(
                 "the ref backend is sequential host Python and cannot be "
@@ -154,11 +169,12 @@ def replay_batched(
         return hits / n
     if sim.backend == "ref":
         be = make_backend(sim.backend, sim.cache)
+        access = _access_fn(sim, be)
         cache = be.init()
         hits = 0
         for i in range(0, n, batch):
             chunk = jnp.asarray(trace[i : i + batch])
-            cache, hit, _, _, _ = be.access(cache, chunk, chunk.astype(jnp.int32))
+            cache, hit, _, _, _ = access(cache, chunk, chunk.astype(jnp.int32))
             hits += int(np.asarray(hit).sum())
         return hits / n
     hits, _ = _replay_batched_scan(sim, jnp.asarray(trace), batch)

@@ -24,7 +24,8 @@ import numpy as np
 from repro.core.policies import Policy
 from repro.eval import runner
 from repro.eval.runner import HitRatioSpec
-from repro.eval.timing import time_host, time_jitted
+from repro.eval.timing import (time_chained_percentiles, time_host,
+                               time_jitted, time_jitted_percentiles)
 
 QUICK_N = 6_000
 FULL_N = 60_000
@@ -149,7 +150,8 @@ def throughput_vs_batch(quick: bool = False, progress=None,
             dt = time_jitted(fn, state, keys, vals)
             records.append(_tp_record(name, b, b / dt / 1e6))
 
-    # unified backend layer: jnp vs pallas(interpret) vs ref oracle
+    # unified backend layer: fused single-probe access vs the two-phase
+    # get-then-put oracle, per backend, p50/p90 steady-state per repetition
     cfg = _throughput_impls(policy)["kway-soa"]
     state = soa_state if soa_state is not None else warm(cfg)
     for bname in backends:
@@ -164,19 +166,54 @@ def throughput_vs_batch(quick: bool = False, progress=None,
             keys = jnp.asarray(tr[n_warm:n_warm + b])
             vals = keys.astype(jnp.int32)
             if bname == "ref":
+                # the sequential oracle has no fused path; one two-phase row
                 dt = time_host(be.access, state, keys, vals)
-            else:
-                fn = jax.jit(lambda s, k, v: be.access(s, k, v)[0])
-                dt = time_jitted(fn, state, keys, vals)
-            records.append(
-                _tp_record(f"backend-{bname}", b, b / dt / 1e6))
+                records.append(_tp_record("backend-ref-twophase", b,
+                                          b / dt / 1e6))
+                continue
+            p50 = {}
+            for vname, acc in (("fused", be.access),
+                               ("twophase", be.access_two_phase)):
+                fn = jax.jit(lambda s, k, v, _a=acc: _a(s, k, v)[0])
+                st = time_jitted_percentiles(fn, state, keys, vals)
+                p50[vname] = st["p50"]
+                records.append(_tp_record(
+                    f"backend-{bname}-{vname}", b, b / st["p50"] / 1e6,
+                    p90_mops=round(b / st["p90"] / 1e6, 3),
+                    p50_req_s=round(b / st["p50"], 1),
+                    p90_req_s=round(b / st["p90"], 1)))
+            records.append(_tp_record(
+                f"backend-{bname}-fused-speedup", b,
+                p50["twophase"] / p50["fused"], metric="speedup_x"))
+        if bname == "jnp":
+            # buffer-donating fused path: the state is consumed and rebound
+            # every step (KWayState updated in place), so the timing loop
+            # chains it instead of re-passing one donated buffer
+            for b in bl:
+                keys = jnp.asarray(tr[n_warm:n_warm + b])
+                vals = keys.astype(jnp.int32)
+                st_d = jax.tree_util.tree_map(lambda x: x.copy(), state)
 
-    # set-sharded execution: 1 shard vs N shards
+                def step_d():
+                    nonlocal st_d
+                    st_d, *_ = kway.access_donated(cfg, st_d, keys, vals)
+                    return st_d
+
+                st = time_chained_percentiles(step_d)
+                records.append(_tp_record(
+                    "backend-jnp-fused-donated", b, b / st["p50"] / 1e6,
+                    p90_mops=round(b / st["p90"] / 1e6, 3),
+                    p50_req_s=round(b / st["p50"], 1),
+                    p90_req_s=round(b / st["p90"], 1)))
+
+    # set-sharded execution: 1 shard vs N shards (fused access, donated
+    # shard-state leaves — every chunk rebinds the returned state)
     b = max(batches)
     for ns in shards:
         if progress:
             progress(f"throughput sharded x{ns}")
-        sc = ShardedCache(ShardedConfig(cache=cfg, num_shards=ns))
+        sc = ShardedCache(ShardedConfig(cache=cfg, num_shards=ns,
+                                        donate=True))
         st = sc.init()
         chunk0 = np.asarray(tr[:b], np.uint32)
         for _ in range(3):  # warm the jit caches + shard states

@@ -378,6 +378,7 @@ def run_hit_ratio_sweep(spec: HitRatioSpec, progress=None):
             gkey = ("jnp", s, k, sample, p.n, adm)
         groups[gkey].append(p)
 
+    counts_before = collections.Counter(_TRACE_COUNTS)
     hit_ratio: dict[SweepPoint, float] = {}
     for gkey, pts in groups.items():
         backend, s, k, sample, n, adm = gkey[:6]
@@ -396,6 +397,18 @@ def run_hit_ratio_sweep(spec: HitRatioSpec, progress=None):
                                      pidx, trace_cn)
         for p, h in zip(pts, np.asarray(hits)):
             hit_ratio[p] = float(h) / p.n
+
+    # Compile economy invariant: the (now fused single-probe) stacked replay
+    # must still compile once per cache *shape* group, never once per config.
+    # Each group triggers at most one fresh trace (jit may also reuse an
+    # earlier sweep's program, hence <=, not ==); a regression that makes the
+    # step retrace per stacked lane would blow past len(groups) immediately.
+    new_compiles = sum((collections.Counter(_TRACE_COUNTS)
+                        - counts_before).values())
+    assert new_compiles <= len(groups), (
+        f"stacked sweep compiled {new_compiles} replay programs for "
+        f"{len(groups)} shape groups — the fused replay step is being "
+        "retraced per config instead of once per cache shape")
 
     records = []
     seen = set()

@@ -4,19 +4,70 @@ import time
 import jax
 
 
-def time_jitted(fn, *args, iters=20, warmup=3):
-    """Median wall time per call of an already-jitted fn (seconds)."""
+def _steady_state_samples(fn, *args, iters=20, warmup=3):
+    """Per-repetition wall times of an already-jitted fn, seconds.
+
+    Every repetition (warmup included) blocks on the result before the next
+    starts, so each sample is one complete dispatch+execute round trip —
+    the single wall-clock-over-n-calls number this replaces hid dispatch
+    pipelining and was noisy across CI machines.
+    """
     for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    times = []
+        jax.block_until_ready(fn(*args))
+    samples = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return samples
+
+
+def _percentile(sorted_samples, p):
+    """Nearest-rank percentile of an already-sorted sample list."""
+    n = len(sorted_samples)
+    idx = min(n - 1, max(0, int(round(p / 100.0 * (n - 1)))))
+    return sorted_samples[idx]
+
+
+def time_jitted(fn, *args, iters=20, warmup=3):
+    """Median (p50) wall time per call of an already-jitted fn (seconds)."""
+    samples = sorted(_steady_state_samples(fn, *args, iters=iters,
+                                           warmup=warmup))
+    return _percentile(samples, 50)
+
+
+def time_jitted_percentiles(fn, *args, iters=30, warmup=3):
+    """Steady-state timing distribution of an already-jitted fn.
+
+    Returns {"p50": s, "p90": s, "iters": n} — p50 is the headline, p90
+    exposes tail jitter (GC, scheduler) that a single mean hides.
+    """
+    samples = sorted(_steady_state_samples(fn, *args, iters=iters,
+                                           warmup=warmup))
+    return {"p50": _percentile(samples, 50),
+            "p90": _percentile(samples, 90),
+            "iters": len(samples)}
+
+
+def time_chained_percentiles(step, iters=30, warmup=3):
+    """Like ``time_jitted_percentiles`` for *state-chaining* callables.
+
+    ``step()`` must advance its own state (e.g. rebinding a donated cache
+    state) and return something blockable.  Used for the buffer-donating
+    access path, where re-passing the same argument would poke a donated
+    (deleted) buffer.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(step())
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step())
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return {"p50": _percentile(samples, 50),
+            "p90": _percentile(samples, 90),
+            "iters": len(samples)}
 
 
 def time_host(fn, *args, iters=3):

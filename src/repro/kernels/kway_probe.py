@@ -66,6 +66,24 @@ def _scores_for_policy(policy: int, keys, meta_a, meta_b, now):
     return a  # LRU / LFU / FIFO share "argmin meta_a"
 
 
+def _full_order_row(scores, lane, ways):
+    """Full victim order, worst-first: `ways` rounds of masked min-extraction
+    (the paper's O(k) scan, k unrolled VPU reduces).  Ties break toward the
+    lowest lane — identical to the stable argsort in core/kway._victim_order.
+    Returns (ord_row [1, LANES], vway scalar)."""
+    work = scores
+    ord_row = jnp.full((1, LANES), LANES, jnp.int32)
+    vway = None
+    for r in range(ways):
+        m = jnp.min(work)
+        w = jnp.min(jnp.where(work == m, lane, LANES))
+        ord_row = jnp.where(lane == r, w, ord_row)
+        work = jnp.where(lane == w, POS_INF, work)
+        if r == 0:
+            vway = w
+    return ord_row, vway
+
+
 def _probe_kernel(
     # scalar prefetch
     sets_ref,            # int32 [B]    set index per query
@@ -78,15 +96,16 @@ def _probe_kernel(
     # VMEM outputs
     hit_ref,             # int32 [qt]
     way_ref,             # int32 [qt]
-    vway_ref,            # int32 [qt]
-    vkey_ref,            # int32 [qt]
-    *rest,               # (vorder_ref int32 [qt, LANES],) when full_order
+    *rest,               # (vway_ref, vkey_ref[, vorder_ref]) when need_victims
     policy: int,
     ways: int,
     qt: int,
     empty_key: int,
+    need_victims: bool,
 ):
-    vorder_ref = rest[0] if rest else None
+    vway_ref = rest[0] if need_victims else None
+    vkey_ref = rest[1] if need_victims else None
+    vorder_ref = rest[2] if need_victims and len(rest) > 2 else None
     tile = pl.program_id(0)
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
     valid_way = lane < ways
@@ -95,10 +114,7 @@ def _probe_kernel(
         q = tile * qt + i
         s = sets_ref[q]
         row_keys = keys_ref[pl.ds(s, 1), :]          # [1, kp]
-        row_a = meta_a_ref[pl.ds(s, 1), :]
-        row_b = meta_b_ref[pl.ds(s, 1), :]
         qk = qkeys_ref[i]
-        now = times_ref[i]
 
         occupied = (row_keys != empty_key) & valid_way
         eq = (row_keys == qk) & occupied
@@ -106,6 +122,17 @@ def _probe_kernel(
         # first matching way (stable argmax over the 128-lane mask)
         way = jnp.min(jnp.where(eq, lane, LANES))
 
+        hit_ref[i] = hit.astype(jnp.int32)
+        way_ref[i] = jnp.where(hit, way, 0)
+
+        if not need_victims:
+            # Pure-get probe: skip the victim-selection rounds entirely —
+            # the read path never consumes them.
+            continue
+
+        row_a = meta_a_ref[pl.ds(s, 1), :]
+        row_b = meta_b_ref[pl.ds(s, 1), :]
+        now = times_ref[i]
         scores = _scores_for_policy(policy, row_keys, row_a, row_b, now)
         scores = jnp.where(occupied, scores, NEG_INF)  # empty ways first
         scores = jnp.where(valid_way, scores, POS_INF)  # padding ways last
@@ -113,24 +140,9 @@ def _probe_kernel(
             vscore = jnp.min(scores)
             vway = jnp.min(jnp.where(scores == vscore, lane, LANES))
         else:
-            # Full victim order, worst-first: `ways` rounds of masked
-            # min-extraction (the paper's O(k) scan, k unrolled VPU reduces).
-            # Ties break toward the lowest lane — identical to the stable
-            # argsort in core/kway._victim_order.
-            work = scores
-            ord_row = jnp.full((1, LANES), LANES, jnp.int32)
-            vway = None
-            for r in range(ways):
-                m = jnp.min(work)
-                w = jnp.min(jnp.where(work == m, lane, LANES))
-                ord_row = jnp.where(lane == r, w, ord_row)
-                work = jnp.where(lane == w, POS_INF, work)
-                if r == 0:
-                    vway = w
+            ord_row, vway = _full_order_row(scores, lane, ways)
             vorder_ref[pl.ds(i, 1), :] = ord_row
 
-        hit_ref[i] = hit.astype(jnp.int32)
-        way_ref[i] = jnp.where(hit, way, 0)
         vway_ref[i] = vway
         vkey_ref[i] = jnp.sum(
             jnp.where(lane == vway, row_keys, 0).astype(jnp.int32)
@@ -138,7 +150,8 @@ def _probe_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("policy", "ways", "qt", "interpret", "full_order")
+    jax.jit, static_argnames=("policy", "ways", "qt", "interpret",
+                              "full_order", "need_victims")
 )
 def kway_probe(
     keys: jnp.ndarray,     # int32 [S, kp] (ways padded to LANES multiple.. or any kp>=ways)
@@ -153,6 +166,7 @@ def kway_probe(
     qt: int = 8,
     interpret: bool = True,
     full_order: bool = False,
+    need_victims: bool = True,
 ):
     """Run the probe kernel.  B must be a multiple of qt; kp (padded ways)
     must equal LANES (one VREG row per set).
@@ -161,11 +175,16 @@ def kway_probe(
     [B, LANES], the per-query victim order worst-first (entries past ``ways``
     hold the LANES sentinel) — what the batched conflict resolution in
     core/kway.apply_put consumes for rank>0 same-set collisions.
+
+    With ``need_victims=False`` (the pure-get read path) the victim-selection
+    rounds are skipped entirely and only (hit, way) are returned.
     """
     s, kp = keys.shape
     b = sets.shape[0]
     assert kp == LANES, f"pad ways to {LANES} lanes (got {kp})"
     assert b % qt == 0
+    assert need_victims or not full_order, \
+        "full_order requires need_victims=True"
     grid = (b // qt,)
 
     kernel = functools.partial(
@@ -174,11 +193,13 @@ def kway_probe(
         ways=ways,
         qt=qt,
         empty_key=-1,  # EMPTY_KEY 0xFFFFFFFF viewed as int32
+        need_victims=need_victims,
     )
-    out_shape = [jax.ShapeDtypeStruct((b,), jnp.int32)] * 4
+    n_scalar_outs = 4 if need_victims else 2
+    out_shape = [jax.ShapeDtypeStruct((b,), jnp.int32)] * n_scalar_outs
     full = lambda: pl.BlockSpec((s, kp), lambda i, *_: (0, 0))  # noqa: E731
     qtile = lambda: pl.BlockSpec((qt,), lambda i, *_: (i,))  # noqa: E731
-    out_specs = [qtile()] * 4
+    out_specs = [qtile()] * n_scalar_outs
     if full_order:
         out_shape = out_shape + [jax.ShapeDtypeStruct((b, LANES), jnp.int32)]
         out_specs = out_specs + [pl.BlockSpec((qt, LANES), lambda i, *_: (i, 0))]
@@ -193,3 +214,148 @@ def kway_probe(
         out_shape=out_shape,
         interpret=interpret,
     )(sets, keys, meta_a, meta_b, qkeys, times)
+
+
+# ---------------------------------------------------------------------------
+# fused access kernel: both phases of `access` in ONE launch
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(
+    # scalar prefetch
+    sets_ref,            # int32 [B]    set index per query
+    # VMEM inputs
+    keys_ref,            # int32 [S, kp]
+    meta_a_ref,          # int32 [S, kp]
+    meta_b_ref,          # int32 [S, kp]
+    qkeys_ref,           # int32 [qt]
+    tg_ref,              # int32 [qt]   get-phase timestamps (t + i)
+    tp_ref,              # int32 [qt]   put-phase timestamps (t + B + i)
+    en_ref,              # int32 [qt]   1 = live lane (enabled & not padding)
+    # VMEM outputs
+    hit_ref,             # int32 [qt]
+    way_ref,             # int32 [qt]
+    vorder_ref,          # int32 [qt, LANES]
+    # VMEM scratch
+    scratch_a,           # int32 [S, kp]  hit-updated meta_a
+    *,
+    policy: int,
+    ways: int,
+    qt: int,
+    empty_key: int,
+):
+    """Two grid phases over the same query tiles (grid = (2, B/qt)):
+
+      phase 0 — probe every query and apply its hit-phase ``on_hit``
+        metadata transition to a VMEM scratch copy of ``meta_a`` (queries
+        run in batch order, so colliding hits accumulate exactly like the
+        scatter-add/-max in core/kway.apply_access);
+      phase 1 — re-derive (hit, way) from the untouched key lanes and emit
+        the full victim order scored on the *post-hit* scratch metadata at
+        the put-phase timestamps — what the second launch of the two-phase
+        path would compute, without re-reading the cache from HBM.
+    """
+    phase = pl.program_id(0)
+    tile = pl.program_id(1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+    valid_way = lane < ways
+
+    @pl.when(jnp.logical_and(phase == 0, tile == 0))
+    def _init_scratch():
+        scratch_a[...] = meta_a_ref[...]
+
+    for i in range(qt):  # unrolled: qt dynamic row slices per grid step
+        q = tile * qt + i
+        s = sets_ref[q]
+        row_keys = keys_ref[pl.ds(s, 1), :]          # [1, kp]
+        qk = qkeys_ref[i]
+
+        occupied = (row_keys != empty_key) & valid_way
+        eq = (row_keys == qk) & occupied
+        hit = jnp.any(eq)
+        way = jnp.min(jnp.where(eq, lane, LANES))    # LANES when no hit
+
+        if policy not in (Policy.FIFO, Policy.RANDOM):  # on_hit is identity
+            @pl.when(phase == 0)
+            def _hit_update():
+                do = jnp.logical_and(hit, en_ref[i] != 0)
+                row_a = scratch_a[pl.ds(s, 1), :]
+                upd = lane == way            # all-false when way == LANES
+                if policy == Policy.LRU:
+                    new_a = jnp.where(upd, tg_ref[i], row_a)
+                else:                        # LFU / HYPERBOLIC: count += 1
+                    new_a = jnp.where(upd, row_a + 1, row_a)
+                scratch_a[pl.ds(s, 1), :] = jnp.where(do, new_a, row_a)
+
+        @pl.when(phase == 1)
+        def _score():
+            row_a = scratch_a[pl.ds(s, 1), :]
+            row_b = meta_b_ref[pl.ds(s, 1), :]
+            scores = _scores_for_policy(policy, row_keys, row_a, row_b,
+                                        tp_ref[i])
+            scores = jnp.where(occupied, scores, NEG_INF)
+            scores = jnp.where(valid_way, scores, POS_INF)
+            ord_row, _ = _full_order_row(scores, lane, ways)
+            vorder_ref[pl.ds(i, 1), :] = ord_row
+            hit_ref[i] = hit.astype(jnp.int32)
+            way_ref[i] = jnp.where(hit, way, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "ways", "qt", "interpret")
+)
+def kway_fused_probe(
+    keys: jnp.ndarray,     # int32 [S, kp]
+    meta_a: jnp.ndarray,   # int32 [S, kp]
+    meta_b: jnp.ndarray,   # int32 [S, kp]
+    sets: jnp.ndarray,     # int32 [B]
+    qkeys: jnp.ndarray,    # int32 [B]
+    times_get: jnp.ndarray,  # int32 [B]  t + i
+    times_put: jnp.ndarray,  # int32 [B]  t + B + i
+    en: jnp.ndarray,       # int32 [B]  1 = live lane (enabled, not padding)
+    *,
+    policy: int,
+    ways: int,
+    qt: int = 8,
+    interpret: bool = True,
+):
+    """Single-launch fused probe for ``access``: hit decisions plus the full
+    victim order scored on the hit-updated metadata (see ``_fused_kernel``).
+
+    Returns (hit int32 [B], way int32 [B], vorder int32 [B, LANES]).  ``hit``
+    is the raw probe outcome, unmasked by ``en`` — ``en`` only gates which
+    lanes apply their hit-phase metadata transition (disabled and padding
+    lanes must not perturb victim scores).
+    """
+    s, kp = keys.shape
+    b = sets.shape[0]
+    assert kp == LANES, f"pad ways to {LANES} lanes (got {kp})"
+    assert b % qt == 0
+    grid = (2, b // qt)
+
+    kernel = functools.partial(
+        _fused_kernel,
+        policy=policy,
+        ways=ways,
+        qt=qt,
+        empty_key=-1,
+    )
+    full = lambda: pl.BlockSpec((s, kp), lambda p, i, *_: (0, 0))  # noqa: E731
+    qtile = lambda: pl.BlockSpec((qt,), lambda p, i, *_: (i,))  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[full(), full(), full(),
+                      qtile(), qtile(), qtile(), qtile()],
+            out_specs=[qtile(), qtile(),
+                       pl.BlockSpec((qt, LANES), lambda p, i, *_: (i, 0))],
+            scratch_shapes=[pltpu.VMEM((s, kp), jnp.int32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sets, keys, meta_a, meta_b, qkeys, times_get, times_put, en)

@@ -30,7 +30,8 @@ def _pad_ways(arr: jnp.ndarray, lanes: int = _kp.LANES) -> jnp.ndarray:
     return jnp.concatenate([arr, pad], axis=1)
 
 
-def _probe_impl(cfg, state, qkeys, use_kernel: bool, full_order: bool):
+def _probe_impl(cfg, state, qkeys, use_kernel: bool, full_order: bool,
+                need_victims: bool = True):
     """Shared probe core: sanitize + route + pad to the qt=8 query tile.
 
     Padding with dummy probes keeps the kernel on every batch size (probing
@@ -59,11 +60,13 @@ def _probe_impl(cfg, state, qkeys, use_kernel: bool, full_order: bool):
             jnp.concatenate([times, zpad]),
             policy=int(cfg.policy), ways=cfg.ways, qt=qt,
             interpret=not _on_tpu(), full_order=full_order,
+            need_victims=need_victims,
         )
     else:
         outs = _ref.kway_probe_ref(
             keys_i, ma, mb, sets, qk_i, times,
             policy=int(cfg.policy), ways=cfg.ways, full_order=full_order,
+            need_victims=need_victims,
         )
     return qkeys, sets, tuple(o[:b] for o in outs)
 
@@ -87,6 +90,84 @@ def probe(
         cfg, state, qkeys, use_kernel, full_order=False)
     return (qkeys, sets, hit.astype(jnp.bool_), way, vway,
             vkey.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
+def probe_hits(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+):
+    """Read-path probe: hit decisions only, no victim selection.
+
+    The pure-get path never consumes victim scores, so this variant skips
+    the score computation and the victim-extraction rounds entirely
+    (``need_victims=False`` in the kernel).  Returns (qkeys_sanitized
+    uint32[B], sets int32[B], hit bool[B], way int32[B]).
+    """
+    qkeys, sets, (hit, way) = _probe_impl(
+        cfg, state, qkeys, use_kernel, full_order=False, need_victims=False)
+    return qkeys, sets, hit.astype(jnp.bool_), way
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
+def fused_probe(
+    cfg: KWayConfig,
+    state: KWayState,
+    qkeys: jnp.ndarray,
+    enabled: jnp.ndarray = None,
+    *,
+    use_kernel: bool = True,
+):
+    """Single-launch fused probe for ``access`` (get; on miss, put).
+
+    One kernel launch serves both phases: hit decisions come from the probe,
+    and the full victim order is scored inside the kernel on a hit-updated
+    VMEM copy of ``meta_a`` at the put-phase timestamps (t+B+i) — exactly
+    what ``probe`` followed by ``probe_orders`` on the post-get state would
+    produce, at half the launches and HBM traffic.
+
+    Returns (qkeys_sanitized uint32[B], sets int32[B], hit bool[B] (raw,
+    unmasked by ``enabled``), way int32[B], order int32[B, ways]) — what
+    ``core/kway.apply_access`` consumes.
+    """
+    qkeys = hashing.sanitize_keys(qkeys)
+    sets = hashing.set_index(qkeys, cfg.num_sets, cfg.seed)
+    b = qkeys.shape[0]
+    times_get = state.clock + jnp.arange(b, dtype=jnp.int32)
+    times_put = times_get + jnp.int32(b)
+    en = (jnp.ones((b,), jnp.int32) if enabled is None
+          else enabled.astype(jnp.int32))
+
+    keys_i = _pad_ways(state.keys.astype(jnp.int32))
+    ma = _pad_ways(state.meta_a)
+    mb = _pad_ways(state.meta_b)
+    qk_i = qkeys.astype(jnp.int32)
+
+    qt = 8
+    if use_kernel:
+        pad = (-b) % qt
+        zpad = jnp.zeros((pad,), jnp.int32)
+        # padding lanes carry en=0: they must not apply hit updates
+        outs = _kp.kway_fused_probe(
+            keys_i, ma, mb,
+            jnp.concatenate([sets, zpad]),
+            jnp.concatenate([qk_i, zpad]),
+            jnp.concatenate([times_get, zpad]),
+            jnp.concatenate([times_put, zpad]),
+            jnp.concatenate([en, zpad]),
+            policy=int(cfg.policy), ways=cfg.ways, qt=qt,
+            interpret=not _on_tpu(),
+        )
+    else:
+        outs = _ref.kway_fused_probe_ref(
+            keys_i, ma, mb, sets, qk_i, times_get, times_put, en,
+            policy=int(cfg.policy), ways=cfg.ways,
+        )
+    hit, way, order = (o[:b] for o in outs)
+    return (qkeys, sets, hit.astype(jnp.bool_), way, order[:, : cfg.ways])
 
 
 @functools.partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))

@@ -37,26 +37,30 @@ def _scores(policy, keys_u32, meta_a, meta_b, now):
 
 
 def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways,
-                   full_order=False):
+                   full_order=False, need_victims=True):
     """Oracle for kernels.kway_probe (identical outputs, any kp >= ways).
 
     With ``full_order=True`` additionally returns vorder int32 [B, kp]: the
     victim order worst-first (entries past ``ways`` hold the kp sentinel),
     matching the kernel's masked min-extraction tie-breaking exactly (stable
-    argsort == iterative lowest-lane extraction).
+    argsort == iterative lowest-lane extraction).  With
+    ``need_victims=False`` (the pure-get read path) only (hit, way) are
+    returned and no victim scoring happens.
     """
     kp = keys.shape[1]
     lane = jnp.arange(kp, dtype=jnp.int32)[None, :]
     row_keys = keys[sets]                        # [B, kp]
-    row_a = meta_a[sets]
-    row_b = meta_b[sets]
     valid = lane < ways
     occupied = (row_keys != -1) & valid
     eq = (row_keys == qkeys[:, None]) & occupied
     hit = jnp.any(eq, axis=-1)
     way = jnp.min(jnp.where(eq, lane, kp), axis=-1)
     way = jnp.where(hit, way, 0)
+    if not need_victims:
+        return hit.astype(jnp.int32), way.astype(jnp.int32)
 
+    row_a = meta_a[sets]
+    row_b = meta_b[sets]
     sc = _scores(policy, row_keys.astype(jnp.uint32), row_a, row_b, times[:, None])
     sc = jnp.where(occupied, sc, NEG_INF)
     sc = jnp.where(valid, sc, POS_INF)
@@ -74,6 +78,46 @@ def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways,
         order = jnp.where(jnp.arange(kp)[None, :] < ways, order, kp)
         out = out + (order,)
     return out
+
+
+def kway_fused_probe_ref(keys, meta_a, meta_b, sets, qkeys, times_get,
+                         times_put, en, *, policy, ways):
+    """Oracle for kernels.kway_fused_probe: (hit, way, vorder) with the
+    victim order scored on the hit-updated metadata at the put-phase times.
+
+    The kernel applies hit transitions sequentially in batch order; the
+    equivalent batched form is a scatter-add (LFU/HYPERBOLIC counts) or
+    scatter-max (LRU timestamps — batch times are increasing, so the last
+    sequential write IS the max).  FIFO/RANDOM take no hit transition.
+    """
+    kp = keys.shape[1]
+    lane = jnp.arange(kp, dtype=jnp.int32)[None, :]
+    row_keys = keys[sets]                        # [B, kp]
+    valid = lane < ways
+    occupied = (row_keys != -1) & valid
+    eq = (row_keys == qkeys[:, None]) & occupied
+    hit = jnp.any(eq, axis=-1)
+    way = jnp.min(jnp.where(eq, lane, kp), axis=-1)
+
+    do = hit & (en != 0)
+    way_c = jnp.clip(way, 0, kp - 1)
+    if policy == Policy.LRU:
+        ma1 = meta_a.at[sets, way_c].max(
+            jnp.where(do, times_get, -(2**31 - 1)))
+    elif policy in (Policy.LFU, Policy.HYPERBOLIC):
+        ma1 = meta_a.at[sets, way_c].add(jnp.where(do, 1, 0))
+    else:
+        ma1 = meta_a                             # FIFO / RANDOM: identity
+
+    sc = _scores(policy, row_keys.astype(jnp.uint32), ma1[sets],
+                 meta_b[sets], times_put[:, None])
+    sc = jnp.where(occupied, sc, NEG_INF)
+    sc = jnp.where(valid, sc, POS_INF)
+    order = jnp.argsort(sc, axis=-1).astype(jnp.int32)   # stable: lane ties
+    order = jnp.where(jnp.arange(kp)[None, :] < ways, order, kp)
+    return (hit.astype(jnp.int32),
+            jnp.where(hit, way, 0).astype(jnp.int32),
+            order)
 
 
 # ---------------------------------------------------------------------------

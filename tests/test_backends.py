@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import traces
-from repro.core.backend import available_backends, make_backend
+from repro.core.backend import CacheBackend, available_backends, make_backend
 from repro.core.kway import KWayConfig
 from repro.core.policies import Policy
 
@@ -162,6 +162,109 @@ def test_states_interchangeable_between_backends(rng):
     np.testing.assert_array_equal(np.asarray(evj), np.asarray(evp))
     _assert_states_equal(sj, sp, "warm-state handoff")
     assert np.asarray(hj).any()  # the warm state actually carried over
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fused_access_equals_two_phase(policy, backend, rng):
+    """The fused single-probe ``access`` == the two-phase get-then-put
+    composition, bit-for-bit at any batch size: hits, vals, evictions and
+    final state — including duplicate keys, same-set collision ranks,
+    enabled masks, and batches that don't tile the kernel."""
+    cfg = KWayConfig(num_sets=4, ways=4, policy=policy)
+    be = make_backend(backend, cfg)
+    sf, st = be.init(), be.init()
+    for step in range(8):
+        b = [1, 7, 8, 32][step % 4]
+        keys = rng.integers(0, 48, b).astype(np.uint32)
+        keys[: b // 3] = keys[0]                      # forced duplicates
+        en = None if step % 3 else jnp.asarray(rng.random(b) < 0.8)
+        k = jnp.asarray(keys)
+        v = jnp.asarray(keys.astype(np.int32))
+        sf, hf, vf, ekf, evf = be.access(sf, k, v, enabled=en)
+        st, ht, vt, ekt, evt = be.access_two_phase(st, k, v, enabled=en)
+        np.testing.assert_array_equal(np.asarray(hf), np.asarray(ht))
+        np.testing.assert_array_equal(np.asarray(vf), np.asarray(vt))
+        np.testing.assert_array_equal(np.asarray(evf), np.asarray(evt))
+        np.testing.assert_array_equal(
+            np.asarray(ekf)[np.asarray(evf)], np.asarray(ekt)[np.asarray(evt)])
+    _assert_states_equal(sf, st, f"{backend}/{policy}: fused vs two-phase")
+
+
+@pytest.mark.parametrize("policy", [Policy.LRU, Policy.LFU])
+def test_fused_access_equals_two_phase_sampled(policy, rng):
+    """Sampled-policy configs (jnp only) take the fused path too."""
+    cfg = KWayConfig(num_sets=1, ways=64, policy=policy, sample=8)
+    be = make_backend("jnp", cfg)
+    sf, st = be.init(), be.init()
+    for step in range(6):
+        keys = rng.integers(0, 200, 16).astype(np.uint32)
+        k = jnp.asarray(keys)
+        v = jnp.asarray(keys.astype(np.int32))
+        sf, hf, *_ = be.access(sf, k, v)
+        st, ht, *_ = be.access_two_phase(st, k, v)
+        np.testing.assert_array_equal(np.asarray(hf), np.asarray(ht))
+    _assert_states_equal(sf, st, f"sampled/{policy}")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("policy", [Policy.LRU, Policy.LFU])
+def test_fused_access_equals_two_phase_tinylfu(backend, policy):
+    """±TinyLFU: the fused path under admission gating replays to the same
+    hit count and final state as the two-phase path."""
+    import jax.numpy as _jnp
+
+    from repro.core import admission, traces
+    from repro.core.simulate import SimConfig, _replay_scan
+    cfg = KWayConfig(num_sets=8, ways=4, policy=policy)
+    tl = admission.for_capacity(32)
+    tr = _jnp.asarray(np.asarray(
+        traces.generate("zipf", 250, seed=3, catalog=64), np.uint32))
+    hf, sf = _replay_scan(SimConfig(cfg, tl, backend=backend), tr)
+    ht, st = _replay_scan(
+        SimConfig(cfg, tl, backend=backend, two_phase=True), tr)
+    assert int(hf) == int(ht)
+    _assert_states_equal(sf, st, f"{backend}/{policy}/tinylfu")
+
+
+def test_ref_access_is_two_phase_and_matches_fused(rng):
+    """The ref oracle's ``access`` IS the two-phase composition (no fused
+    path to diverge), and the fused jnp path still matches it at B=1."""
+    cfg = KWayConfig(num_sets=8, ways=4, policy=Policy.HYPERBOLIC)
+    br, bj = make_backend("ref", cfg), make_backend("jnp", cfg)
+    assert type(br).access is CacheBackend.access
+    sr, s1, s2 = br.init(), bj.init(), bj.init()
+    for t in _zipf(80, seed=9, catalog=40):
+        k = jnp.asarray([t], jnp.uint32)
+        v = jnp.asarray([int(t)], jnp.int32)
+        sr, hr, *_ = br.access(sr, k, v)
+        s1, h1, *_ = bj.access(s1, k, v)
+        s2, h2, *_ = bj.access_two_phase(s2, k, v)
+        assert bool(hr[0]) == bool(h1[0]) == bool(h2[0])
+    _assert_states_equal(sr, s1, "ref vs jnp fused")
+    _assert_states_equal(s1, s2, "jnp fused vs jnp two-phase")
+
+
+def test_access_donated_matches_and_consumes_state():
+    """The donating entry point returns the same result as the plain fused
+    path while updating the KWayState buffers in place (the donated input
+    is dead afterwards on backends that implement donation)."""
+    from repro.core import kway
+    cfg = KWayConfig(num_sets=8, ways=4, policy=Policy.LRU)
+    keys = jnp.asarray(np.arange(16, dtype=np.uint32))
+    vals = keys.astype(jnp.int32)
+    s_plain, h1, v1, *_ = kway.access(cfg, kway.make_cache(cfg), keys, vals)
+    s0 = kway.make_cache(cfg)
+    s_don, h2, v2, *_ = kway.access_donated(cfg, s0, keys, vals)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    _assert_states_equal(s_plain, s_don, "donated")
+    # the in-place chaining pattern every replay loop uses
+    s_don, *_ = kway.access_donated(cfg, s_don, keys, vals)
+    assert int(s_don.clock) == 64
+    if hasattr(s0.keys, "is_deleted"):
+        # jax with donation support consumed the input buffers
+        assert s0.keys.is_deleted()
 
 
 def test_peek_victims_agree(rng):

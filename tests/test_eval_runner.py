@@ -102,6 +102,35 @@ def test_compiles_once_per_shape_not_per_config():
     runner.reset_trace_counts()
 
 
+def test_runner_matches_fused_and_two_phase_replay():
+    """The stacked sweep, the fused backend replay, and the two-phase
+    backend replay all produce the same hit ratio — the runner's B=1 step is
+    the single-probe specialization of the fused access semantics."""
+    spec = HitRatioSpec(
+        families=("zipf",), policies=(Policy.LRU, Policy.RANDOM),
+        assoc=("k4",), backends=("jnp",), capacity=64, n=300, seeds=(8,))
+    records, _ = runner.run_hit_ratio_sweep(spec)
+    tr = traces.generate("zipf", 300, seed=8)
+    for rec in records:
+        cfg = KWayConfig(num_sets=rec["num_sets"], ways=rec["ways"],
+                         policy=Policy[rec["policy"]])
+        fused = replay(SimConfig(cfg), tr)
+        two = replay(SimConfig(cfg, two_phase=True), tr)
+        assert fused == two == pytest.approx(rec["value"], abs=1e-9), \
+            rec["id"]
+
+
+def test_sweep_asserts_compile_economy():
+    """run_hit_ratio_sweep itself enforces <= one compile per shape group
+    (the in-driver trace_counts() assertion) — running the same spec twice
+    must not trip it (jit cache reuse counts as zero new compiles)."""
+    spec = HitRatioSpec(
+        families=("zipf",), policies=(Policy.LRU,), assoc=("k4",),
+        backends=("jnp",), capacity=64, n=200, seeds=(3,))
+    runner.run_hit_ratio_sweep(spec)
+    runner.run_hit_ratio_sweep(spec)   # second run: zero fresh traces
+
+
 def test_skips_are_loud():
     """Unsupported combos are reported, never silently dropped."""
     spec = HitRatioSpec(

@@ -42,16 +42,24 @@ def golden_trace() -> np.ndarray:
     return tr
 
 
-def replay_events(backend: str, policy: Policy) -> dict:
+def replay_events(backend: str, policy: Policy,
+                  two_phase: bool = False) -> dict:
     """B=1 replay -> {hits: "0101...", evictions: [[i, key]...],
-    final_keys: [...row-major, EMPTY as -1...]}."""
+    final_keys: [...row-major, EMPTY as -1...]}.
+
+    ``access`` is the fused single-probe path on jnp/pallas;
+    ``two_phase=True`` replays through the unfused get-then-put oracle
+    instead — both must match the same pinned golden (the fused path is
+    bit-identical by construction, and this file is the tripwire).
+    """
     cfg = KWayConfig(policy=policy, **CONFIG)
     be = make_backend(backend, cfg)
+    access = be.access_two_phase if two_phase else be.access
     state = be.init()
     hits, evictions = [], []
     for i, t in enumerate(golden_trace()):
         k = jnp.asarray([t], jnp.uint32)
-        state, hit, _, ek, ev = be.access(state, k, k.astype(jnp.int32))
+        state, hit, _, ek, ev = access(state, k, k.astype(jnp.int32))
         hits.append("1" if bool(hit[0]) else "0")
         if bool(ev[0]):
             evictions.append([i, int(ek[0])])
@@ -92,9 +100,9 @@ def test_golden_file_is_current_config():
     assert g["policies"] == [p.name for p in POLICIES]
 
 
-def _check(backend: str, policy: Policy):
+def _check(backend: str, policy: Policy, two_phase: bool = False):
     want = _load_golden()["per_policy"][policy.name]
-    got = replay_events(backend, policy)
+    got = replay_events(backend, policy, two_phase=two_phase)
     # hit flags: diff the first divergence for a readable failure
     if got["hits"] != want["hits"]:
         i = next(i for i, (a, b) in
@@ -131,6 +139,26 @@ def test_golden_ref_lru():
 
 def test_golden_ref_random():
     _check("ref", Policy.RANDOM)
+
+
+# The two-phase oracle must pin to the SAME golden as the (default, fused)
+# access path above — together these six + four tests are the fused-access
+# bit-identity criterion on the 512-request trace.
+
+def test_golden_jnp_lru_two_phase():
+    _check("jnp", Policy.LRU, two_phase=True)
+
+
+def test_golden_jnp_random_two_phase():
+    _check("jnp", Policy.RANDOM, two_phase=True)
+
+
+def test_golden_pallas_lru_two_phase():
+    _check("pallas", Policy.LRU, two_phase=True)
+
+
+def test_golden_pallas_random_two_phase():
+    _check("pallas", Policy.RANDOM, two_phase=True)
 
 
 if __name__ == "__main__":

@@ -67,6 +67,65 @@ def test_kway_probe_full_order(policy, rng):
                                   np.asarray(out_k[2]))
 
 
+@pytest.mark.parametrize("policy", [Policy.LRU, Policy.RANDOM])
+def test_kway_probe_need_victims_false(policy, rng):
+    """The read-path variant skips victim selection and returns exactly the
+    (hit, way) of the full probe — kernel and oracle alike."""
+    s, ways, b = 32, 8, 24
+    keys, ma, mb = _mk_cache(rng, s, ways)
+    sets = rng.integers(0, s, b).astype(np.int32)
+    qk = np.where(
+        rng.random(b) < 0.5,
+        keys[sets, rng.integers(0, ways, b)],
+        rng.integers(0, 5000, b),
+    ).astype(np.int32)
+    times = (np.arange(b) + 7).astype(np.int32)
+    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    out_lean = kway_probe(*args, policy=int(policy), ways=ways, qt=8,
+                          need_victims=False)
+    out_full = kway_probe(*args, policy=int(policy), ways=ways, qt=8)
+    out_ref = ref.kway_probe_ref(*args, policy=int(policy), ways=ways,
+                                 need_victims=False)
+    assert len(out_lean) == len(out_ref) == 2
+    for name, lean, full_, r in zip(["hit", "way"], out_lean, out_full,
+                                    out_ref):
+        np.testing.assert_array_equal(np.asarray(lean), np.asarray(full_),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(lean), np.asarray(r),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_kway_fused_probe_sweep(policy, rng):
+    """Single-launch fused probe == oracle: raw hits, hit ways, and the
+    full victim order scored on hit-updated metadata at put-phase times —
+    including disabled lanes (en=0) that must not perturb the scores."""
+    from repro.kernels.kway_probe import kway_fused_probe
+
+    s, ways, b = 32, 8, 24
+    keys, ma, mb = _mk_cache(rng, s, ways)
+    sets = rng.integers(0, s, b).astype(np.int32)
+    qk = np.where(
+        rng.random(b) < 0.5,
+        keys[sets, rng.integers(0, ways, b)],
+        rng.integers(0, 5000, b),
+    ).astype(np.int32)
+    # times > meta_b everywhere (live-state invariant; see full_order test)
+    tg = (np.arange(b) + 60).astype(np.int32)
+    tp = tg + b
+    en = (rng.random(b) < 0.8).astype(np.int32)
+    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, tg, tp, en)]
+    out_k = kway_fused_probe(*args, policy=int(policy), ways=ways, qt=8)
+    out_r = ref.kway_fused_probe_ref(*args, policy=int(policy), ways=ways)
+    np.testing.assert_array_equal(np.asarray(out_k[0]), np.asarray(out_r[0]),
+                                  err_msg="hit")
+    np.testing.assert_array_equal(np.asarray(out_k[1]), np.asarray(out_r[1]),
+                                  err_msg="way")
+    np.testing.assert_array_equal(
+        np.asarray(out_k[2])[:, :ways], np.asarray(out_r[2])[:, :ways],
+        err_msg="vorder")
+
+
 def test_kway_probe_empty_cache(rng):
     keys = np.full((8, 128), -1, np.int32)
     zeros = np.zeros((8, 128), np.int32)
