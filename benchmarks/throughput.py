@@ -10,6 +10,12 @@ steady-state timing).  Two surfaces:
     ``--hit-ratio-gate BASELINE``) replays a slice of the baseline grid
     through the fused path and **fails (exit 3)** if any hit ratio diverges
     from the checked-in baseline.  This is the CI perf-smoke entry point.
+  * ``--shards-compare``: the shards∈{1,2,4,8} scaling figure
+    (``figures.throughput_vs_shards`` — routed serving ticks + single-scan
+    no-host-sync rows) — writes its BENCH artifact and (with
+    ``--hit-ratio-gate``) band-gates the sharded replay's hit ratios at
+    shards ∈ {1, 4} against the checked-in baseline grid (exit 3 on
+    breach).  The CI sharded perf-smoke entry point.
 """
 import argparse
 import sys
@@ -77,6 +83,110 @@ def fused_hit_ratio_gate(baseline_path: str, tol: float = 1e-6):
     return checked, breaches
 
 
+def sharded_hit_ratio_gate(baseline_path: str, shards=(1, 4),
+                           tol: float = 0.02, records=None):
+    """Replay a slice of the baseline hit-ratio grid through the set-sharded
+    single-scan path (``replay_batched(shards=D)``) and diff against the
+    checked-in B=1 values.  Batched conflict resolution perturbs hit ratios
+    slightly (DESIGN.md §2), so the band is ``tol`` — a real routing or
+    shard-state bug moves hit ratios by far more.
+
+    ``records`` (optional): a fresh ``throughput_vs_shards`` record list —
+    its comparable hit-ratio rows are reused instead of re-running the same
+    replays (they carry the same family/policy/assoc/shards/n provenance);
+    rows whose ``n`` does not match the baseline record are recomputed.
+
+    Returns (checked, breaches).
+    """
+    from repro.core import traces
+    from repro.core.policies import Policy
+    from repro.eval import artifacts
+    from repro.eval.runner import SweepPoint, replay_sharded_point
+
+    base = artifacts.load_artifact(baseline_path)
+    by_id = {r["id"]: r for r in base["records"]}
+    fresh = {}
+    for r in records or []:
+        if r.get("metric") == "hit_ratio" and "shards" in r:
+            # full provenance in the key: a record computed from a different
+            # trace (seed/n) or cache shape must never stand in for the
+            # baseline's configuration — fall through to a recompute instead
+            fresh[(r["family"], r["policy"], r["shards"], r["n"],
+                   r.get("seed"), r.get("capacity"), r.get("assoc"))] \
+                = r["value"]
+    checked, breaches = 0, []
+    trace_cache = {}
+    for family in ("zipf", "scan_loop"):
+        for policy in (Policy.LRU, Policy.LFU):
+            rid = f"{family}/{policy.name}/k8/jnp/none"
+            rec = by_id.get(rid)
+            if rec is None:
+                continue
+            seed, n = rec["seeds"][0], rec["n"]
+            for d in shards:
+                hr = fresh.get((family, policy.name, d, n, seed,
+                                rec["capacity"], "k8"))
+                if hr is None:
+                    if (family, seed, n) not in trace_cache:
+                        trace_cache[(family, seed, n)] = traces.generate(
+                            family, n, seed=seed)
+                    p = SweepPoint(family=family, policy=policy, assoc="k8",
+                                   capacity=rec["capacity"], seed=seed, n=n)
+                    hr = replay_sharded_point(
+                        p, shards=d, batch=256,
+                        trace=trace_cache[(family, seed, n)])
+                checked += 1
+                want = rec["per_seed"][0]
+                if abs(hr - want) > tol:
+                    breaches.append(
+                        f"{rid} @shards={d}: sharded hit ratio {hr:.4f} vs "
+                        f"baseline {want:.4f} (|delta| > {tol})")
+    if checked == 0:
+        breaches.append(
+            f"no baseline record ids matched in {baseline_path} — id scheme "
+            "or baseline drift has turned this gate into a no-op")
+    return checked, breaches
+
+
+def _shards_compare(args) -> int:
+    from repro.eval import artifacts
+
+    spec, records, skipped = figures.throughput_vs_shards(
+        quick=args.quick,
+        progress=None if args.quiet else
+        (lambda m: print(f"  [throughput_shards] {m}", flush=True)))
+    art = artifacts.make_artifact("throughput_vs_shards", spec, records,
+                                  skipped)
+    out = args.out or "BENCH_throughput_vs_shards.json"
+    artifacts.write_artifact(out, art)
+
+    by_id = {r["id"]: r for r in records}
+    print("\nsharded scaling (fixed per-shard tick batch of "
+          f"{spec['tick_batch']}; p50 steady-state):")
+    print(f"{'shards':>6} {'tick req/s':>12} {'scan req/s':>12} "
+          f"{'tick speedup':>13}")
+    for d in spec["shards"]:
+        tick = by_id[f"sharded-jnp-shard{d}/batch{d * spec['tick_batch']}"]
+        scan = by_id[f"scan-shard{d}/batch{d * spec['tick_batch']}"]
+        scale = by_id[f"scaling-shard{d}/batch{d * spec['tick_batch']}"]
+        print(f"{d:>6} {tick['p50_req_s']:>12.0f} {scan['p50_req_s']:>12.0f} "
+              f"{scale['value']:>12.2f}x")
+    print(f"\n{len(records)} records -> {out}")
+
+    if args.hit_ratio_gate:
+        checked, breaches = sharded_hit_ratio_gate(args.hit_ratio_gate,
+                                                   records=records)
+        if breaches:
+            print(f"SHARDED HIT-RATIO GATE FAILED vs {args.hit_ratio_gate}:",
+                  file=sys.stderr)
+            for b in breaches:
+                print(f"  {b}", file=sys.stderr)
+            return 3
+        print(f"sharded hit-ratio gate ok: {checked} shard×record points "
+              f"within band of {args.hit_ratio_gate}")
+    return 0
+
+
 def _fused_compare(args) -> int:
     from repro.eval import artifacts
 
@@ -133,15 +243,22 @@ def main(argv=None) -> int:
     ap.add_argument("--fused-compare", action="store_true",
                     help="fused-vs-two-phase comparison + BENCH artifact "
                          "(the CI perf-smoke mode)")
+    ap.add_argument("--shards-compare", action="store_true",
+                    help="throughput-vs-shards scaling figure + BENCH "
+                         "artifact (the CI sharded perf-smoke mode)")
     ap.add_argument("--out", default=None,
-                    help="artifact path for --fused-compare "
-                         "(default BENCH_throughput_vs_batch.json)")
+                    help="artifact path for --fused-compare / "
+                         "--shards-compare (default BENCH_<figure>.json)")
     ap.add_argument("--hit-ratio-gate", default=None, metavar="BASELINE",
-                    help="with --fused-compare: replay a slice of this "
-                         "baseline grid through the fused path; exit 3 on "
-                         "any hit-ratio divergence")
+                    help="with --fused-compare (or --shards-compare): "
+                         "replay a slice of this baseline grid through the "
+                         "fused (or sharded) path; exit 3 on divergence")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+    if args.fused_compare and args.shards_compare:
+        ap.error("--fused-compare and --shards-compare are separate modes")
+    if args.shards_compare:
+        return _shards_compare(args)
     if args.fused_compare:
         return _fused_compare(args)
     run(quick=args.quick)

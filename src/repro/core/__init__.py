@@ -8,6 +8,8 @@ Public API:
     CacheBackend layer — backend.{make_backend, available_backends}
                          ("jnp" | "pallas" | "ref", one contract — DESIGN.md §3)
     Set sharding       — sharded.{ShardedConfig, ShardedCache} (DESIGN.md §5)
+    Request routing    — router.{route, bucket, unscatter}: the device-
+                         resident owner router behind sharding (DESIGN.md §9)
     simulate.replay    — jitted hit-ratio trace replay
     traces.generate    — synthetic workload families
 """

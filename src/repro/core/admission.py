@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -85,21 +86,32 @@ def estimate(cfg: TinyLFUConfig, st: TinyLFUState, keys: jnp.ndarray) -> jnp.nda
 
 
 @partial(jax.jit, static_argnums=0)
-def record(cfg: TinyLFUConfig, st: TinyLFUState, keys: jnp.ndarray) -> TinyLFUState:
+def record(cfg: TinyLFUConfig, st: TinyLFUState, keys: jnp.ndarray,
+           enabled: Optional[jnp.ndarray] = None) -> TinyLFUState:
     """Record one access per key (batched).
 
     First access goes to the doorkeeper; repeat offenders increment the
     sketch.  Saturating 4-bit adds; duplicate batch keys coalesce into a
     single increment per step (an accepted approximation — the serial
-    oracle in tests uses B=1 where semantics are exact).
+    oracle in tests uses B=1 where semantics are exact).  ``enabled``
+    (bool[B], optional) masks whole lanes: a disabled lane touches neither
+    the doorkeeper, the counters, nor the aging tally — used for the tail
+    padding of batched replays and the padding lanes of the sharded router.
     """
     keys = hashing.sanitize_keys(keys)
+    if enabled is None:
+        enabled = jnp.ones(keys.shape, jnp.bool_)
     dh = hashing.hash_u32(keys, seed=0xD00E) & jnp.uint32(cfg.door_bits - 1)
     dword = (dh >> 5).astype(jnp.int32)
-    dmask = jnp.uint32(1) << (dh & jnp.uint32(31))
+    dmask = jnp.where(enabled, jnp.uint32(1) << (dh & jnp.uint32(31)),
+                      jnp.uint32(0))
     in_door = (st.door[dword] & dmask) != 0
 
-    door = st.door.at[dword].set(st.door[dword] | dmask)
+    # Disabled lanes scatter out of bounds (dropped): writing their word
+    # back unchanged is NOT a no-op under duplicate indices — a stale
+    # rewrite can clobber an enabled lane's fresh bit in the same word.
+    dword_w = jnp.where(enabled, dword, jnp.int32(cfg.door_bits // 32))
+    door = st.door.at[dword_w].set(st.door[dword] | dmask, mode="drop")
 
     word, shift = _positions(cfg, keys)          # [ROWS, B]
     rows = jnp.arange(_ROWS)[:, None]
@@ -113,7 +125,7 @@ def record(cfg: TinyLFUConfig, st: TinyLFUState, keys: jnp.ndarray) -> TinyLFUSt
         jnp.where(inc != 0, new_word_val, jnp.uint32(0))
     )
 
-    additions = st.additions + keys.shape[0]
+    additions = st.additions + jnp.sum(enabled.astype(jnp.int32))
     st2 = TinyLFUState(packed=packed, door=door, additions=additions)
     return jax.lax.cond(
         additions >= cfg.sample, lambda s: _age(s), lambda s: s, st2

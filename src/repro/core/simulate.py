@@ -15,8 +15,10 @@ updates do not hurt policy quality).
 
 Both entry points accept ``SimConfig.backend`` ("jnp" | "pallas" | "ref");
 ``replay_batched`` additionally takes ``shards`` to run the set-sharded
-execution layer (core/sharded.py).  The ``ref`` backend replays in plain
-Python (it is the differential-testing oracle, not a throughput path).
+execution layer (core/sharded.py) — since PR 4 a single jitted ``lax.scan``
+with device-resident routing that composes with TinyLFU (per-shard
+sketches) and ``two_phase``.  The ``ref`` backend replays in plain Python
+(it is the differential-testing oracle, not a throughput path).
 """
 from __future__ import annotations
 
@@ -28,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import admission
+from repro.core import admission, router
 from repro.core.backend import make_backend
 from repro.core.kway import KWayConfig
 
@@ -100,35 +102,39 @@ def replay(sim: SimConfig, trace: np.ndarray) -> float:
     return float(hits) / trace.shape[0]
 
 
-@partial(jax.jit, static_argnums=(0, 2))
-def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
+@partial(jax.jit, static_argnums=0)
+def _replay_batched_scan(sim: SimConfig, chunks: jnp.ndarray,
+                         enabled: jnp.ndarray):
+    """Scan over pre-chunked trace [steps, B] with an enabled mask — the
+    tail chunk is padded with disabled lanes, so hit ratios cover the whole
+    trace (padding lanes touch neither the cache nor the sketch)."""
     be = make_backend(sim.backend, sim.cache)
     access = _access_fn(sim, be)
     cache = be.init()
     sketch = admission.make_sketch(sim.tinylfu) if sim.tinylfu else None
-    steps = trace.shape[0] // batch
-    chunks = trace[: steps * batch].reshape(steps, batch)
 
-    def step(carry, keys):
+    def step(carry, xs):
         cache, sketch, hits = carry
+        keys, en = xs
         if sim.tinylfu is None:
-            cache, hit, _, _, _ = access(cache, keys, keys.astype(jnp.int32))
+            cache, hit, _, _, _ = access(
+                cache, keys, keys.astype(jnp.int32), None, en)
         else:
             # Same phase order as the sequential path, per chunk: record the
             # accesses, peek each request's prospective victim, gate admission.
             # Duplicate keys within a chunk coalesce in the sketch (documented
             # record() approximation), so batched+TinyLFU tracks — not equals —
             # sequential+TinyLFU; tests bound the hit-ratio gap.
-            sketch = admission.record(sim.tinylfu, sketch, keys)
+            sketch = admission.record(sim.tinylfu, sketch, keys, enabled=en)
             vkeys, vvalid = be.peek_victims(cache, keys)
             ok = admission.admit(sim.tinylfu, sketch, keys, vkeys, vvalid)
             cache, hit, _, _, _ = access(
-                cache, keys, keys.astype(jnp.int32), admit_on_miss=ok
+                cache, keys, keys.astype(jnp.int32), ok, en
             )
         return (cache, sketch, hits + jnp.sum(hit.astype(jnp.int32))), ()
 
     (cache, _, hits), _ = jax.lax.scan(
-        step, (cache, sketch, jnp.zeros((), jnp.int32)), chunks
+        step, (cache, sketch, jnp.zeros((), jnp.int32)), (chunks, enabled)
     )
     return hits, cache
 
@@ -136,22 +142,18 @@ def _replay_batched_scan(sim: SimConfig, trace: jnp.ndarray, batch: int):
 def replay_batched(
     sim: SimConfig, trace: np.ndarray, batch: int = 64, shards: int = 1
 ) -> float:
-    """Batched replay -> hit ratio.  ``shards`` > 1 runs the set-sharded
-    layer (shard_map when a device mesh is available, vmap emulation
-    otherwise) with host-side key bucketing per chunk."""
+    """Batched replay -> hit ratio over the WHOLE trace (the tail chunk is
+    padded with disabled lanes on every path).
+
+    ``shards`` > 1 replays through the set-sharded layer as a single jitted
+    ``lax.scan`` — device-resident routing (core/router.py), per-shard
+    TinyLFU sketches, and ``two_phase`` all compose with sharding; only the
+    sequential-Python ``ref`` oracle cannot be sharded."""
     trace = np.asarray(trace, np.uint32)
-    n = (trace.shape[0] // batch) * batch
-    if sim.tinylfu is not None and shards > 1:
-        raise ValueError(
-            "TinyLFU admission is not wired into the set-sharded layer "
-            "(the sketch is global, shards are independent); use shards=1")
+    n = trace.shape[0]
     if sim.tinylfu is not None and sim.backend == "ref":
         raise ValueError("TinyLFU replay is not wired for the ref backend")
     if shards > 1:
-        if sim.two_phase:
-            raise ValueError(
-                "two_phase replay is not wired into the set-sharded layer "
-                "(ShardedCache runs the fused access); use shards=1")
         if sim.backend == "ref":
             raise ValueError(
                 "the ref backend is sequential host Python and cannot be "
@@ -160,22 +162,22 @@ def replay_batched(
 
         sc = ShardedCache(ShardedConfig(
             cache=sim.cache, num_shards=shards, backend=sim.backend))
-        state = sc.init()
-        hits = 0
-        for i in range(0, n, batch):
-            chunk = trace[i : i + batch]
-            state, hit, _, _, _ = sc.access(state, chunk, chunk.astype(np.int32))
-            hits += int(hit.sum())
+        hits, _, _ = sc.replay(trace, batch, tinylfu=sim.tinylfu,
+                               two_phase=sim.two_phase)
         return hits / n
     if sim.backend == "ref":
         be = make_backend(sim.backend, sim.cache)
         access = _access_fn(sim, be)
         cache = be.init()
+        chunks, enabled = router.pad_chunks(trace, batch)
         hits = 0
-        for i in range(0, n, batch):
-            chunk = jnp.asarray(trace[i : i + batch])
-            cache, hit, _, _, _ = access(cache, chunk, chunk.astype(jnp.int32))
+        for chunk, en in zip(chunks, enabled):
+            cache, hit, _, _, _ = access(
+                cache, jnp.asarray(chunk), jnp.asarray(chunk, jnp.int32),
+                None, jnp.asarray(en))
             hits += int(np.asarray(hit).sum())
         return hits / n
-    hits, _ = _replay_batched_scan(sim, jnp.asarray(trace), batch)
+    chunks, enabled = router.pad_chunks(trace, batch)
+    hits, _ = _replay_batched_scan(
+        sim, jnp.asarray(chunks), jnp.asarray(enabled))
     return float(hits) / n

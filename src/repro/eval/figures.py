@@ -10,6 +10,9 @@ Each function runs one figure family's sweep and returns
   * ``admission_ablation``         — TinyLFU on/off at k=8 (paper §5.2).
   * ``throughput_vs_batch``        — Figs. 14-26 analogue: batch size stands
     in for thread count; layouts, backends and the sharded layer.
+  * ``throughput_vs_shards``       — the threads-vs-throughput scaling plot:
+    shards stand in for threads, each bringing its own per-tick request
+    stream; includes the single-scan no-host-sync replay rows.
   * ``synthetic_mix``              — Figs. 27-30: fixed hit-rate workloads.
   * ``serving``                    — end-to-end prefix-cache serving rows.
 
@@ -25,7 +28,8 @@ from repro.core.policies import Policy
 from repro.eval import runner
 from repro.eval.runner import HitRatioSpec
 from repro.eval.timing import (time_chained_percentiles, time_host,
-                               time_jitted, time_jitted_percentiles)
+                               time_jitted, time_jitted_percentiles,
+                               time_replay_percentiles)
 
 QUICK_N = 6_000
 FULL_N = 60_000
@@ -227,6 +231,10 @@ def throughput_vs_batch(quick: bool = False, progress=None,
                 if len(chunk) < b:
                     chunk = chunk0
                 st, *_ = sc.access(st, chunk, chunk.astype(np.int32))
+            # access() returns device arrays now (the router runs on
+            # device); block so the timed region covers the execution,
+            # not just the async dispatch
+            jax.block_until_ready(st.keys)
 
         n_chunks = 10
         dt = time_host(run_chunks, n_chunks, iters=1) / n_chunks
@@ -235,6 +243,116 @@ def throughput_vs_batch(quick: bool = False, progress=None,
     spec = {"quick": quick, "batches": list(batches),
             "policy": policy.name, "backends": list(backends),
             "shards": list(shards), "capacity": THROUGHPUT_CAPACITY}
+    return spec, records, []
+
+
+def throughput_vs_shards(quick: bool = False, progress=None,
+                         shards=(1, 2, 4, 8)):
+    """The paper's threads-vs-throughput plot (Figs. 14-26 headline), with
+    set shards standing in for threads: each shard is one consumer bringing
+    its own fixed-size request stream per serving tick, so the offered load
+    per tick is ``D × tick_batch`` — exactly the paper's methodology, where
+    every added thread drives its own request loop.
+
+    Rows per shard count (jnp backend, LRU, k=8):
+
+      * ``sharded-jnp-shard{D}`` — p50/p90 req/s of the routed serving tick
+        (ONE jitted call: device router + per-shard fused access + unscatter,
+        shard states donated and rebound).  The scaling headline: per-tick
+        dispatch cost is flat while the routed tick carries D× requests.
+      * ``scan-shard{D}``        — whole-trace replay as a single jitted
+        ``lax.scan`` (``ShardedCache.replay``): ONE host sync for the entire
+        trace, no per-chunk bucketing or transfers (the no-host-sync row).
+      * ``scaling-shard{D}``     — tick p50 speedup over shard1.
+
+    Plus comparable hit-ratio records for shards ∈ {1, 4} on a slice of the
+    baseline grid (tol-gated against benchmarks/baselines/quick.json by the
+    CI perf-smoke step — batched replay tracks the B=1 baseline within a
+    small band, it is not bit-equal).
+    """
+    import numpy as np
+
+    from repro.core import traces
+    from repro.core.kway import KWayConfig
+    from repro.core.sharded import ShardedCache, ShardedConfig
+    from repro.eval.runner import SweepPoint, replay_sharded_point
+
+    policy = Policy.LRU
+    kcfg = KWayConfig(num_sets=THROUGHPUT_CAPACITY // 8, ways=8,
+                      policy=policy)
+    tick_batch = 32                      # per-shard per-tick lane budget
+    n_scan = 65_536 if quick else 262_144
+    tr = traces.generate("zipf", n_scan, seed=7, catalog=1 << 14)
+    records = []
+    tick_p50 = {}
+
+    for d in shards:
+        if progress:
+            progress(f"shards={d} (tick + scan)")
+        bg = d * tick_batch
+        sc = ShardedCache(ShardedConfig(cache=kcfg, num_shards=d,
+                                        donate=True))
+        st = sc.init()
+        offs = [(i * bg) % (n_scan - bg) for i in range(64)]
+        it = {"i": 0}
+
+        def tick():
+            chunk = tr[offs[it["i"] % len(offs)]:][:bg]
+            it["i"] += 1
+            nonlocal_state = tick.state
+            st2, hit, *_ = sc.access(nonlocal_state, chunk,
+                                     chunk.astype(np.int32))
+            tick.state = st2
+            return hit
+
+        tick.state = st
+        stats = time_chained_percentiles(tick)
+        tick_p50[d] = bg / stats["p50"]
+        records.append(_tp_record(
+            f"sharded-jnp-shard{d}", bg, bg / stats["p50"] / 1e6,
+            shards=d, per_shard_batch=tick_batch,
+            p90_mops=round(bg / stats["p90"] / 1e6, 3),
+            p50_req_s=round(bg / stats["p50"], 1),
+            p90_req_s=round(bg / stats["p90"], 1)))
+
+        # no-host-sync row: the whole trace in one scan, one sync at the end
+        sc2 = ShardedCache(ShardedConfig(cache=kcfg, num_shards=d))
+        rstats = time_replay_percentiles(
+            lambda: sc2.replay(tr, bg), iters=3 if quick else 5)
+        records.append(_tp_record(
+            f"scan-shard{d}", bg, n_scan / rstats["p50"] / 1e6,
+            shards=d, host_syncs_per_replay=1, n=n_scan,
+            p50_req_s=round(n_scan / rstats["p50"], 1),
+            p90_req_s=round(n_scan / rstats["p90"], 1)))
+
+    for d in shards:
+        records.append(_tp_record(
+            f"scaling-shard{d}", d * tick_batch,
+            tick_p50[d] / tick_p50[1], metric="speedup_x", shards=d))
+
+    # comparable hit-ratio rows: the sharded batched replay vs the B=1 grid
+    n_hr = QUICK_N if quick else FULL_N
+    for d in (1, 4):
+        for family in ("zipf", "scan_loop"):
+            for pol in (Policy.LRU, Policy.LFU):
+                if progress:
+                    progress(f"hit-ratio {family}/{pol.name}/shard{d}")
+                p = SweepPoint(family=family, policy=pol, assoc="k8",
+                               capacity=1024, n=n_hr)
+                hr = replay_sharded_point(p, shards=d, batch=256)
+                records.append({
+                    "id": f"{family}/{pol.name}/k8/jnp/shard{d}",
+                    "family": family, "policy": pol.name, "assoc": "k8",
+                    "shards": d, "batch": 256, "n": n_hr,
+                    "capacity": p.capacity, "seed": p.seed,
+                    "metric": "hit_ratio", "value": hr,
+                    "comparable": True, "tol": 0.02,
+                })
+
+    spec = {"quick": quick, "shards": list(shards),
+            "tick_batch": tick_batch, "n_scan": n_scan,
+            "policy": policy.name, "capacity": THROUGHPUT_CAPACITY,
+            "backend": "jnp"}
     return spec, records, []
 
 
@@ -346,6 +464,7 @@ FIGURES = {
     "sampled_vs_limited": (sampled_vs_limited, "sampled_vs_limited"),
     "admission": (admission_ablation, "admission_ablation"),
     "throughput": (throughput_vs_batch, "throughput_vs_batch"),
+    "throughput_shards": (throughput_vs_shards, "throughput_vs_shards"),
     "synthetic_mix": (synthetic_mix, "synthetic_mix"),
     "serving": (serving, "serving"),
 }

@@ -344,6 +344,32 @@ def _replay_group_pallas(num_sets, ways, hash_seed, policy, tinylfu, trace_cn):
 
 
 # ---------------------------------------------------------------------------
+# sharded replay of grid points
+# ---------------------------------------------------------------------------
+
+def replay_sharded_point(point: SweepPoint, shards: int, batch: int = 256,
+                         trace: Optional[np.ndarray] = None) -> float:
+    """Hit ratio of one sweep-grid point replayed through the set-sharded
+    batched path (``simulate.replay_batched`` with ``shards=D`` — a single
+    jitted ``lax.scan`` with device-resident routing since PR 4).
+
+    Batched conflict resolution perturbs hit ratios slightly relative to the
+    grid's exact B=1 replay, so callers gate these values against the B=1
+    baselines with a small band (DESIGN.md §9), not bit-exactly.
+    """
+    from repro.core import simulate, traces as _traces
+
+    s, k, sample = point.shape
+    cfg = KWayConfig(num_sets=s, ways=k, policy=point.policy, sample=sample)
+    tlfu = (admission.for_capacity(point.capacity)
+            if point.admission == "tinylfu" else None)
+    if trace is None:
+        trace = _traces.generate(point.family, point.n, seed=point.seed)
+    sim = simulate.SimConfig(cache=cfg, tinylfu=tlfu, backend=point.backend)
+    return simulate.replay_batched(sim, trace, batch=batch, shards=shards)
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 

@@ -70,6 +70,28 @@ def time_chained_percentiles(step, iters=30, warmup=3):
             "iters": len(samples)}
 
 
+def time_replay_percentiles(replay, iters=5, warmup=1):
+    """p50/p90 wall time of a whole-trace replay callable (seconds).
+
+    For the scanned sharded path: ``replay()`` runs an entire trace inside
+    one jitted ``lax.scan`` and blocks exactly once (converting the hit
+    count to a Python int *is* the single host synchronization) — so each
+    sample covers the full replay with no per-chunk dispatch or transfers,
+    which is what the figure's no-host-sync rows certify.
+    """
+    for _ in range(warmup):
+        replay()
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        replay()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return {"p50": _percentile(samples, 50),
+            "p90": _percentile(samples, 90),
+            "iters": len(samples)}
+
+
 def time_host(fn, *args, iters=3):
     """Mean wall time per call of a host-side (non-jitted) callable."""
     t0 = time.perf_counter()

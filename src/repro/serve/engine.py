@@ -110,6 +110,11 @@ class EngineConfig:
     max_seq: int = 512
     private_pages: int = 256
     backend: str = "jnp"              # cache backend: "jnp" | "pallas" | "ref"
+    # > 1: run the prefix cache set-sharded (core/sharded.py) — the shared
+    # region's set axis splits across shards with device-resident routing;
+    # slot ids stay global, so page bookkeeping is unchanged.  The ref
+    # backend cannot be sharded (host Python).
+    shards: int = 1
 
 
 class Engine:
@@ -122,7 +127,15 @@ class Engine:
         self.kcfg = KWayConfig(
             num_sets=ecfg.num_sets, ways=ecfg.ways, policy=ecfg.policy
         )
-        self.backend = make_backend(ecfg.backend, self.kcfg)
+        if ecfg.shards > 1:
+            # Opt-in sharded prefix cache: ShardedCache implements the same
+            # get/put/peek_victims contract with global slot ids.
+            from repro.core.sharded import ShardedCache, ShardedConfig
+            self.backend = ShardedCache(ShardedConfig(
+                cache=self.kcfg, num_shards=ecfg.shards,
+                backend=ecfg.backend))
+        else:
+            self.backend = make_backend(ecfg.backend, self.kcfg)
         self.kstate = self.backend.init()
         self.sketch_cfg = (
             admission.for_capacity(self.kcfg.capacity) if ecfg.tinylfu else None
@@ -182,14 +195,12 @@ class Engine:
         keys = jnp.asarray(hashes, jnp.uint32)
         self.kstate, hit, vals = self.backend.get(self.kstate, keys)
         hit = np.asarray(hit)
-        vals = np.asarray(vals)
-        n_hit = 0
-        pages = []
-        for h, v in zip(hit, vals):
-            if not h:
-                break
-            n_hit += 1
-            pages.append(int(v))
+        # first-miss = argmin of the cumulative AND of the hit flags; its
+        # closed form is the chain sum (every element before the first zero
+        # is one), so the host loop collapses to two vector ops.
+        chain = np.cumprod(hit.astype(np.int64))
+        n_hit = int(chain.sum())
+        pages = [int(v) for v in np.asarray(vals)[:n_hit]]
         return n_hit, pages
 
     def _insert_blocks(self, hashes: np.ndarray):
@@ -304,21 +315,25 @@ class Engine:
         return pt, pos, tok, active
 
     def _decode(self, greedy: bool):
-        pt, pos, tok, active = self._page_table()
-        if not active.any():
-            return
-        # ensure every active request has a page for the incoming token
+        # Ensure every running request has a page for the incoming token
+        # BEFORE the batch table is built: a request that cannot get one
+        # finishes — and retires — in this very step (its slot is free for
+        # the next _admit), instead of riding one more decode marked active
+        # with a stale page table.
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
             if req.pos % self.ecfg.page == 0 and req.pos // self.ecfg.page >= len(req.pages):
                 if not self.free:
                     req.done = True  # out of pages: finish early
+                    self._retire(i)
                     continue
                 p = self.free.pop()
                 req.private.append(p)
                 req.pages.append(p)
-                pt[i, len(req.pages) - 1] = p
+        pt, pos, tok, active = self._page_table()
+        if not active.any():
+            return
         logits, self.pool_k, self.pool_v = pm.decode_paged(
             self.cfg, self.params,
             jnp.asarray(tok), jnp.asarray(pos),
@@ -329,8 +344,6 @@ class Engine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i, req in enumerate(self.slots):
             if req is None or req.done:
-                if req is not None and req.done:
-                    self._retire(i)
                 continue
             req.pos += 1
             req.generated.append(int(nxt[i]))

@@ -104,17 +104,25 @@ def test_batched_tinylfu_matches_sequential(rng):
 
 
 def test_batched_tinylfu_unsupported_paths_raise():
+    """Only the sequential-Python ref oracle stays excluded: TinyLFU and
+    two_phase now compose with the set-sharded layer (PR 4), so the old
+    TinyLFU×shards / two_phase×shards guards are gone."""
     import pytest
 
     cfg = KWayConfig(num_sets=8, ways=8, policy=Policy.LFU)
     tl = admission.for_capacity(64)
     tr = traces.generate("zipf", 256, seed=1)
-    with pytest.raises(ValueError, match="sharded"):
-        replay_batched(SimConfig(cfg, tl), tr, batch=64, shards=2)
     with pytest.raises(ValueError, match="ref backend"):
         replay_batched(SimConfig(cfg, tl, backend="ref"), tr, batch=64)
     with pytest.raises(ValueError, match="ref backend"):
         replay(SimConfig(cfg, tl, backend="ref"), tr)
+    with pytest.raises(ValueError, match="sharded"):
+        replay_batched(SimConfig(cfg, backend="ref"), tr, batch=64, shards=2)
+    # ... and the previously guarded combinations now replay fine:
+    assert 0.0 <= replay_batched(SimConfig(cfg, tl), tr, batch=64,
+                                 shards=2) <= 1.0
+    assert 0.0 <= replay_batched(SimConfig(cfg, two_phase=True), tr,
+                                 batch=64, shards=2) <= 1.0
 
 
 def test_all_trace_families_generate():

@@ -1,0 +1,333 @@
+"""Device-resident request router + end-to-end scanned sharded replay
+(core/router.py, core/sharded.py rewrite — DESIGN.md §9).
+
+Covers the PR-4 contracts:
+  * router unit semantics (owner bits, arrival order, overflow-defer,
+    unscatter inverse);
+  * sharded-vs-unsharded bit parity for the timestamp-order-invariant
+    policies across batch boundaries at shards ∈ {1, 2, 4, 8};
+  * fixed-capacity layout compile stability (≤ 1 compile per shape via
+    ``sharded.trace_counts`` — the old ``counts.max()`` bucketing recompiled
+    per batch);
+  * per-shard TinyLFU privatization tracking the global sketch;
+  * two_phase through the shard step;
+  * donated-state aliasing on the scanned path.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import admission, router, sharded, traces
+from repro.core.backend import make_backend
+from repro.core.kway import KWayConfig
+from repro.core.policies import Policy
+from repro.core.sharded import ShardedCache, ShardedConfig
+from repro.core.simulate import SimConfig, replay_batched
+
+
+# ---------------------------------------------------------------------------
+# router units
+# ---------------------------------------------------------------------------
+
+def test_route_owner_is_high_bits(rng):
+    from repro.core import hashing
+    keys = jnp.asarray(rng.integers(0, 1 << 30, 300).astype(np.uint32))
+    owner = router.owner_of(keys, 64, 8, 0x51CA)
+    gset = hashing.set_index(keys, 64, 0x51CA)
+    np.testing.assert_array_equal(np.asarray(owner), np.asarray(gset) // 8)
+
+
+def test_route_unscatter_roundtrip(rng):
+    keys = rng.integers(0, 10_000, 128).astype(np.uint32)
+    owner = router.owner_of(jnp.asarray(keys), 32, 4, 0x51CA)
+    plan = router.route(owner, 4, 128)
+    vb = router.bucket(plan, jnp.asarray(keys), 4, 128, jnp.uint32(0))
+    back = router.unscatter(plan, vb, jnp.uint32(0))
+    np.testing.assert_array_equal(np.asarray(back), keys)
+    # the enabled mask marks exactly the landed lanes
+    eb = router.bucket_mask(plan, 4, 128)
+    assert int(np.asarray(eb).sum()) == len(keys)
+
+
+def test_route_overflow_defer_semantics():
+    # 10 keys, all owned by shard 0, capacity 4: the first 4 (in arrival
+    # order) route, the rest defer — deterministically, never dropped.
+    owner = jnp.zeros((10,), jnp.int32)
+    plan = router.route(owner, 2, 4)
+    defer = np.asarray(plan.deferred)
+    np.testing.assert_array_equal(defer, np.arange(10) >= 4)
+    assert np.asarray(plan.pos)[:4].tolist() == [0, 1, 2, 3]
+    # bucketing drops exactly the deferred lanes
+    eb = router.bucket_mask(plan, 2, 4)
+    assert int(np.asarray(eb).sum()) == 4
+
+
+def test_route_disabled_lanes_never_displace(rng):
+    # disabled lanes rank last: they never push an enabled lane past the
+    # capacity, and they never land in a bucket
+    owner = jnp.zeros((8,), jnp.int32)
+    enabled = jnp.asarray([True, False, True, False, True, True, True, True])
+    plan = router.route(owner, 2, 6, enabled)
+    assert not np.asarray(plan.deferred)[np.asarray(enabled)].any()
+    eb = router.bucket_mask(plan, 2, 6)
+    assert int(np.asarray(eb).sum()) == int(np.asarray(enabled).sum())
+
+
+def test_route_single_shard_is_identity():
+    owner = jnp.zeros((16,), jnp.int32)
+    plan = router.route(owner, 1, 16)
+    np.testing.assert_array_equal(np.asarray(plan.pos), np.arange(16))
+    assert not np.asarray(plan.deferred).any()
+
+
+# ---------------------------------------------------------------------------
+# sharded-vs-unsharded parity (the paper's disjoint-union claim)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", [Policy.LRU, Policy.LFU, Policy.FIFO])
+@pytest.mark.parametrize("num_shards", [1, 2, 4, 8])
+def test_scanned_replay_bit_parity(policy, num_shards):
+    """replay_batched(shards=D) — ONE jitted lax.scan with device routing —
+    produces the exact unsharded hit count for the timestamp-order-invariant
+    policies, across batch boundaries and including the padded tail chunk
+    (trace length deliberately not a batch multiple)."""
+    tr = traces.generate("zipf", 2000, seed=5, catalog=1 << 11)  # 2000 % 64 != 0
+    sim = SimConfig(KWayConfig(num_sets=32, ways=4, policy=policy))
+    h1 = replay_batched(sim, tr, batch=64)
+    hd = replay_batched(sim, tr, batch=64, shards=num_shards)
+    assert h1 == pytest.approx(hd, abs=1e-12)
+
+
+def test_scanned_replay_final_state_matches_access_loop(rng):
+    """The single-scan replay and a per-chunk access() loop are the same
+    computation: identical hit totals and identical final shard states."""
+    gcfg = KWayConfig(num_sets=16, ways=4, policy=Policy.LRU)
+    tr = traces.generate("zipf", 1024, seed=9, catalog=1 << 10)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
+    hits_scan, defers, st_scan = sc.replay(tr, 64)
+    assert defers == 0
+    st = sc.init()
+    hits_loop = 0
+    for i in range(0, 1024, 64):
+        chunk = tr[i:i + 64]
+        st, hit, *_ = sc.access(st, chunk, chunk.astype(np.int32))
+        hits_loop += int(np.asarray(hit).sum())
+    assert hits_scan == hits_loop
+    np.testing.assert_array_equal(np.asarray(st_scan.keys),
+                                  np.asarray(st.keys))
+    np.testing.assert_array_equal(np.asarray(st_scan.meta_a),
+                                  np.asarray(st.meta_a))
+
+
+def test_sharded_two_phase_matches_fused():
+    """two_phase (the unfused get-then-put oracle) now threads through the
+    shard step and stays bit-identical to the fused sharded path."""
+    tr = traces.generate("oltp_mix", 3000, seed=3)
+    cfg = KWayConfig(num_sets=64, ways=4, policy=Policy.LRU)
+    h_fused = replay_batched(SimConfig(cfg), tr, batch=64, shards=4)
+    h_two = replay_batched(SimConfig(cfg, two_phase=True), tr, batch=64,
+                           shards=4)
+    assert h_fused == pytest.approx(h_two, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# overflow-defer through the cache layer
+# ---------------------------------------------------------------------------
+
+def test_access_overflow_defer_reported(rng):
+    gcfg = KWayConfig(num_sets=16, ways=4, policy=Policy.LRU)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4,
+                                    route_capacity=2))
+    st = sc.init()
+    keys = rng.integers(0, 1 << 20, 32).astype(np.uint32)
+    st, hit, vals, ek, ev, defer = sc.access(
+        st, keys, keys.astype(np.int32), return_deferred=True)
+    defer = np.asarray(defer)
+    assert defer.any()                      # 32 keys into 4x2 lanes must defer
+    # deferred lanes are untouched: no hit, no value, no eviction
+    assert not (np.asarray(hit) & defer).any()
+    assert (np.asarray(vals)[defer] == -1).all()
+    assert not (np.asarray(ev) & defer).any()
+    # a deferred key was NOT inserted: replaying it alone hits iff routed
+    gv = sc.global_view(st)
+    routed_keys = keys[~defer]
+    present = np.isin(routed_keys, np.asarray(gv.keys).ravel())
+    assert present.all()
+    deferred_keys = keys[defer]
+    assert not np.isin(deferred_keys, np.asarray(gv.keys).ravel()).any()
+
+
+def test_replay_overflow_defer_counted():
+    tr = traces.generate("zipf", 512, seed=2, catalog=1 << 10)
+    gcfg = KWayConfig(num_sets=16, ways=4, policy=Policy.LRU)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4,
+                                    route_capacity=4))
+    hits, defers, _ = sc.replay(tr, 32)
+    assert defers > 0                       # 32-per-chunk into 4x4 lanes
+    sc_full = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
+    hits_full, defers_full, _ = sc_full.replay(tr, 32)
+    assert defers_full == 0                 # default capacity never defers
+
+
+# ---------------------------------------------------------------------------
+# compile stability (the recompile-churn regression)
+# ---------------------------------------------------------------------------
+
+def test_fixed_capacity_compiles_once_across_skewed_batches(rng):
+    """The old host bucketing derived the bucket shape from each chunk's
+    ``counts.max()``, so skew changed the jitted shapes chunk to chunk.  The
+    router's fixed [D, capacity] layout must compile ONCE per shape no
+    matter how the batch skews across shards."""
+    gcfg = KWayConfig(num_sets=64, ways=4, policy=Policy.LRU)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
+    st = sc.init()
+    sharded.reset_trace_counts()
+    all_owner = sc.owner_of(np.arange(4096, dtype=np.uint32))
+    batches = [
+        rng.integers(0, 1 << 20, 64).astype(np.uint32),        # balanced-ish
+        np.arange(4096, dtype=np.uint32)[all_owner == 0][:64]  # all shard 0
+        .astype(np.uint32),
+        np.arange(4096, dtype=np.uint32)[all_owner == 3][:64]  # all shard 3
+        .astype(np.uint32),
+        np.repeat(rng.integers(0, 1 << 20, 2), 32).astype(np.uint32),  # dups
+    ]
+    for keys in batches:
+        assert keys.shape == (64,)
+        st, *_ = sc.access(st, keys, keys.astype(np.int32))
+    counts = sharded.trace_counts()
+    assert len(counts) == 1 and all(v == 1 for v in counts.values()), (
+        f"router step retraced across same-shape batches: {counts}")
+
+
+def test_scanned_replay_compiles_once_per_shape():
+    tr = traces.generate("zipf", 2048, seed=1, catalog=1 << 10)
+    gcfg = KWayConfig(num_sets=64, ways=4, policy=Policy.LRU)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
+    sharded.reset_trace_counts()
+    sc.replay(tr, 64)
+    sc.replay(tr[:1999], 64)    # different trace length, same chunk shape
+    counts = {k: v for k, v in sharded.trace_counts().items()
+              if k[0] == "replay"}
+    assert len(counts) == 1 and all(v == 1 for v in counts.values()), (
+        f"scanned replay retraced for an unchanged chunk shape: {counts}")
+
+
+# ---------------------------------------------------------------------------
+# per-shard TinyLFU privatization
+# ---------------------------------------------------------------------------
+
+def test_per_shard_tinylfu_tracks_global_sketch():
+    """Privatized sketches see 1/D of the traffic each; the admission
+    decisions drift from the global-sketch path, but the hit ratio must stay
+    in a tight band — and the filter must still visibly shield the cache
+    from scan pollution."""
+    tr_hot = traces.generate("zipf", 8000, seed=7, catalog=1 << 10, alpha=1.2)
+    tr_scan = traces.generate("scan_loop", 8000, seed=8, working=1 << 14,
+                              noise=0.0, catalog=1 << 15)
+    tr = np.empty(16_000, np.uint32)
+    tr[0::2] = tr_hot
+    tr[1::2] = tr_scan + np.uint32(1 << 20)
+    cap = 512
+    cfg = KWayConfig(num_sets=cap // 8, ways=8, policy=Policy.LFU)
+    tl = admission.for_capacity(cap)
+    h_global = replay_batched(SimConfig(cfg, tl), tr, batch=64)
+    h_shard = replay_batched(SimConfig(cfg, tl), tr, batch=64, shards=4)
+    assert abs(h_global - h_shard) < 0.03
+    plain = replay_batched(SimConfig(cfg), tr, batch=64, shards=4)
+    assert h_shard >= plain - 0.03          # the filter still bites
+
+
+def test_sharded_access_threads_sketches(rng):
+    """The stacked [D, ...] sketch leaves ride through access() and come
+    back updated (additions only count enabled lanes)."""
+    gcfg = KWayConfig(num_sets=16, ways=4, policy=Policy.LFU)
+    tl = admission.TinyLFUConfig(width=256, door_bits=512, sample=100_000)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
+    st = sc.init()
+    sk = sc.init_sketches(tl)
+    keys = rng.integers(0, 500, 32).astype(np.uint32)
+    st, hit, vals, ek, ev, sk = sc.access(
+        st, keys, keys.astype(np.int32), tinylfu=tl, sketches=sk)
+    adds = np.asarray(sk.additions)
+    assert adds.shape == (4,) and adds.sum() == 32  # every lane, once, somewhere
+    owner = sc.owner_of(keys)
+    np.testing.assert_array_equal(adds, np.bincount(owner, minlength=4))
+
+
+# ---------------------------------------------------------------------------
+# slot-id globalization (the serving contract)
+# ---------------------------------------------------------------------------
+
+def test_put_slot_value_stays_global_when_lanes_share_a_way():
+    """Regression: two active put lanes may legally share a (set, way) — a
+    present key being refreshed plus an insert victimizing that key's way.
+    The global-id lift must be idempotent (scatter-set of the recomputed id,
+    not scatter-add of an offset, which would apply the shard offset twice
+    and corrupt the stored page id)."""
+    from repro.core import hashing
+    from repro.core.hashing import EMPTY_KEY
+
+    gcfg = KWayConfig(num_sets=8, ways=1, policy=Policy.LRU)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=2))
+    # two keys owned by shard 1 that collide on one global set
+    cand = np.arange(1, 20_000, dtype=np.uint32)
+    gset = np.asarray(hashing.set_index(jnp.asarray(cand), 8, gcfg.seed))
+    hot = np.bincount(gset, minlength=8)
+    target = int(np.argmax(hot[4:]) + 4)           # a shard-1 set (>= S/D)
+    k1, k2 = cand[gset == target][:2]
+    st = sc.init()
+    st, *_ = sc.put(st, np.asarray([k1]), np.zeros(1, np.int32),
+                    slot_value=True)
+    # k1 present (refresh) + k2 insert victimizing k1's only way, one batch
+    st, ek, ev, ss, sw = sc.put(
+        st, np.asarray([k1, k2]), np.zeros(2, np.int32), slot_value=True)
+    assert (np.asarray(ss) == target).all() and (np.asarray(sw) == 0).all()
+    gv = sc.global_view(st)
+    keys, vals = np.asarray(gv.keys), np.asarray(gv.vals)
+    stored = keys != np.uint32(EMPTY_KEY)
+    assert stored.any()
+    # every stored payload is exactly its own global slot id
+    slot_ids = (np.arange(8)[:, None] * 1 + np.arange(1)[None, :])
+    np.testing.assert_array_equal(vals[stored], slot_ids[stored])
+    # and a get through the sharded path returns that same global id
+    for key in (k1, k2):
+        if (keys == key).any():
+            st, hit, v = sc.get(st, np.asarray([key], np.uint32))
+            assert bool(np.asarray(hit)[0])
+            assert int(np.asarray(v)[0]) == target
+
+
+# ---------------------------------------------------------------------------
+# donated-state aliasing on the scanned path
+# ---------------------------------------------------------------------------
+
+def test_replay_donates_initial_state():
+    """``replay`` donates the initial shard state to the scan: the caller's
+    buffers are consumed (deleted) and the result matches a fresh run."""
+    tr = traces.generate("zipf", 1024, seed=4, catalog=1 << 10)
+    gcfg = KWayConfig(num_sets=32, ways=4, policy=Policy.LRU)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
+    hits_ref, _, _ = sc.replay(tr, 64)
+    st = sc.init()
+    jax.block_until_ready(st.keys)
+    hits, _, st2 = sc.replay(tr, 64, state=st)
+    assert hits == hits_ref
+    assert st.keys.is_deleted(), \
+        "initial state leaves must be donated to the scanned replay"
+    assert not st2.keys.is_deleted()
+
+
+def test_access_donation_consumes_state(rng):
+    gcfg = KWayConfig(num_sets=16, ways=4, policy=Policy.LRU)
+    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=2, donate=True))
+    sc_ref = ShardedCache(ShardedConfig(cache=gcfg, num_shards=2))
+    st = sc.init()
+    st_ref = sc_ref.init()
+    for _ in range(4):
+        keys = rng.integers(0, 300, 16).astype(np.uint32)
+        st, h1, *_ = sc.access(st, keys, keys.astype(np.int32))
+        st_ref, h2, *_ = sc_ref.access(st_ref, keys, keys.astype(np.int32))
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(np.asarray(st.keys),
+                                  np.asarray(st_ref.keys))

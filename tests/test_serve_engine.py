@@ -144,6 +144,44 @@ def test_engine_backends_agree(small_model, rng):
     assert results["jnp"][1] > 0.4  # shared prefix blocks hit
 
 
+def test_engine_sharded_prefix_cache_matches(small_model, rng):
+    """EngineConfig.shards > 1 runs the prefix cache set-sharded (device
+    router, global slot ids): generations, hit ratio and evictions must all
+    match the unsharded engine (LRU is timestamp-order-invariant)."""
+    cfg, params = small_model
+    shared = rng.integers(2, 400, 32)
+    prompts = [np.concatenate([shared, rng.integers(2, 400, 8)])
+               for _ in range(4)]
+    results = {}
+    for shards in (1, 2, 4):
+        eng = _engine(cfg, params, shards=shards)
+        for p in prompts:
+            eng.submit(p, max_new=3)
+        fin = eng.run()
+        results[shards] = (
+            {rid: r.generated for rid, r in fin.items()},
+            eng.hit_ratio(),
+            eng.stats["evictions"],
+        )
+    assert results[1] == results[2] == results[4]
+    assert results[1][1] > 0.4
+
+
+def test_probe_prefix_first_miss_vectorized(small_model):
+    """_probe_prefix stops at the first miss of the block chain (later
+    blocks cannot be valid without their prefix) — the vectorized
+    cumulative-AND must honour that, not count disjoint later hits."""
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    # insert blocks 0,1 and block 3 — leaving a hole at block 2
+    hashes = np.asarray([11, 22, 33, 44], np.uint32)
+    eng.kstate, _, _, ss, _ = eng.backend.put(
+        eng.kstate, jnp.asarray(hashes[[0, 1, 3]]),
+        jnp.zeros(3, jnp.int32), slot_value=True)
+    n_hit, pages = eng._probe_prefix(hashes)
+    assert n_hit == 2 and len(pages) == 2
+
+
 def test_engine_rejects_ssm():
     cfg = configs.get("mamba2-130m").smoke
     params = lm.init_params(cfg, jax.random.key(0))

@@ -29,11 +29,13 @@ def test_owner_is_high_bits_of_global_set(rng):
 
 
 def test_bucketing_preserves_arrival_order(rng):
+    from repro.core import router
     gcfg = KWayConfig(num_sets=16, ways=4)
-    sc = ShardedCache(ShardedConfig(cache=gcfg, num_shards=4))
     keys = rng.integers(0, 500, 64).astype(np.uint32)
-    owner, pos, bl = sc._bucket(keys)
-    assert bl >= 8 and bl & (bl - 1) == 0
+    owner = np.asarray(router.owner_of(jnp.asarray(keys), 16, 4, gcfg.seed))
+    plan = router.route(jnp.asarray(owner), 4, 64)
+    pos = np.asarray(plan.pos)
+    assert not np.asarray(plan.deferred).any()  # capacity == B never defers
     # (owner, pos) pairs are unique and order-preserving per shard
     pairs = set(zip(owner.tolist(), pos.tolist()))
     assert len(pairs) == len(keys)
