@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_jitted
+from repro.core import hashing
 from repro.core.policies import Policy
 from repro.kernels import ref
 from repro.kernels.kway_probe import kway_probe
@@ -17,12 +18,14 @@ def run():
     s, ways, b = 512, 8, 256
     keys = np.full((s, 128), -1, np.int32)
     keys[:, :ways] = rng.integers(0, 50_000, (s, ways))
+    fpr = np.asarray(hashing.fingerprint(
+        jnp.asarray(keys).astype(jnp.uint32))).astype(np.int32)
     ma = rng.integers(0, 1000, (s, 128)).astype(np.int32)
     mb = np.zeros((s, 128), np.int32)
     sets = rng.integers(0, s, b).astype(np.int32)
     qk = rng.integers(0, 50_000, b).astype(np.int32)
     times = np.arange(b, dtype=np.int32)
-    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    args = [jnp.asarray(a) for a in (keys, fpr, ma, mb, sets, qk, times)]
     dt = time_jitted(
         lambda *a: kway_probe(*a, policy=int(Policy.LRU), ways=ways, qt=8),
         *args)

@@ -2,7 +2,7 @@
 
 The measurement lives in ``repro.eval.figures.throughput_vs_batch`` (layout /
 backend / sharded sections, fused vs two-phase access variants with p50/p90
-steady-state timing).  Two surfaces:
+steady-state timing).  Four surfaces:
 
   * default: the historical ``table,config,mops_per_s`` CSV;
   * ``--fused-compare``: the fused-vs-two-phase comparison — writes the
@@ -16,6 +16,17 @@ steady-state timing).  Two surfaces:
     ``--hit-ratio-gate``) band-gates the sharded replay's hit ratios at
     shards ∈ {1, 4} against the checked-in baseline grid (exit 3 on
     breach).  The CI sharded perf-smoke entry point.
+  * ``--resident-compare``: the trace-resident replay megakernel vs the
+    chunked-scan replay (``figures.throughput_resident`` — whole-trace
+    req/s p50/p90 per backend) — writes its BENCH artifact and gates
+    resident-vs-scan hit-ratio EQUALITY (the megakernel is bit-identical
+    by construction; exit 3 on any divergence).  The CI resident
+    perf-smoke entry point.
+
+All three gates share one helper pair (``_baseline_gate`` / ``_run_gate``):
+a single baseline-diff implementation and a single exit-code contract
+(0 = pass, 3 = divergence, and a gate whose ids match nothing is *dead* —
+reported as a breach, never as a silent pass).
 """
 import argparse
 import sys
@@ -34,6 +45,55 @@ def run(quick=False, backends=("jnp", "pallas", "ref"), shards=(1, 4)):
         emit("throughput", r["id"], f"{r['value']:.3f}")
 
 
+# ---------------------------------------------------------------------------
+# shared gating helpers — the single exit-code contract and the single
+# baseline-diff implementation behind --fused-compare, --shards-compare and
+# --resident-compare
+# ---------------------------------------------------------------------------
+
+def _baseline_gate(baseline_path: str, points, tol: float):
+    """The one baseline-diff implementation.
+
+    ``points``: iterable of ``(record_id, eval_fn)``; for every id present
+    in the baseline, ``eval_fn(baseline_record)`` returns a list of
+    ``(label, got, want)`` comparisons to check within ``tol``.  Returns
+    ``(checked, breaches)``.  A gate whose ids match nothing is dead — that
+    is a breach (an id-scheme or baseline drift has turned the gate into a
+    no-op), never a green pass.
+    """
+    from repro.eval import artifacts
+
+    base = artifacts.load_artifact(baseline_path)
+    by_id = {r["id"]: r for r in base["records"]}
+    checked, breaches = 0, []
+    for rid, eval_fn in points:
+        rec = by_id.get(rid)
+        if rec is None:
+            continue
+        for label, got, want in eval_fn(rec):
+            checked += 1
+            if abs(got - want) > tol:
+                breaches.append(
+                    f"{label}: hit ratio {got:.6f} vs baseline "
+                    f"{want:.6f} (|delta| > {tol})")
+    if checked == 0:
+        breaches.append(
+            f"no baseline record ids matched in {baseline_path} — id scheme "
+            "or baseline drift has turned this gate into a no-op")
+    return checked, breaches
+
+
+def _run_gate(name: str, source: str, checked: int, breaches) -> int:
+    """The one exit-code contract: 0 on pass, 3 on divergence."""
+    if breaches:
+        print(f"{name.upper()} GATE FAILED vs {source}:", file=sys.stderr)
+        for b in breaches:
+            print(f"  {b}", file=sys.stderr)
+        return 3
+    print(f"{name} gate ok: {checked} checks within band of {source}")
+    return 0
+
+
 def fused_hit_ratio_gate(baseline_path: str, tol: float = 1e-6):
     """Replay a slice of the baseline hit-ratio grid through the *fused*
     access path (simulate.replay, B=1) and diff against the checked-in
@@ -46,41 +106,28 @@ def fused_hit_ratio_gate(baseline_path: str, tol: float = 1e-6):
     from repro.core.kway import KWayConfig
     from repro.core.policies import Policy
     from repro.core.simulate import SimConfig, replay
-    from repro.eval import artifacts
     from repro.eval.runner import assoc_shape
 
-    base = artifacts.load_artifact(baseline_path)
-    by_id = {r["id"]: r for r in base["records"]}
-    checked, breaches = 0, []
     trace_cache = {}
+
+    def eval_fn(rec, _family, _policy, _assoc):
+        seed, n = rec["seeds"][0], rec["n"]
+        if (_family, seed, n) not in trace_cache:
+            trace_cache[(_family, seed, n)] = traces.generate(
+                _family, n, seed=seed)
+        s, k, sample = assoc_shape(_assoc, rec["capacity"])
+        cfg = KWayConfig(num_sets=s, ways=k, policy=_policy, sample=sample)
+        hr = replay(SimConfig(cache=cfg), trace_cache[(_family, seed, n)])
+        return [(f"{rec['id']} (fused)", hr, rec["per_seed"][0])]
+
+    points = []
     for family in ("zipf", "scan_loop"):
         for policy in (Policy.LRU, Policy.LFU):
             for assoc in ("k8", "full"):
                 rid = f"{family}/{policy.name}/{assoc}/jnp/none"
-                rec = by_id.get(rid)
-                if rec is None:
-                    continue
-                seed, n = rec["seeds"][0], rec["n"]
-                if (family, seed, n) not in trace_cache:
-                    trace_cache[(family, seed, n)] = traces.generate(
-                        family, n, seed=seed)
-                s, k, sample = assoc_shape(assoc, rec["capacity"])
-                cfg = KWayConfig(num_sets=s, ways=k, policy=policy,
-                                 sample=sample)
-                hr = replay(SimConfig(cache=cfg),
-                            trace_cache[(family, seed, n)])
-                checked += 1
-                want = rec["per_seed"][0]
-                if abs(hr - want) > tol:
-                    breaches.append(
-                        f"{rid}: fused hit ratio {hr:.6f} vs baseline "
-                        f"{want:.6f} (|delta| > {tol})")
-    if checked == 0:
-        # a gate that matches nothing is a dead gate, not a green one
-        breaches.append(
-            f"no baseline record ids matched in {baseline_path} — id scheme "
-            "or baseline drift has turned this gate into a no-op")
-    return checked, breaches
+                points.append((rid, lambda rec, _f=family, _p=policy,
+                               _a=assoc: eval_fn(rec, _f, _p, _a)))
+    return _baseline_gate(baseline_path, points, tol)
 
 
 def sharded_hit_ratio_gate(baseline_path: str, shards=(1, 4),
@@ -100,11 +147,8 @@ def sharded_hit_ratio_gate(baseline_path: str, shards=(1, 4),
     """
     from repro.core import traces
     from repro.core.policies import Policy
-    from repro.eval import artifacts
     from repro.eval.runner import SweepPoint, replay_sharded_point
 
-    base = artifacts.load_artifact(baseline_path)
-    by_id = {r["id"]: r for r in base["records"]}
     fresh = {}
     for r in records or []:
         if r.get("metric") == "hit_ratio" and "shards" in r:
@@ -114,39 +158,63 @@ def sharded_hit_ratio_gate(baseline_path: str, shards=(1, 4),
             fresh[(r["family"], r["policy"], r["shards"], r["n"],
                    r.get("seed"), r.get("capacity"), r.get("assoc"))] \
                 = r["value"]
-    checked, breaches = 0, []
     trace_cache = {}
+
+    def eval_fn(rec, _family, _policy):
+        seed, n = rec["seeds"][0], rec["n"]
+        out = []
+        for d in shards:
+            hr = fresh.get((_family, _policy.name, d, n, seed,
+                            rec["capacity"], "k8"))
+            if hr is None:
+                if (_family, seed, n) not in trace_cache:
+                    trace_cache[(_family, seed, n)] = traces.generate(
+                        _family, n, seed=seed)
+                p = SweepPoint(family=_family, policy=_policy, assoc="k8",
+                               capacity=rec["capacity"], seed=seed, n=n)
+                hr = replay_sharded_point(
+                    p, shards=d, batch=256,
+                    trace=trace_cache[(_family, seed, n)])
+            out.append((f"{rec['id']} @shards={d}", hr, rec["per_seed"][0]))
+        return out
+
+    points = []
     for family in ("zipf", "scan_loop"):
         for policy in (Policy.LRU, Policy.LFU):
             rid = f"{family}/{policy.name}/k8/jnp/none"
-            rec = by_id.get(rid)
-            if rec is None:
-                continue
-            seed, n = rec["seeds"][0], rec["n"]
-            for d in shards:
-                hr = fresh.get((family, policy.name, d, n, seed,
-                                rec["capacity"], "k8"))
-                if hr is None:
-                    if (family, seed, n) not in trace_cache:
-                        trace_cache[(family, seed, n)] = traces.generate(
-                            family, n, seed=seed)
-                    p = SweepPoint(family=family, policy=policy, assoc="k8",
-                                   capacity=rec["capacity"], seed=seed, n=n)
-                    hr = replay_sharded_point(
-                        p, shards=d, batch=256,
-                        trace=trace_cache[(family, seed, n)])
-                checked += 1
-                want = rec["per_seed"][0]
-                if abs(hr - want) > tol:
-                    breaches.append(
-                        f"{rid} @shards={d}: sharded hit ratio {hr:.4f} vs "
-                        f"baseline {want:.4f} (|delta| > {tol})")
+            points.append((rid, lambda rec, _f=family, _p=policy:
+                           eval_fn(rec, _f, _p)))
+    return _baseline_gate(baseline_path, points, tol)
+
+
+def resident_equality_gate(records):
+    """Gate the trace-resident megakernel's bit-identity: every
+    ``resident-eq/...`` record of a fresh ``throughput_resident`` run pairs
+    the resident hit ratio (``value``) with the chunked-scan one
+    (``scan_value``) over the same trace — the two must be EXACTLY equal.
+    The "baseline" here is the scanned replay itself, so no baseline file
+    is involved.  Returns (checked, breaches).
+    """
+    checked, breaches = 0, []
+    for r in records:
+        if not r["id"].startswith("resident-eq/"):
+            continue
+        checked += 1
+        if r["value"] != r["scan_value"]:
+            breaches.append(
+                f"{r['id']}: resident hit ratio {r['value']:.6f} != "
+                f"chunked-scan {r['scan_value']:.6f} — the megakernel "
+                "diverged from the scan semantics")
     if checked == 0:
         breaches.append(
-            f"no baseline record ids matched in {baseline_path} — id scheme "
-            "or baseline drift has turned this gate into a no-op")
+            "no resident-eq records in the throughput_resident run — the "
+            "equality gate is a no-op")
     return checked, breaches
 
+
+# ---------------------------------------------------------------------------
+# CLI modes
+# ---------------------------------------------------------------------------
 
 def _shards_compare(args) -> int:
     from repro.eval import artifacts
@@ -176,14 +244,8 @@ def _shards_compare(args) -> int:
     if args.hit_ratio_gate:
         checked, breaches = sharded_hit_ratio_gate(args.hit_ratio_gate,
                                                    records=records)
-        if breaches:
-            print(f"SHARDED HIT-RATIO GATE FAILED vs {args.hit_ratio_gate}:",
-                  file=sys.stderr)
-            for b in breaches:
-                print(f"  {b}", file=sys.stderr)
-            return 3
-        print(f"sharded hit-ratio gate ok: {checked} shard×record points "
-              f"within band of {args.hit_ratio_gate}")
+        return _run_gate("sharded hit-ratio", args.hit_ratio_gate,
+                         checked, breaches)
     return 0
 
 
@@ -224,15 +286,43 @@ def _fused_compare(args) -> int:
 
     if args.hit_ratio_gate:
         checked, breaches = fused_hit_ratio_gate(args.hit_ratio_gate)
-        if breaches:
-            print(f"FUSED HIT-RATIO GATE FAILED vs {args.hit_ratio_gate}:",
-                  file=sys.stderr)
-            for b in breaches:
-                print(f"  {b}", file=sys.stderr)
-            return 3
-        print(f"fused hit-ratio gate ok: {checked} records match "
-              f"{args.hit_ratio_gate}")
+        return _run_gate("fused hit-ratio", args.hit_ratio_gate,
+                         checked, breaches)
     return 0
+
+
+def _resident_compare(args) -> int:
+    from repro.eval import artifacts
+
+    spec, records, skipped = figures.throughput_resident(
+        quick=args.quick,
+        progress=None if args.quiet else
+        (lambda m: print(f"  [throughput_resident] {m}", flush=True)))
+    art = artifacts.make_artifact("throughput_resident", spec, records,
+                                  skipped)
+    out = args.out or "BENCH_throughput_resident.json"
+    artifacts.write_artifact(out, art)
+
+    by_id = {r["id"]: r for r in records}
+    print("\ntrace-resident megakernel vs chunked-scan replay "
+          f"(whole-trace, n={spec['n']}, batch={spec['batch']}; "
+          "p50 steady-state):")
+    print(f"{'backend':<8} {'scan req/s':>12} {'resident req/s':>15} "
+          f"{'speedup':>8}")
+    for bname in spec["backends"]:
+        scan = by_id[f"replay-scan-{bname}/batch{spec['batch']}"]
+        res = by_id[f"replay-resident-{bname}/batch{spec['batch']}"]
+        speed = by_id[f"replay-resident-speedup-{bname}"
+                      f"/batch{spec['batch']}"]
+        print(f"{bname:<8} {scan['p50_req_s']:>12.0f} "
+              f"{res['p50_req_s']:>15.0f} {speed['value']:>7.2f}x")
+    print(f"\n{len(records)} records -> {out}")
+
+    # the resident gate is always on: bit-identity is the contract, and
+    # the comparison values ride in the fresh records themselves
+    checked, breaches = resident_equality_gate(records)
+    return _run_gate("resident-vs-scan equality", "chunked-scan replay",
+                     checked, breaches)
 
 
 def main(argv=None) -> int:
@@ -246,17 +336,33 @@ def main(argv=None) -> int:
     ap.add_argument("--shards-compare", action="store_true",
                     help="throughput-vs-shards scaling figure + BENCH "
                          "artifact (the CI sharded perf-smoke mode)")
+    ap.add_argument("--resident-compare", action="store_true",
+                    help="trace-resident megakernel vs chunked-scan replay "
+                         "+ BENCH artifact; gates resident-vs-scan "
+                         "hit-ratio equality (the CI resident perf-smoke "
+                         "mode)")
     ap.add_argument("--out", default=None,
-                    help="artifact path for --fused-compare / "
-                         "--shards-compare (default BENCH_<figure>.json)")
+                    help="artifact path for the --*-compare modes "
+                         "(default BENCH_<figure>.json)")
     ap.add_argument("--hit-ratio-gate", default=None, metavar="BASELINE",
                     help="with --fused-compare (or --shards-compare): "
                          "replay a slice of this baseline grid through the "
                          "fused (or sharded) path; exit 3 on divergence")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
-    if args.fused_compare and args.shards_compare:
-        ap.error("--fused-compare and --shards-compare are separate modes")
+    modes = [m for m, on in (("--fused-compare", args.fused_compare),
+                             ("--shards-compare", args.shards_compare),
+                             ("--resident-compare", args.resident_compare))
+             if on]
+    if len(modes) > 1:
+        ap.error(f"{' and '.join(modes)} are separate modes")
+    if args.resident_compare and args.hit_ratio_gate:
+        # never accept-and-ignore a gate flag: the resident mode's gate is
+        # the always-on resident-vs-scan equality check, not a baseline file
+        ap.error("--resident-compare gates resident-vs-scan equality "
+                 "unconditionally and takes no --hit-ratio-gate baseline")
+    if args.resident_compare:
+        return _resident_compare(args)
     if args.shards_compare:
         return _shards_compare(args)
     if args.fused_compare:

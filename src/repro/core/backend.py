@@ -12,6 +12,7 @@ This module gives them one contract (DESIGN.md §3):
     state, ek, ev, slot_sets, slot_ways = backend.put(state, keys, vals)
     state, hit, vals, ek, ev = backend.access(state, keys, vals)
     vkeys, vvalid = backend.peek_victims(state, keys)
+    hits, evs, state, sketch = backend.replay(state, chunks, enabled)
 
 All backends are functional (state in, state out) over the same ``KWayState``
 pytree, so states are interchangeable between backends mid-stream — the
@@ -32,13 +33,21 @@ Semantics:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing, kway
+from repro.core import admission, hashing, kway
 from repro.core.hashing import EMPTY_KEY
 from repro.core.kway import KWayConfig, KWayState
 from repro.core.refimpl import RefKWay
+
+#: VMEM budget for the trace-resident replay megakernel (DESIGN.md §10):
+#: the resident footprint — input + working copies of the 5 state lanes at
+#: the 128-lane padded width, plus streams and sketch — must fit the ~16 MiB
+#: of a TPU core with headroom for the compiler.  Past this the chunked-scan
+#: replay path is required.
+RESIDENT_VMEM_BUDGET = 12 << 20
 
 _REGISTRY: dict[str, type] = {}
 
@@ -75,6 +84,7 @@ class CacheBackend:
 
     def __init__(self, cfg: KWayConfig):
         self.cfg = cfg
+        self._replay_fns: dict = {}   # tinylfu -> jitted chunked-scan replay
 
     def init(self) -> KWayState:
         return kway.make_cache(self.cfg)
@@ -118,6 +128,53 @@ class CacheBackend:
         return self.access_two_phase(state, qkeys, qvals,
                                      admit_on_miss=admit_on_miss,
                                      enabled=enabled)
+
+    def replay(self, state, chunks, enabled, tinylfu=None, sketch=None):
+        """Replay a whole chunked trace: ``chunks`` uint32 [steps, B] and
+        ``enabled`` bool [steps, B] in the ``router.pad_chunks`` layout,
+        payload convention ``val == key`` (as int32).
+
+        -> (hits int32 [steps], evs int32 [steps], state', sketch'|None):
+        per-chunk hit and eviction counts, the final cache state, and the
+        updated TinyLFU sketch when ``tinylfu`` is given.
+
+        Default implementation: one jitted ``lax.scan`` over the chunks
+        through the fused ``access`` with the TinyLFU record → peek → admit
+        phase order of the batched replay — the chunked-scan oracle the
+        trace-resident megakernel (PallasBackend) is pinned against.
+        """
+        if not self.traceable:
+            raise ValueError(
+                f"backend {self.name!r} is host Python and has no scanned "
+                "replay; drive it through simulate.replay_batched")
+        if tinylfu is not None and sketch is None:
+            sketch = admission.make_sketch(tinylfu)
+        if tinylfu is None and sketch is None:
+            sketch = jnp.zeros((), jnp.int32)   # scan carry placeholder
+        if tinylfu not in self._replay_fns:
+            def fn(state, chunks, enabled, sketch, _tl=tinylfu):
+                def step(carry, xs):
+                    cache, sk = carry
+                    keys, en = xs
+                    admit = None
+                    if _tl is not None:
+                        sk = admission.record(_tl, sk, keys, enabled=en)
+                        vk, vv = self.peek_victims(cache, keys)
+                        admit = admission.admit(_tl, sk, keys, vk, vv)
+                    cache, hit, _, _, ev = self.access(
+                        cache, keys, keys.astype(jnp.int32), admit, en)
+                    return (cache, sk), (jnp.sum(hit.astype(jnp.int32)),
+                                         jnp.sum(ev.astype(jnp.int32)))
+
+                (state, sk), (hits, evs) = jax.lax.scan(
+                    step, (state, sketch), (chunks, enabled))
+                return hits, evs, state, sk
+            self._replay_fns[tinylfu] = jax.jit(fn)
+        hits, evs, state, sk = self._replay_fns[tinylfu](
+            jax.tree_util.tree_map(jnp.asarray, state),
+            jnp.asarray(chunks, jnp.uint32), jnp.asarray(enabled, jnp.bool_),
+            sketch)
+        return hits, evs, state, (sk if tinylfu is not None else None)
 
 
 @register_backend("jnp")
@@ -206,6 +263,38 @@ class PallasBackend(CacheBackend):
                                           jnp.asarray(qkeys, jnp.uint32))
         valid = (vkey != EMPTY_KEY) & (~hit)
         return vkey, valid
+
+    # -- trace-resident replay (DESIGN.md §10) -----------------------------
+    def resident_fits(self) -> bool:
+        """True when the replay megakernel's VMEM-resident footprint fits
+        the budget: input + working copies of the 5 state lanes at the
+        128-lane padded width (streams and sketch are noise next to them)."""
+        from repro.kernels import kway_probe as _kp
+        lane_bytes = self.cfg.num_sets * _kp.LANES * 4
+        return 2 * 5 * lane_bytes <= RESIDENT_VMEM_BUDGET
+
+    def replay_scan(self, state, chunks, enabled, tinylfu=None, sketch=None):
+        """The chunked-scan replay (the CacheBackend default), kept callable
+        on this backend as the megakernel's differential oracle and as the
+        fallback when the cache state exceeds the VMEM budget."""
+        return CacheBackend.replay(self, state, chunks, enabled,
+                                   tinylfu=tinylfu, sketch=sketch)
+
+    def replay(self, state, chunks, enabled, tinylfu=None, sketch=None):
+        """Trace-resident replay: the WHOLE chunked trace in one pallas
+        launch (kernels/replay.py) — state lanes pinned in VMEM, per-chunk
+        transitions applied in-kernel, per-chunk hit/eviction counters the
+        only per-step output.  Bit-identical to ``replay_scan``.
+
+        Falls back to the chunked scan when the state is too large to stay
+        VMEM-resident (see ``resident_fits``).
+        """
+        from repro.kernels import ops
+        if not self.resident_fits():
+            return self.replay_scan(state, chunks, enabled,
+                                    tinylfu=tinylfu, sketch=sketch)
+        return ops.replay_resident(self.cfg, state, chunks, enabled,
+                                   tinylfu=tinylfu, sketch=sketch)
 
 
 @register_backend("ref")

@@ -278,8 +278,66 @@ class ShardedCache:
             ret = ret + (sk,)
         return ret
 
+    def _bucket_all(self, chunks, en, capacity: int):
+        """Route EVERY chunk of a replay up front — one jitted call.
+
+        Returns (kb uint32 [D, steps, capacity], eb bool [D, steps,
+        capacity], deferred int32 scalar): per-shard request streams in the
+        exact per-chunk bucket layout the scanned replay routes step by
+        step, transposed shard-major so each shard's whole trace is one
+        contiguous [steps, capacity] stream (what ``CacheBackend.replay``
+        consumes).
+        """
+        fkey = ("bucket_all", capacity, chunks.shape)
+        if fkey not in self._fns:
+            def fn(chunks, en, _cap=capacity):
+                _TRACE_COUNTS[("bucket_all", self.cfg.backend,
+                               self.cfg.num_shards, _cap,
+                               chunks.shape[1])] += 1
+
+                def per_chunk(keys, e):
+                    plan = self._route(keys, e, _cap)
+                    kb = router.bucket(plan, keys, self.cfg.num_shards,
+                                       _cap, jnp.uint32(0))
+                    eb = router.bucket_mask(plan, self.cfg.num_shards, _cap)
+                    return kb, eb, jnp.sum(plan.deferred, dtype=jnp.int32)
+
+                kb, eb, defer = jax.vmap(per_chunk)(chunks, en)
+                return (kb.transpose(1, 0, 2), eb.transpose(1, 0, 2),
+                        jnp.sum(defer))
+            self._fns[fkey] = jax.jit(fn)
+        return self._fns[fkey](chunks, en)
+
+    def _replay_resident(self, chunks, en, capacity, tinylfu, state):
+        """Resident replay: route all chunks once, then ONE megakernel (or
+        scanned replay, for the jnp backend) per shard — D launches for the
+        whole trace instead of D×steps, with each shard's five state lanes
+        and TinyLFU sketch pinned in VMEM for the duration (DESIGN.md §10).
+
+        Bit-identical to the scanned path: the per-chunk bucket streams are
+        routed by the same ``router.route``, and ``CacheBackend.replay``
+        applies the same fused access + admission phases per chunk.
+        """
+        d = self.cfg.num_shards
+        kb, eb, defers = self._bucket_all(chunks, en, capacity)
+        sketches = (self.init_sketches(tinylfu) if tinylfu is not None
+                    else None)
+        hits = 0
+        shard_states = []
+        for i in range(d):
+            st_i = jax.tree_util.tree_map(lambda l: l[i], state)
+            sk_i = (jax.tree_util.tree_map(lambda l: l[i], sketches)
+                    if tinylfu is not None else None)
+            h, _, st_i, _ = self.backend.replay(
+                st_i, kb[i], eb[i], tinylfu=tinylfu, sketch=sk_i)
+            hits += int(jnp.sum(h))
+            shard_states.append(st_i)
+        stacked = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *shard_states)
+        return hits, int(defers), stacked
+
     def replay(self, trace, batch: int, *, tinylfu=None, two_phase=False,
-               state: Optional[KWayState] = None):
+               state: Optional[KWayState] = None, resident: bool = False):
         """Replay a whole trace in ONE jitted ``lax.scan`` — route, shard
         access and hit accounting all on device; the only host transfers are
         the trace in and three scalars out.
@@ -292,12 +350,32 @@ class ShardedCache:
 
         The initial ``state`` (default ``init()``) is donated to the scan:
         shard states update in place across all steps.
+
+        ``resident=True`` routes every chunk up front and hands each shard
+        its whole stream in one ``CacheBackend.replay`` call — on the
+        pallas backend D trace-resident megakernel launches for the entire
+        replay (see ``_replay_resident``).  Excludes ``two_phase`` (the
+        resident path is the fused access) and mesh execution (the host
+        drives one launch per shard).
         """
         trace = np.asarray(trace, np.uint32)
         chunks, en = router.pad_chunks(trace, batch)
         chunks = jnp.asarray(chunks)
         en = jnp.asarray(en)
         capacity = self.cfg.capacity_for(batch)
+
+        if resident:
+            if two_phase:
+                raise ValueError(
+                    "resident replay is the fused access path; two_phase "
+                    "is the chunked-scan oracle — use resident=False")
+            if self.mesh is not None:
+                raise ValueError(
+                    "resident replay drives one megakernel per shard from "
+                    "the host; run mesh execution through the scanned path")
+            return self._replay_resident(
+                chunks, en, capacity, tinylfu,
+                state if state is not None else self.init())
 
         fkey = ("replay", tinylfu, two_phase, capacity, batch)
         if fkey not in self._fns:

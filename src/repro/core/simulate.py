@@ -23,7 +23,7 @@ sketches) and ``two_phase``.  The ``ref`` backend replays in plain Python
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
@@ -48,6 +48,14 @@ class SimConfig:
 
 def _access_fn(sim: SimConfig, be):
     return be.access_two_phase if sim.two_phase else be.access
+
+
+@lru_cache(maxsize=None)
+def _cached_backend(name: str, cache: KWayConfig):
+    """Backend instances memoized per config so their per-instance jit
+    caches (CacheBackend._replay_fns) survive across replay calls —
+    backends are functional, so sharing instances is safe."""
+    return make_backend(name, cache)
 
 
 @partial(jax.jit, static_argnums=0)
@@ -140,7 +148,8 @@ def _replay_batched_scan(sim: SimConfig, chunks: jnp.ndarray,
 
 
 def replay_batched(
-    sim: SimConfig, trace: np.ndarray, batch: int = 64, shards: int = 1
+    sim: SimConfig, trace: np.ndarray, batch: int = 64, shards: int = 1,
+    resident: bool = False,
 ) -> float:
     """Batched replay -> hit ratio over the WHOLE trace (the tail chunk is
     padded with disabled lanes on every path).
@@ -148,11 +157,27 @@ def replay_batched(
     ``shards`` > 1 replays through the set-sharded layer as a single jitted
     ``lax.scan`` — device-resident routing (core/router.py), per-shard
     TinyLFU sketches, and ``two_phase`` all compose with sharding; only the
-    sequential-Python ``ref`` oracle cannot be sharded."""
+    sequential-Python ``ref`` oracle cannot be sharded.
+
+    ``resident=True`` replays through ``CacheBackend.replay`` — on the
+    pallas backend the trace-resident megakernel (kernels/replay.py): the
+    whole trace in ONE launch with the cache state pinned in VMEM,
+    bit-identical to the chunked scan.  Sharded resident replay runs one
+    megakernel per shard (D launches total).  The resident path IS the
+    fused access composition, so it excludes ``two_phase``."""
     trace = np.asarray(trace, np.uint32)
     n = trace.shape[0]
     if sim.tinylfu is not None and sim.backend == "ref":
         raise ValueError("TinyLFU replay is not wired for the ref backend")
+    if resident:
+        if sim.backend == "ref":
+            raise ValueError(
+                "the ref backend is sequential host Python; the resident "
+                "replay needs a traceable backend ('jnp' or 'pallas')")
+        if sim.two_phase:
+            raise ValueError(
+                "resident replay is the fused access path; two_phase is the "
+                "chunked-scan oracle — replay with resident=False")
     if shards > 1:
         if sim.backend == "ref":
             raise ValueError(
@@ -163,8 +188,14 @@ def replay_batched(
         sc = ShardedCache(ShardedConfig(
             cache=sim.cache, num_shards=shards, backend=sim.backend))
         hits, _, _ = sc.replay(trace, batch, tinylfu=sim.tinylfu,
-                               two_phase=sim.two_phase)
+                               two_phase=sim.two_phase, resident=resident)
         return hits / n
+    if resident:
+        be = _cached_backend(sim.backend, sim.cache)
+        chunks, enabled = router.pad_chunks(trace, batch)
+        hits, _, _, _ = be.replay(be.init(), chunks, enabled,
+                                  tinylfu=sim.tinylfu)
+        return float(jnp.sum(hits)) / n
     if sim.backend == "ref":
         be = make_backend(sim.backend, sim.cache)
         access = _access_fn(sim, be)

@@ -42,6 +42,7 @@ def environment() -> dict:
         jaxlib_version = jaxlib.__version__
     except Exception:  # pragma: no cover - jaxlib always ships with jax
         jaxlib_version = "unknown"
+    from repro.eval import timing
     return {
         "python": sys.version.split()[0],
         "jax": jax.__version__,
@@ -50,6 +51,10 @@ def environment() -> dict:
         "platform": platform.platform(),
         "jax_backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        # warmup-discard / steady-state tallies of every timer that ran in
+        # this process before the artifact was written (eval/timing.py) —
+        # the jitter provenance PR 4's tick-p50 wobble called for
+        "timing": timing.timing_provenance(),
     }
 
 

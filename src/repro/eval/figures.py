@@ -240,9 +240,120 @@ def throughput_vs_batch(quick: bool = False, progress=None,
         dt = time_host(run_chunks, n_chunks, iters=1) / n_chunks
         records.append(_tp_record(f"sharded-{ns}shard", b, b / dt / 1e6))
 
+    # trace-resident replay megakernel vs the chunked-scan replay on the
+    # kernel path (headline rows; the full sweep + bit-identity gate live
+    # in throughput_resident / benchmarks.throughput --resident-compare)
+    if "pallas" in backends:
+        from repro.core.simulate import SimConfig, replay_batched
+        n_rep, b_rep = 16_384, 256
+        tr_rep = tr[:n_rep]
+        sim = SimConfig(cache=cfg, backend="pallas")
+        rp50 = {}
+        for mode, resident in (("scan", False), ("resident", True)):
+            if progress:
+                progress(f"replay {mode} pallas")
+            st = time_replay_percentiles(
+                lambda _r=resident: replay_batched(sim, tr_rep, batch=b_rep,
+                                                   resident=_r),
+                iters=3)
+            rp50[mode] = st["p50"]
+            records.append(_tp_record(
+                f"replay-{mode}-pallas", b_rep, n_rep / st["p50"] / 1e6,
+                n=n_rep, p50_req_s=round(n_rep / st["p50"], 1),
+                p90_req_s=round(n_rep / st["p90"], 1),
+                reps_discarded=st["reps_discarded"]))
+        records.append(_tp_record(
+            "replay-resident-speedup-pallas", b_rep,
+            rp50["scan"] / rp50["resident"], metric="speedup_x"))
+
     spec = {"quick": quick, "batches": list(batches),
             "policy": policy.name, "backends": list(backends),
             "shards": list(shards), "capacity": THROUGHPUT_CAPACITY}
+    return spec, records, []
+
+
+def throughput_resident(quick: bool = False, progress=None,
+                        backends=("jnp", "pallas")):
+    """Trace-resident replay megakernel vs the chunked-scan replay
+    (DESIGN.md §10): whole-trace replay req/s, p50/p90 steady-state.
+
+    Rows per backend:
+
+      * ``replay-scan-{b}``     — the chunked ``lax.scan`` replay (one
+        jitted scan; on pallas, one kernel launch + scatter pass per chunk);
+      * ``replay-resident-{b}`` — ``CacheBackend.replay``: on pallas the
+        megakernel (ONE launch for the whole trace, state lanes pinned in
+        VMEM, zero HBM state round-trips), on jnp the scanned default (the
+        comparison anchor);
+      * ``replay-resident-speedup-{b}`` — resident p50 over scan p50.
+
+    Plus comparable ``resident-eq/...`` hit-ratio records over a small
+    (family × policy × ±TinyLFU) grid: ``value`` is the resident hit ratio
+    and ``scan_value`` the chunked-scan one — the two must be EXACTLY equal
+    (tol 0.0; the megakernel is bit-identical by construction), which is
+    what the CI ``--resident-compare`` gate enforces.
+    """
+    from repro.core import admission, traces
+    from repro.core.kway import KWayConfig
+    from repro.core.simulate import SimConfig, replay_batched
+
+    policy = Policy.LRU
+    batch = 256
+    n = 16_384 if quick else 65_536
+    kcfg = KWayConfig(num_sets=THROUGHPUT_CAPACITY // 8, ways=8,
+                      policy=policy)
+    tr = traces.generate("zipf", n, seed=7, catalog=1 << 14)
+    records = []
+    p50 = {}
+    for bname in backends:
+        sim = SimConfig(cache=kcfg, backend=bname)
+        for mode, resident in (("scan", False), ("resident", True)):
+            if progress:
+                progress(f"replay {mode} {bname}")
+            st = time_replay_percentiles(
+                lambda _r=resident: replay_batched(sim, tr, batch=batch,
+                                                   resident=_r),
+                iters=3 if quick else 5)
+            p50[(bname, mode)] = st["p50"]
+            records.append(_tp_record(
+                f"replay-{mode}-{bname}", batch, n / st["p50"] / 1e6,
+                n=n, mode=mode, backend=bname,
+                p50_req_s=round(n / st["p50"], 1),
+                p90_req_s=round(n / st["p90"], 1),
+                reps_discarded=st["reps_discarded"]))
+        records.append(_tp_record(
+            f"replay-resident-speedup-{bname}", batch,
+            p50[(bname, "scan")] / p50[(bname, "resident")],
+            metric="speedup_x", backend=bname))
+
+    # bit-identity records: resident (pallas megakernel) vs chunked scan
+    n_eq = QUICK_N if quick else FULL_N
+    eq_backend = "pallas" if "pallas" in backends else backends[0]
+    tlfu = admission.for_capacity(1024)
+    for family in ("zipf", "scan_loop"):
+        tre = traces.generate(family, n_eq, seed=42)
+        for pol in (Policy.LRU, Policy.LFU):
+            for adm in ("none", "tinylfu"):
+                if progress:
+                    progress(f"resident-eq {family}/{pol.name}/{adm}")
+                cfg = KWayConfig(num_sets=128, ways=8, policy=pol)
+                sim = SimConfig(cache=cfg, backend=eq_backend,
+                                tinylfu=tlfu if adm == "tinylfu" else None)
+                hr_res = replay_batched(sim, tre, batch=batch, resident=True)
+                hr_scan = replay_batched(sim, tre, batch=batch,
+                                         resident=False)
+                records.append({
+                    "id": f"resident-eq/{family}/{pol.name}/{adm}",
+                    "family": family, "policy": pol.name,
+                    "admission": adm, "backend": eq_backend,
+                    "batch": batch, "n": n_eq, "capacity": 1024,
+                    "metric": "hit_ratio", "value": hr_res,
+                    "scan_value": hr_scan,
+                    "comparable": True, "tol": 0.0,
+                })
+    spec = {"quick": quick, "backends": list(backends), "batch": batch,
+            "n": n, "n_eq": n_eq, "policy": policy.name,
+            "capacity": THROUGHPUT_CAPACITY}
     return spec, records, []
 
 
@@ -464,6 +575,7 @@ FIGURES = {
     "sampled_vs_limited": (sampled_vs_limited, "sampled_vs_limited"),
     "admission": (admission_ablation, "admission_ablation"),
     "throughput": (throughput_vs_batch, "throughput_vs_batch"),
+    "throughput_resident": (throughput_resident, "throughput_resident"),
     "throughput_shards": (throughput_vs_shards, "throughput_vs_shards"),
     "synthetic_mix": (synthetic_mix, "synthetic_mix"),
     "serving": (serving, "serving"),

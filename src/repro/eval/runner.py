@@ -284,19 +284,21 @@ def _replay_group_pallas(num_sets, ways, hash_seed, policy, tinylfu, trace_cn):
     interpret = jax.default_backend() != "tpu"
     qt = 8
 
-    def pad_ways(arr):
+    def pad_ways(arr, fill=-1):
         s, k = arr.shape
         if k == _kp.LANES:
             return arr
         return jnp.concatenate(
-            [arr, jnp.full((s, _kp.LANES - k), -1, arr.dtype)], axis=1)
+            [arr, jnp.full((s, _kp.LANES - k), fill, arr.dtype)], axis=1)
 
-    def probe1(keys, ma, mb, qkey, t):
+    def probe1(keys, fpr, ma, mb, qkey, t):
         """Kernel probe of one query; scalar outputs (s, hit, way, vway)."""
         sets = hashing.set_index(qkey[None], num_sets, hash_seed)
         zpad = jnp.zeros((qt - 1,), jnp.int32)
         hit, way, vway, _ = _kp.kway_probe(
-            pad_ways(keys.astype(jnp.int32)), pad_ways(ma), pad_ways(mb),
+            pad_ways(keys.astype(jnp.int32)),
+            pad_ways(fpr.astype(jnp.int32), fill=0),
+            pad_ways(ma), pad_ways(mb),
             jnp.concatenate([sets, zpad]),
             jnp.concatenate([qkey[None].astype(jnp.int32), zpad]),
             jnp.concatenate([t[None], zpad]),
@@ -306,25 +308,26 @@ def _replay_group_pallas(num_sets, ways, hash_seed, policy, tinylfu, trace_cn):
 
     def init_lane(_):
         return (jnp.full((num_sets, ways), EMPTY_KEY, jnp.uint32),
+                jnp.zeros((num_sets, ways), jnp.uint32),   # fingerprints
                 jnp.zeros((num_sets, ways), jnp.int32),
                 jnp.zeros((num_sets, ways), jnp.int32),
                 jnp.zeros((), jnp.int32))
 
     def step_lane(lane, sketch, raw):
-        keys, ma, mb, clock = lane
+        keys, fpr, ma, mb, clock = lane
         qkey = hashing.sanitize_keys(raw[None])[0]
         t_put = clock + 1
         # One probe at t_put serves both phases: hit/way are time-independent
         # and a miss leaves the get-phase metadata untouched, so the victim
         # scored on the pre-get state at t_put matches PallasBackend.put.
-        s, hit, way, vway = probe1(keys, ma, mb, qkey, t_put)
+        s, hit, way, vway = probe1(keys, fpr, ma, mb, qkey, t_put)
 
         ok = jnp.bool_(True)
         if tinylfu is not None:
             # peek_victims probes at time `clock` (pre-get) — a separate
             # kernel probe because RANDOM victim scores depend on the time.
             sketch = admission.record(tinylfu, sketch, qkey[None])
-            _, _, _, vway0 = probe1(keys, ma, mb, qkey, clock)
+            _, _, _, vway0 = probe1(keys, fpr, ma, mb, qkey, clock)
             vkey0 = keys[s, vway0]
             vvalid = (vkey0 != EMPTY_KEY) & ~hit
             ok = admission.admit(tinylfu, sketch, qkey[None], vkey0[None],
@@ -336,9 +339,11 @@ def _replay_group_pallas(num_sets, ways, hash_seed, policy, tinylfu, trace_cn):
         ia, ib = on_insert(policy, t_put)
         do = ~hit & ok
         keys = keys.at[s, vway].set(jnp.where(do, qkey, keys[s, vway]))
+        fpr = fpr.at[s, vway].set(jnp.where(
+            do, hashing.fingerprint(qkey[None])[0], fpr[s, vway]))
         ma = ma.at[s, vway].set(jnp.where(do, ia, ma[s, vway]))
         mb = mb.at[s, vway].set(jnp.where(do, ib, mb[s, vway]))
-        return (keys, ma, mb, clock + 2), sketch, hit
+        return (keys, fpr, ma, mb, clock + 2), sketch, hit
 
     return _scan_replay(init_lane, step_lane, trace_cn, tinylfu)
 

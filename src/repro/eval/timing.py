@@ -1,16 +1,48 @@
-"""Timing helpers shared by the throughput figures and benchmark shims."""
+"""Timing helpers shared by the throughput figures and benchmark shims.
+
+Every percentile timer follows the same warmup-discard + steady-state
+protocol: ``warmup`` repetitions are run and *discarded* (compilation,
+allocator ramp-up, cache warm-up), then ``iters`` steady-state repetitions
+are timed, each blocking on its result before the next starts.  PR 4 noted
+tick-p50 jitter on shared CI boxes, so the discard counts are part of the
+measurement's provenance: each timer reports ``reps_discarded`` in its
+result dict and tallies into a module counter that the artifact writer
+snapshots into the ``env`` block (``artifacts.make_artifact``).
+"""
 import time
 
 import jax
 
+#: running tally of the current process's timing protocol — snapshotted into
+#: every artifact's env block so a baseline diff can see how many warmup
+#: repetitions were discarded (and how many steady-state samples were kept)
+#: for the numbers it is comparing.
+_PROVENANCE = {"reps_discarded": 0, "steady_reps": 0, "timers": 0}
 
-def _steady_state_samples(fn, *args, iters=20, warmup=3):
+
+def timing_provenance() -> dict:
+    """Snapshot of the warmup-discard / steady-state tallies."""
+    return dict(_PROVENANCE)
+
+
+def reset_timing_provenance() -> None:
+    for k in _PROVENANCE:
+        _PROVENANCE[k] = 0
+
+
+def _tally(warmup: int, iters: int) -> None:
+    _PROVENANCE["reps_discarded"] += warmup
+    _PROVENANCE["steady_reps"] += iters
+    _PROVENANCE["timers"] += 1
+
+
+def _steady_state_samples(fn, *args, iters=20, warmup=5):
     """Per-repetition wall times of an already-jitted fn, seconds.
 
-    Every repetition (warmup included) blocks on the result before the next
-    starts, so each sample is one complete dispatch+execute round trip —
-    the single wall-clock-over-n-calls number this replaces hid dispatch
-    pipelining and was noisy across CI machines.
+    Every repetition (the discarded warmup included) blocks on the result
+    before the next starts, so each sample is one complete dispatch+execute
+    round trip — the single wall-clock-over-n-calls number this replaces hid
+    dispatch pipelining and was noisy across CI machines.
     """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
@@ -19,6 +51,7 @@ def _steady_state_samples(fn, *args, iters=20, warmup=3):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         samples.append(time.perf_counter() - t0)
+    _tally(warmup, iters)
     return samples
 
 
@@ -29,27 +62,30 @@ def _percentile(sorted_samples, p):
     return sorted_samples[idx]
 
 
-def time_jitted(fn, *args, iters=20, warmup=3):
+def time_jitted(fn, *args, iters=20, warmup=5):
     """Median (p50) wall time per call of an already-jitted fn (seconds)."""
     samples = sorted(_steady_state_samples(fn, *args, iters=iters,
                                            warmup=warmup))
     return _percentile(samples, 50)
 
 
-def time_jitted_percentiles(fn, *args, iters=30, warmup=3):
+def time_jitted_percentiles(fn, *args, iters=30, warmup=5):
     """Steady-state timing distribution of an already-jitted fn.
 
-    Returns {"p50": s, "p90": s, "iters": n} — p50 is the headline, p90
-    exposes tail jitter (GC, scheduler) that a single mean hides.
+    Returns {"p50": s, "p90": s, "iters": n, "reps_discarded": warmup} —
+    p50 is the headline, p90 exposes tail jitter (GC, scheduler) that a
+    single mean hides, and ``reps_discarded`` records how many warmup
+    repetitions were dropped before the steady-state window.
     """
     samples = sorted(_steady_state_samples(fn, *args, iters=iters,
                                            warmup=warmup))
     return {"p50": _percentile(samples, 50),
             "p90": _percentile(samples, 90),
-            "iters": len(samples)}
+            "iters": len(samples),
+            "reps_discarded": warmup}
 
 
-def time_chained_percentiles(step, iters=30, warmup=3):
+def time_chained_percentiles(step, iters=30, warmup=5):
     """Like ``time_jitted_percentiles`` for *state-chaining* callables.
 
     ``step()`` must advance its own state (e.g. rebinding a donated cache
@@ -65,19 +101,22 @@ def time_chained_percentiles(step, iters=30, warmup=3):
         jax.block_until_ready(step())
         samples.append(time.perf_counter() - t0)
     samples.sort()
+    _tally(warmup, iters)
     return {"p50": _percentile(samples, 50),
             "p90": _percentile(samples, 90),
-            "iters": len(samples)}
+            "iters": len(samples),
+            "reps_discarded": warmup}
 
 
 def time_replay_percentiles(replay, iters=5, warmup=1):
     """p50/p90 wall time of a whole-trace replay callable (seconds).
 
-    For the scanned sharded path: ``replay()`` runs an entire trace inside
-    one jitted ``lax.scan`` and blocks exactly once (converting the hit
-    count to a Python int *is* the single host synchronization) — so each
-    sample covers the full replay with no per-chunk dispatch or transfers,
-    which is what the figure's no-host-sync rows certify.
+    For the scanned/resident replay paths: ``replay()`` runs an entire
+    trace inside one jitted call (or one megakernel launch) and blocks
+    exactly once (converting the hit count to a Python int *is* the single
+    host synchronization) — so each sample covers the full replay with no
+    per-chunk dispatch or transfers, which is what the figure's
+    no-host-sync rows certify.
     """
     for _ in range(warmup):
         replay()
@@ -87,9 +126,11 @@ def time_replay_percentiles(replay, iters=5, warmup=1):
         replay()
         samples.append(time.perf_counter() - t0)
     samples.sort()
+    _tally(warmup, iters)
     return {"p50": _percentile(samples, 50),
             "p90": _percentile(samples, 90),
-            "iters": len(samples)}
+            "iters": len(samples),
+            "reps_discarded": warmup}
 
 
 def time_host(fn, *args, iters=3):
@@ -97,4 +138,6 @@ def time_host(fn, *args, iters=3):
     t0 = time.perf_counter()
     for _ in range(iters):
         fn(*args)
-    return (time.perf_counter() - t0) / iters
+    dt = (time.perf_counter() - t0) / iters
+    _tally(0, iters)
+    return dt

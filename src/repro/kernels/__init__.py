@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
     kway_probe      — batched set probe + victim select (the paper's O(k) scan)
+    replay          — trace-resident replay megakernel: a whole chunked trace
+                      in ONE pallas_call with the cache state pinned in VMEM
     paged_attention — flash-decode GQA over the K-way-managed paged KV pool
     ops             — public jit'd wrappers (auto interpret off-TPU)
     ref             — pure-jnp oracles for allclose validation

@@ -4,7 +4,8 @@ This is the paper's hot loop — "scan the k ways of one set, find the key or
 the policy victim" (Algorithms 2/3/5/6) — as a VMEM-tiled TPU kernel.
 
 TPU adaptation (DESIGN.md §2):
-  * The cache's SoA lanes (keys / meta_a / meta_b / vals) are VMEM-resident:
+  * The cache's SoA lanes (keys / fprint / meta_a / meta_b / vals) are
+    VMEM-resident:
     a hot cache of S×k ≤ 64Ki entries is ≤ 1 MiB per lane — the software
     analogue of the paper's "short continuous region of memory" argument,
     transplanted to the HBM→VMEM hierarchy.  BlockSpecs map each full lane
@@ -41,25 +42,34 @@ POS_INF = 3.0e38   # captured by the kernel trace and rejected by pallas_call
 LANES = 128  # TPU vector register lane width
 
 
+def _hash_u32(x, seed: int):
+    """core/hashing.hash_u32 (seeded premix + fmix32), inlined with literal
+    constants: a pallas_call body cannot close over hashing's module-level
+    jnp constants (rejected at trace time), but pure-function reuse is fine —
+    this is the ONE kernel-side copy, shared by the victim-score RANDOM
+    branch, the fingerprint pre-filter, and the replay megakernel's TinyLFU
+    sketch (kernels/replay.py).  The kernel-vs-oracle sweeps in
+    tests/test_kernels.py call hashing directly, so drift here fails loudly.
+    """
+    x = x.astype(jnp.uint32)
+    x = (x + jnp.uint32(seed) * jnp.uint32(0x9E3779B1)) * jnp.uint32(0x85EBCA77)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
 def _scores_for_policy(policy: int, keys, meta_a, meta_b, now):
     """Victim scores, lower == evict first.  Bit-identical to
     core/policies.victim_scores (the backend-equivalence suite relies on it),
     written with only Pallas-TPU-lowerable ops (no gather, no PRNG)."""
     a = meta_a.astype(jnp.float32)
     if policy == Policy.RANDOM:
-        # hashing.hash_u32(keys ^ now, seed=0xBADA): seeded premix + fmix32,
-        # inlined with literal constants because the kernel body cannot close
-        # over hashing's module-level jnp constants (rejected by pallas_call).
-        # tests/test_kernels.py sweeps kernel vs kernels/ref.py — which calls
-        # hash_u32 directly — so any drift in this copy fails loudly.
-        x = keys.astype(jnp.uint32) ^ now.astype(jnp.uint32)
-        x = (x + jnp.uint32(0xBADA) * jnp.uint32(0x9E3779B1)) * jnp.uint32(0x85EBCA77)
-        x = x ^ (x >> 16)
-        x = x * jnp.uint32(0x85EBCA6B)
-        x = x ^ (x >> 13)
-        x = x * jnp.uint32(0xC2B2AE35)
-        x = x ^ (x >> 16)
-        return x.astype(jnp.float32)
+        h = _hash_u32(keys.astype(jnp.uint32) ^ now.astype(jnp.uint32),
+                      0xBADA)
+        return h.astype(jnp.float32)
     if policy == Policy.HYPERBOLIC:
         age = (now - meta_b).astype(jnp.float32) + 1.0
         return a / age
@@ -84,11 +94,18 @@ def _full_order_row(scores, lane, ways):
     return ord_row, vway
 
 
+def _fingerprint_i32(key_u32):
+    """core/hashing.fingerprint as int32 (the kernels' bit-cast lane
+    dtype)."""
+    return (_hash_u32(key_u32, 0xF19E) & jnp.uint32(0xFFFF)).astype(jnp.int32)
+
+
 def _probe_kernel(
     # scalar prefetch
     sets_ref,            # int32 [B]    set index per query
     # VMEM inputs
     keys_ref,            # int32 [S, kp]   stored keys (bit-cast uint32)
+    fprint_ref,          # int32 [S, kp]   16-bit fingerprints
     meta_a_ref,          # int32 [S, kp]
     meta_b_ref,          # int32 [S, kp]
     qkeys_ref,           # int32 [qt]      query keys for this tile
@@ -114,10 +131,14 @@ def _probe_kernel(
         q = tile * qt + i
         s = sets_ref[q]
         row_keys = keys_ref[pl.ds(s, 1), :]          # [1, kp]
+        row_fpr = fprint_ref[pl.ds(s, 1), :]
         qk = qkeys_ref[i]
 
         occupied = (row_keys != empty_key) & valid_way
-        eq = (row_keys == qk) & occupied
+        # KW-WFSC Algorithm 5: the 16-bit fingerprint pre-filters the scan;
+        # a fingerprint match is confirmed on the full key, so the result is
+        # bit-identical to the plain full-key compare.
+        eq = (row_fpr == _fingerprint_i32(qk)) & (row_keys == qk) & occupied
         hit = jnp.any(eq)
         # first matching way (stable argmax over the 128-lane mask)
         way = jnp.min(jnp.where(eq, lane, LANES))
@@ -155,6 +176,7 @@ def _probe_kernel(
 )
 def kway_probe(
     keys: jnp.ndarray,     # int32 [S, kp] (ways padded to LANES multiple.. or any kp>=ways)
+    fprint: jnp.ndarray,   # int32 [S, kp] 16-bit fingerprints of the keys
     meta_a: jnp.ndarray,   # int32 [S, kp]
     meta_b: jnp.ndarray,   # int32 [S, kp]
     sets: jnp.ndarray,     # int32 [B]
@@ -208,12 +230,12 @@ def kway_probe(
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[full(), full(), full(), qtile(), qtile()],
+            in_specs=[full(), full(), full(), full(), qtile(), qtile()],
             out_specs=out_specs,
         ),
         out_shape=out_shape,
         interpret=interpret,
-    )(sets, keys, meta_a, meta_b, qkeys, times)
+    )(sets, keys, fprint, meta_a, meta_b, qkeys, times)
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +247,7 @@ def _fused_kernel(
     sets_ref,            # int32 [B]    set index per query
     # VMEM inputs
     keys_ref,            # int32 [S, kp]
+    fprint_ref,          # int32 [S, kp]
     meta_a_ref,          # int32 [S, kp]
     meta_b_ref,          # int32 [S, kp]
     qkeys_ref,           # int32 [qt]
@@ -267,10 +290,12 @@ def _fused_kernel(
         q = tile * qt + i
         s = sets_ref[q]
         row_keys = keys_ref[pl.ds(s, 1), :]          # [1, kp]
+        row_fpr = fprint_ref[pl.ds(s, 1), :]
         qk = qkeys_ref[i]
 
         occupied = (row_keys != empty_key) & valid_way
-        eq = (row_keys == qk) & occupied
+        # fingerprint pre-filter + full-key confirm (see _probe_kernel)
+        eq = (row_fpr == _fingerprint_i32(qk)) & (row_keys == qk) & occupied
         hit = jnp.any(eq)
         way = jnp.min(jnp.where(eq, lane, LANES))    # LANES when no hit
 
@@ -305,6 +330,7 @@ def _fused_kernel(
 )
 def kway_fused_probe(
     keys: jnp.ndarray,     # int32 [S, kp]
+    fprint: jnp.ndarray,   # int32 [S, kp] 16-bit fingerprints of the keys
     meta_a: jnp.ndarray,   # int32 [S, kp]
     meta_b: jnp.ndarray,   # int32 [S, kp]
     sets: jnp.ndarray,     # int32 [B]
@@ -346,7 +372,7 @@ def kway_fused_probe(
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[full(), full(), full(),
+            in_specs=[full(), full(), full(), full(),
                       qtile(), qtile(), qtile(), qtile()],
             out_specs=[qtile(), qtile(),
                        pl.BlockSpec((qt, LANES), lambda p, i, *_: (i, 0))],
@@ -358,4 +384,4 @@ def kway_fused_probe(
             jax.ShapeDtypeStruct((b, LANES), jnp.int32),
         ],
         interpret=interpret,
-    )(sets, keys, meta_a, meta_b, qkeys, times_get, times_put, en)
+    )(sets, keys, fprint, meta_a, meta_b, qkeys, times_get, times_put, en)

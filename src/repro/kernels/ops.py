@@ -22,11 +22,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_ways(arr: jnp.ndarray, lanes: int = _kp.LANES) -> jnp.ndarray:
+def _pad_ways(arr: jnp.ndarray, lanes: int = _kp.LANES,
+              fill: int = -1) -> jnp.ndarray:
     s, k = arr.shape
     if k == lanes:
         return arr
-    pad = jnp.full((s, lanes - k), -1, arr.dtype)
+    pad = jnp.full((s, lanes - k), fill, arr.dtype)
     return jnp.concatenate([arr, pad], axis=1)
 
 
@@ -45,6 +46,7 @@ def _probe_impl(cfg, state, qkeys, use_kernel: bool, full_order: bool,
     times = state.clock + jnp.arange(b, dtype=jnp.int32)
 
     keys_i = _pad_ways(state.keys.astype(jnp.int32))
+    fpr = _pad_ways(state.fprint.astype(jnp.int32), fill=0)
     ma = _pad_ways(state.meta_a)
     mb = _pad_ways(state.meta_b)
     qk_i = qkeys.astype(jnp.int32)
@@ -54,7 +56,7 @@ def _probe_impl(cfg, state, qkeys, use_kernel: bool, full_order: bool,
         pad = (-b) % qt
         zpad = jnp.zeros((pad,), jnp.int32)
         outs = _kp.kway_probe(
-            keys_i, ma, mb,
+            keys_i, fpr, ma, mb,
             jnp.concatenate([sets, zpad]),
             jnp.concatenate([qk_i, zpad]),
             jnp.concatenate([times, zpad]),
@@ -64,7 +66,7 @@ def _probe_impl(cfg, state, qkeys, use_kernel: bool, full_order: bool,
         )
     else:
         outs = _ref.kway_probe_ref(
-            keys_i, ma, mb, sets, qk_i, times,
+            keys_i, fpr, ma, mb, sets, qk_i, times,
             policy=int(cfg.policy), ways=cfg.ways, full_order=full_order,
             need_victims=need_victims,
         )
@@ -142,6 +144,7 @@ def fused_probe(
           else enabled.astype(jnp.int32))
 
     keys_i = _pad_ways(state.keys.astype(jnp.int32))
+    fpr = _pad_ways(state.fprint.astype(jnp.int32), fill=0)
     ma = _pad_ways(state.meta_a)
     mb = _pad_ways(state.meta_b)
     qk_i = qkeys.astype(jnp.int32)
@@ -152,7 +155,7 @@ def fused_probe(
         zpad = jnp.zeros((pad,), jnp.int32)
         # padding lanes carry en=0: they must not apply hit updates
         outs = _kp.kway_fused_probe(
-            keys_i, ma, mb,
+            keys_i, fpr, ma, mb,
             jnp.concatenate([sets, zpad]),
             jnp.concatenate([qk_i, zpad]),
             jnp.concatenate([times_get, zpad]),
@@ -163,7 +166,7 @@ def fused_probe(
         )
     else:
         outs = _ref.kway_fused_probe_ref(
-            keys_i, ma, mb, sets, qk_i, times_get, times_put, en,
+            keys_i, fpr, ma, mb, sets, qk_i, times_get, times_put, en,
             policy=int(cfg.policy), ways=cfg.ways,
         )
     hit, way, order = (o[:b] for o in outs)
@@ -188,6 +191,34 @@ def probe_orders(
     qkeys, sets, (hit, way, _, _, order) = _probe_impl(
         cfg, state, qkeys, use_kernel, full_order=True)
     return qkeys, sets, hit.astype(jnp.bool_), way, order[:, : cfg.ways]
+
+
+def replay_resident(cfg: KWayConfig, state: KWayState, chunks, enabled,
+                    tinylfu=None, sketch=None):
+    """Whole-trace replay in ONE pallas launch (kernels/replay.py).
+
+    ``chunks`` uint32 [steps, B] / ``enabled`` bool [steps, B] — the
+    ``router.pad_chunks`` layout.  The cache state lanes stay VMEM-resident
+    for the entire trace; the per-chunk transitions are bit-identical to
+    scanning the chunks through the fused ``access`` (with the TinyLFU
+    record → peek → admit phases of the batched replay when ``tinylfu``).
+
+    Returns (hits int32 [steps], evs int32 [steps], state', sketch'|None).
+    """
+    from repro.kernels import replay as _rp
+
+    hits, evs, lanes, sketch_out = _rp.replay_resident(
+        state.keys, state.fprint, state.vals, state.meta_a, state.meta_b,
+        state.clock,
+        jnp.asarray(chunks, jnp.uint32), jnp.asarray(enabled, jnp.bool_),
+        policy=int(cfg.policy), ways=cfg.ways, num_sets=cfg.num_sets,
+        seed=cfg.seed, tinylfu=tinylfu, sketch=sketch,
+        interpret=not _on_tpu(),
+    )
+    keys, fpr, vals, ma, mb, clock = lanes
+    state_out = KWayState(keys=keys, fprint=fpr, vals=vals, meta_a=ma,
+                          meta_b=mb, clock=clock)
+    return hits, evs, state_out, sketch_out
 
 
 def attend_paged(

@@ -36,9 +36,22 @@ def _scores(policy, keys_u32, meta_a, meta_b, now):
     return a
 
 
-def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways,
-                   full_order=False, need_victims=True):
+def _fp_i32(keys_i32):
+    """hashing.fingerprint on bit-cast int32 keys, as int32 (the kernels'
+    lane dtype)."""
+    from repro.core import hashing
+    fp = hashing.fingerprint(keys_i32.astype(jnp.uint32))
+    return fp.astype(jnp.int32)
+
+
+def kway_probe_ref(keys, fprint, meta_a, meta_b, sets, qkeys, times, *,
+                   policy, ways, full_order=False, need_victims=True):
     """Oracle for kernels.kway_probe (identical outputs, any kp >= ways).
+
+    The probe applies the same fingerprint pre-filter + full-key confirm as
+    the kernel (KW-WFSC Algorithm 5): with consistent fingerprints the
+    result is bit-identical to a plain full-key compare, and a *stale*
+    fingerprint masks the same hits in both implementations.
 
     With ``full_order=True`` additionally returns vorder int32 [B, kp]: the
     victim order worst-first (entries past ``ways`` hold the kp sentinel),
@@ -50,9 +63,11 @@ def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways,
     kp = keys.shape[1]
     lane = jnp.arange(kp, dtype=jnp.int32)[None, :]
     row_keys = keys[sets]                        # [B, kp]
+    row_fpr = fprint[sets]
     valid = lane < ways
     occupied = (row_keys != -1) & valid
-    eq = (row_keys == qkeys[:, None]) & occupied
+    eq = (row_fpr == _fp_i32(qkeys)[:, None]) & \
+        (row_keys == qkeys[:, None]) & occupied
     hit = jnp.any(eq, axis=-1)
     way = jnp.min(jnp.where(eq, lane, kp), axis=-1)
     way = jnp.where(hit, way, 0)
@@ -80,10 +95,11 @@ def kway_probe_ref(keys, meta_a, meta_b, sets, qkeys, times, *, policy, ways,
     return out
 
 
-def kway_fused_probe_ref(keys, meta_a, meta_b, sets, qkeys, times_get,
+def kway_fused_probe_ref(keys, fprint, meta_a, meta_b, sets, qkeys, times_get,
                          times_put, en, *, policy, ways):
     """Oracle for kernels.kway_fused_probe: (hit, way, vorder) with the
     victim order scored on the hit-updated metadata at the put-phase times.
+    Applies the kernel's fingerprint pre-filter + full-key confirm.
 
     The kernel applies hit transitions sequentially in batch order; the
     equivalent batched form is a scatter-add (LFU/HYPERBOLIC counts) or
@@ -93,9 +109,11 @@ def kway_fused_probe_ref(keys, meta_a, meta_b, sets, qkeys, times_get,
     kp = keys.shape[1]
     lane = jnp.arange(kp, dtype=jnp.int32)[None, :]
     row_keys = keys[sets]                        # [B, kp]
+    row_fpr = fprint[sets]
     valid = lane < ways
     occupied = (row_keys != -1) & valid
-    eq = (row_keys == qkeys[:, None]) & occupied
+    eq = (row_fpr == _fp_i32(qkeys)[:, None]) & \
+        (row_keys == qkeys[:, None]) & occupied
     hit = jnp.any(eq, axis=-1)
     way = jnp.min(jnp.where(eq, lane, kp), axis=-1)
 

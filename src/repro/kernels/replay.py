@@ -1,0 +1,545 @@
+"""Pallas TPU megakernel: whole-trace replay in ONE ``pallas_call``.
+
+The paper's throughput headline rests on the cache being a "short continuous
+region of memory" that the hot loop keeps close to the cores.  The chunked
+replay path (PR 3/4) still round-trips all five state lanes through HBM
+between chunks: every chunk is a kernel launch plus an XLA scatter pass.
+This kernel retires that split for the replay workload (DESIGN.md §10):
+
+  * the grid iterates over trace *chunks*; the cache state lanes
+    (``keys`` / ``fprint`` / ``vals`` / ``meta_a`` / ``meta_b``) live in VMEM
+    for the entire trace — they are outputs with a constant index map,
+    initialised from the input state on the first grid step and mutated
+    in place until the final flush;
+  * requests are streamed from HBM via a chunk-indexed BlockSpec
+    (one ``[1, B]`` row of keys / set ids / enabled flags per grid step);
+  * the per-chunk hit/insert transitions of ``core/kway.apply_access`` are
+    applied **in-kernel** (no read-kernel/write-scatter split), bit-identical
+    to the chunked-scan replay: hits update metadata sequentially in batch
+    order (== the scatter-add/-max), inserts are buffered during victim
+    selection so scoring always sees the post-hit / pre-insert state, then
+    applied in batch order (== the packed insert scatter);
+  * the TinyLFU admission phases (record → peek victim → admit) run
+    in-kernel on a VMEM-resident sketch, replicating the batched
+    ``admission.record``/``admit`` semantics (pre-chunk doorkeeper reads,
+    max-merged counter increments, post-chunk aging);
+  * the only per-step outputs are two scalar counters (hits, evictions) —
+    one int32 each per chunk.
+
+Equivalence contract: for any trace, ``replay_resident`` produces the same
+per-chunk hit counts, eviction counts and final state as scanning the same
+chunks through ``CacheBackend.access`` (the fused path) with the TinyLFU
+phases of ``simulate._replay_batched_scan``.  tests/test_resident.py pins
+this across all pallas-supported policies × ±TinyLFU.
+
+Payload convention: the replay workload stores ``val == key`` (as int32),
+matching every replay loop in this repo; the kernel derives values from the
+key stream instead of carrying a third stream.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policies import Policy
+from repro.kernels.kway_probe import (LANES, NEG_INF, POS_INF,
+                                      _fingerprint_i32, _hash_u32,
+                                      _scores_for_policy)
+
+# Trace/launch tally (same pattern as eval/runner.py): the jitted wrapper
+# bumps ("trace", ...) once per XLA compilation and ("launch", ...) once per
+# dispatch, so tests can assert "a whole replay is exactly one compile and
+# one launch" instead of trusting the docstring.
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def trace_counts() -> dict:
+    """Compile/launch tally of the replay megakernel, keyed by
+    (kind, policy, S, ways, steps, batch, tinylfu)."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def _lane_read(row_ref, blane, i):
+    """Scalar read of column ``i`` from a [1, Bp] row ref via a masked
+    reduce — no dynamic VMEM addressing, just one VPU select+sum."""
+    return jnp.sum(jnp.where(blane == i, row_ref[...], 0))
+
+
+def _row_select(row, lane, idx):
+    """Scalar read of column ``idx`` from an in-register [1, N] row."""
+    return jnp.sum(jnp.where(lane == idx, row, 0))
+
+
+def _replay_kernel(
+    # scalar prefetch
+    scal_ref,            # int32 [2]  (initial clock, initial sketch additions)
+    # VMEM inputs
+    qk_ref,              # int32 [1, Bp]  sanitized query keys (chunk t)
+    sets_ref,            # int32 [1, Bp]  set index per query
+    en_ref,              # int32 [1, Bp]  1 = live lane
+    keys0_ref,           # int32 [S, kp]  initial state lanes
+    fpr0_ref,
+    vals0_ref,
+    ma0_ref,
+    mb0_ref,
+    *rest,
+    policy: int,
+    ways: int,
+    batch: int,
+    tl: tuple | None,    # (width, door_bits, sample) or None
+    empty_key: int,
+):
+    # remaining refs: [pk0, dr0] + outputs + scratch — unpack by shape of the
+    # static configuration.
+    k = 0
+    if tl is not None:
+        pk0_ref, dr0_ref = rest[k], rest[k + 1]
+        k += 2
+    hits_ref, evs_ref = rest[k], rest[k + 1]
+    keys_ref, fpr_ref, vals_ref, ma_ref, mb_ref = rest[k + 2:k + 7]
+    k += 7
+    if tl is not None:
+        pk_ref, dr_ref, adds_ref = rest[k], rest[k + 1], rest[k + 2]
+        k += 3
+    ins_s, ins_w, ins_k, ins_t = rest[k:k + 4]
+    k += 4
+    if tl is not None:
+        adm_row, pk_new, dr_delta = rest[k], rest[k + 1], rest[k + 2]
+
+    t = pl.program_id(0)
+    base = scal_ref[0] + jnp.int32(2 * batch) * t   # chunk t's clock origin
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+    valid_way = lane < ways
+    bp = qk_ref.shape[1]
+    blane = jax.lax.broadcasted_iota(jnp.int32, (1, bp), 1)
+
+    # ---- first grid step: pull the initial state into the resident buffers
+    @pl.when(t == 0)
+    def _init():
+        keys_ref[...] = keys0_ref[...]
+        fpr_ref[...] = fpr0_ref[...]
+        vals_ref[...] = vals0_ref[...]
+        ma_ref[...] = ma0_ref[...]
+        mb_ref[...] = mb0_ref[...]
+        if tl is not None:
+            pk_ref[...] = pk0_ref[...]
+            dr_ref[...] = dr0_ref[...]
+            adds_ref[0] = scal_ref[1]
+
+    def probe(s, qk):
+        """Probe one set row: fingerprint pre-filter, full-key confirm.
+        Returns (hit bool, way i32, row_keys [1,kp], occupied [1,kp])."""
+        row_keys = keys_ref[pl.ds(s, 1), :]
+        row_fpr = fpr_ref[pl.ds(s, 1), :]
+        occupied = (row_keys != empty_key) & valid_way
+        qfp = _fingerprint_i32(qk.astype(jnp.uint32))
+        eq = (row_fpr == qfp) & (row_keys == qk) & occupied
+        hit = jnp.any(eq)
+        way = jnp.min(jnp.where(eq, lane, LANES))
+        return hit, way, row_keys, occupied
+
+    def masked_scores(row_keys, row_a, row_b, occupied, now):
+        sc = _scores_for_policy(policy, row_keys, row_a, row_b, now)
+        sc = jnp.where(occupied, sc, NEG_INF)    # empty ways evict first
+        return jnp.where(valid_way, sc, POS_INF)  # padding ways never
+
+    # ------------------------------------------------------------------
+    # TinyLFU phase A: record the whole chunk (admission.record semantics:
+    # doorkeeper reads against the PRE-chunk door, counter increments
+    # computed on PRE-chunk counters and max-merged, then one aging check).
+    # ------------------------------------------------------------------
+    if tl is not None:
+        width, door_bits, sample = tl
+        wp = pk_ref.shape[1]
+        wlane = jax.lax.broadcasted_iota(jnp.int32, (1, wp), 1)
+        dp = dr_ref.shape[1]
+        dlane = jax.lax.broadcasted_iota(jnp.int32, (1, dp), 1)
+
+        def sketch_pos(key_u32):
+            """(door word/bit, per-row counter word/shift) for one key."""
+            dh = _hash_u32(key_u32, 0xD00E) & jnp.uint32(door_bits - 1)
+            dword = (dh >> 5).astype(jnp.int32)
+            dbit = dh & jnp.uint32(31)
+            rows = []
+            for r in range(4):
+                idx = _hash_u32(key_u32, 0xA000 + r) & jnp.uint32(width - 1)
+                rows.append(((idx >> 3).astype(jnp.int32),
+                             (idx & jnp.uint32(7)) * jnp.uint32(4)))
+            return dword, dbit, rows
+
+        def door_bit(dword, dbit):
+            cur = _row_select(dr_ref[...], dlane, dword).astype(jnp.uint32)
+            return ((cur >> dbit) & jnp.uint32(1)).astype(jnp.int32)
+
+        def estimate(key_u32):
+            """admission.estimate on the resident sketch: min over the 4
+            count-min rows + the doorkeeper bit."""
+            dword, dbit, rows = sketch_pos(key_u32)
+            est = jnp.int32(0x7FFFFFFF)
+            for r, (word, shift) in enumerate(rows):
+                cur = _row_select(pk_ref[pl.ds(r, 1), :], wlane,
+                                  word).astype(jnp.uint32)
+                nib = ((cur >> shift) & jnp.uint32(0xF)).astype(jnp.int32)
+                est = jnp.minimum(est, nib)
+            return est + door_bit(dword, dbit)
+
+        dr_delta[...] = jnp.zeros_like(dr_delta)
+        pk_new[...] = pk_ref[...]
+
+        def rec_body(i, adds_inc):
+            en_i = _lane_read(en_ref, blane, i)
+            live = en_i != 0
+            key_u = _lane_read(qk_ref, blane, i).astype(jnp.uint32)
+            dword, dbit, rows = sketch_pos(key_u)
+            in_door = door_bit(dword, dbit) != 0
+            # admission.record scatter-SETs ``pre | dmask`` per lane, so for
+            # duplicate door words only the LAST enabled lane's bit survives
+            # the chunk (the documented batched coalescing).  Overwrite —
+            # don't OR — the word's delta to replicate that bit-for-bit.
+            bit = (jnp.uint32(1) << dbit).astype(dr_delta.dtype)
+            dr_delta[...] = jnp.where((dlane == dword) & live, bit,
+                                      dr_delta[...])
+            for r, (word, shift) in enumerate(rows):
+                row_pre = pk_ref[pl.ds(r, 1), :]
+                cur = _row_select(row_pre, wlane, word).astype(jnp.uint32)
+                nib = (cur >> shift) & jnp.uint32(0xF)
+                do_inc = live & in_door & (nib < jnp.uint32(15))
+                neww = cur + (jnp.uint32(1) << shift)
+                row_acc = pk_new[pl.ds(r, 1), :]
+                upd = (wlane == word) & do_inc
+                # the scatter-max of admission.record compares whole words
+                # as uint32 — merge in that domain (a set nibble 7 makes the
+                # int32 view negative)
+                merged = jnp.maximum(row_acc.astype(jnp.uint32),
+                                     neww).astype(jnp.int32)
+                pk_new[pl.ds(r, 1), :] = jnp.where(upd, merged, row_acc)
+            return adds_inc + en_i
+
+        adds_inc = jax.lax.fori_loop(0, batch, rec_body, jnp.int32(0))
+        dr_ref[...] = dr_ref[...] | dr_delta[...]
+        for r in range(4):
+            pk_ref[pl.ds(r, 1), :] = pk_new[pl.ds(r, 1), :]
+        adds = adds_ref[0] + adds_inc
+        aged = adds >= jnp.int32(sample)
+        adds_ref[0] = jnp.where(aged, jnp.int32(0), adds)
+        # TinyLFU reset: halve every 4-bit counter, clear the doorkeeper
+        halved = jnp.right_shift(
+            pk_ref[...].astype(jnp.uint32), jnp.uint32(1)
+        ) & jnp.uint32(0x77777777)
+        pk_ref[...] = jnp.where(aged, halved.astype(jnp.int32), pk_ref[...])
+        dr_ref[...] = jnp.where(aged, jnp.zeros_like(dr_ref), dr_ref[...])
+
+        # ---- TinyLFU phase B: peek each lane's prospective victim on the
+        # PRE-hit state at time base+i and gate admission on the
+        # post-record sketch (the phase order of the chunked scan).
+        def adm_body(i, _):
+            qk = _lane_read(qk_ref, blane, i)
+            s = _lane_read(sets_ref, blane, i)
+            hit, _, row_keys, occupied = probe(s, qk)
+            row_a = ma_ref[pl.ds(s, 1), :]
+            row_b = mb_ref[pl.ds(s, 1), :]
+            sc = masked_scores(row_keys, row_a, row_b, occupied, base + i)
+            vway = jnp.min(jnp.where(sc == jnp.min(sc), lane, LANES))
+            vkey = _row_select(row_keys, lane, vway)
+            vvalid = (vkey != empty_key) & ~hit
+            ce = estimate(qk.astype(jnp.uint32))
+            ve = estimate(vkey.astype(jnp.uint32))
+            ok = (~vvalid) | (ce > ve)
+            adm_row[...] = jnp.where(blane == i, ok.astype(jnp.int32),
+                                     adm_row[...])
+            return 0
+
+        jax.lax.fori_loop(0, batch, adm_body, 0)
+
+    # ------------------------------------------------------------------
+    # hit phase (apply_access get semantics at times base+i): sequential
+    # on_hit transitions == the batched scatter-add (LFU/HYPERBOLIC) and
+    # scatter-max (LRU — batch times are increasing).
+    # ------------------------------------------------------------------
+    def hit_body(i, hits_acc):
+        qk = _lane_read(qk_ref, blane, i)
+        s = _lane_read(sets_ref, blane, i)
+        en_i = _lane_read(en_ref, blane, i)
+        hit, way, _, _ = probe(s, qk)
+        if policy not in (Policy.FIFO, Policy.RANDOM):  # on_hit is identity
+            do = hit & (en_i != 0)
+            row_a = ma_ref[pl.ds(s, 1), :]
+            upd = lane == way            # all-false when way == LANES
+            if policy == Policy.LRU:
+                new_a = jnp.where(upd, base + i, row_a)
+            else:                        # LFU / HYPERBOLIC: count += 1
+                new_a = jnp.where(upd, row_a + 1, row_a)
+            ma_ref[pl.ds(s, 1), :] = jnp.where(do, new_a, row_a)
+        return hits_acc + (hit & (en_i != 0)).astype(jnp.int32)
+
+    hits = jax.lax.fori_loop(0, batch, hit_body, jnp.int32(0))
+
+    # ------------------------------------------------------------------
+    # insert phase (apply_access miss semantics at times base+batch+i).
+    # Inserts are *buffered*: victim scoring must see the post-hit /
+    # pre-insert state (exactly what the batched _victim_order_arrays
+    # scores), so the state lanes stay untouched until the apply loop.
+    # The buffers double as the conflict resolution of _resolve_inserts:
+    #   * dedupe — a key already buffered was this batch's first
+    #     occurrence (keys lanes are pre-chunk, so a re-probe cannot see
+    #     it; the buffer scan is the CAS-race outcome);
+    #   * rank  — the number of buffered inserts into the same set, and
+    #     the rank-th lane takes the rank-th worst victim of ITS OWN
+    #     victim order (per-lane put timestamps — RANDOM/HYPERBOLIC
+    #     orders are time-dependent);
+    #   * cap   — rank >= ways lanes are not admitted.
+    # ------------------------------------------------------------------
+    ins_s[...] = jnp.full_like(ins_s, -1)   # -1 never matches a real set
+    ins_k[...] = jnp.full_like(ins_k, -1)   # sanitized keys are never -1
+
+    def ins_body(i, carry):
+        n, evs = carry
+        qk = _lane_read(qk_ref, blane, i)
+        s = _lane_read(sets_ref, blane, i)
+        en_i = _lane_read(en_ref, blane, i)
+        adm_i = (_lane_read(adm_row, blane, i) if tl is not None
+                 else jnp.int32(1))
+        hit, _, row_keys, occupied = probe(s, qk)
+        dup = jnp.any(ins_k[...] == qk)
+        rank = jnp.sum((ins_s[...] == s).astype(jnp.int32))
+        do = (~hit) & (en_i != 0) & (adm_i != 0) & (~dup) & (rank < ways)
+
+        t_put = base + jnp.int32(batch) + i
+        row_a = ma_ref[pl.ds(s, 1), :]
+        row_b = mb_ref[pl.ds(s, 1), :]
+        work = masked_scores(row_keys, row_a, row_b, occupied, t_put)
+        # rank-th worst victim: `ways` rounds of masked min-extraction,
+        # keeping the round that matches this lane's rank (ties break
+        # toward the lowest lane — the stable argsort of the jnp path).
+        vway = jnp.int32(0)
+        for r in range(ways):
+            m = jnp.min(work)
+            w = jnp.min(jnp.where(work == m, lane, LANES))
+            vway = jnp.where(jnp.int32(r) == rank, w, vway)
+            work = jnp.where(lane == w, POS_INF, work)
+
+        evk = _row_select(row_keys, lane, vway)
+        ev = do & (evk != empty_key)
+
+        # buffer slot n (no-op when ~do: the sentinel column Bp matches
+        # no lane)
+        slot = jnp.where(do, n, jnp.int32(bp))
+        sel = blane == slot
+        ins_s[...] = jnp.where(sel, s, ins_s[...])
+        ins_w[...] = jnp.where(sel, vway, ins_w[...])
+        ins_k[...] = jnp.where(sel, qk, ins_k[...])
+        ins_t[...] = jnp.where(sel, t_put, ins_t[...])
+        return n + do.astype(jnp.int32), evs + ev.astype(jnp.int32)
+
+    n_ins, evs = jax.lax.fori_loop(0, batch, ins_body,
+                                   (jnp.int32(0), jnp.int32(0)))
+
+    # ---- apply the buffered inserts in batch order (== the packed insert
+    # scatter of apply_access; duplicate (set, way) pairs resolve
+    # last-write-wins in batch order, matching the XLA scatter)
+    def app_body(j, _):
+        live = j < n_ins
+        s = jnp.where(live, _lane_read(ins_s, blane, j), 0)
+        w = _lane_read(ins_w, blane, j)
+        key = _lane_read(ins_k, blane, j)
+        t_put = _lane_read(ins_t, blane, j)
+        upd = (lane == w) & live
+        fp = _fingerprint_i32(key.astype(jnp.uint32))
+        # on_insert metadata (policies.on_insert, specialized statically)
+        if policy in (Policy.LRU, Policy.FIFO):
+            ia, ib = t_put, jnp.int32(0)
+        elif policy == Policy.LFU:
+            ia, ib = jnp.int32(1), jnp.int32(0)
+        elif policy == Policy.RANDOM:
+            ia, ib = jnp.int32(0), jnp.int32(0)
+        else:                                   # HYPERBOLIC: (n=1, t0=now)
+            ia, ib = jnp.int32(1), t_put
+        for ref, val in ((keys_ref, key), (fpr_ref, fp), (vals_ref, key),
+                         (ma_ref, ia), (mb_ref, ib)):
+            row = ref[pl.ds(s, 1), :]
+            ref[pl.ds(s, 1), :] = jnp.where(upd, val, row)
+        return 0
+
+    jax.lax.fori_loop(0, batch, app_body, 0)
+
+    hits_ref[0] = hits
+    evs_ref[0] = evs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "ways", "num_sets", "seed", "tl", "interpret"))
+def _replay_resident_jit(
+    keys, fpr, vals, ma, mb, clock,      # state (unpadded [S, ways] lanes)
+    chunks, enabled,                     # uint32 [T, B], bool [T, B]
+    pk, dr, adds,                        # sketch arrays (dummies when tl None)
+    *,
+    policy: int,
+    ways: int,
+    num_sets: int,
+    seed: int,
+    tl: tuple | None,                    # (width, door_bits, sample) | None
+    interpret: bool,
+):
+    steps, batch = chunks.shape
+    _TRACE_COUNTS[("trace", int(policy), num_sets, ways, steps, batch,
+                   tl is not None)] += 1
+
+    # ---- streams: sanitize + route once, pad columns to the 128-lane width
+    from repro.core import hashing
+    qk = hashing.sanitize_keys(chunks.reshape(-1))
+    sets = hashing.set_index(qk, num_sets, seed).reshape(steps, batch)
+    qk = qk.astype(jnp.int32).reshape(steps, batch)
+    en = enabled.astype(jnp.int32)
+    bp = -(-batch // LANES) * LANES
+    if bp != batch:
+        pad = jnp.zeros((steps, bp - batch), jnp.int32)
+        qk = jnp.concatenate([qk, pad], axis=1)
+        sets = jnp.concatenate([sets, pad], axis=1)
+        en = jnp.concatenate([en, pad], axis=1)
+
+    # ---- state lanes: pad ways to the LANES register width, bit-cast int32
+    def pad_ways(arr, fill):
+        s, k = arr.shape
+        if k == LANES:
+            return arr.astype(jnp.int32)
+        return jnp.concatenate(
+            [arr.astype(jnp.int32),
+             jnp.full((s, LANES - k), fill, jnp.int32)], axis=1)
+
+    keys_i = pad_ways(keys, -1)
+    fpr_i = pad_ways(fpr, 0)
+    vals_i = pad_ways(vals, 0)
+    ma_i = pad_ways(ma, 0)
+    mb_i = pad_ways(mb, 0)
+    s = keys_i.shape[0]
+
+    scal = jnp.stack([clock.astype(jnp.int32), adds.astype(jnp.int32)])
+
+    kernel = functools.partial(
+        _replay_kernel, policy=int(policy), ways=ways, batch=batch,
+        tl=tl, empty_key=-1)
+
+    chunk_row = lambda: pl.BlockSpec((1, bp), lambda t, *_: (t, 0))  # noqa: E731
+    full = lambda a: pl.BlockSpec(a.shape, lambda t, *_: (0,) * a.ndim)  # noqa: E731
+    cnt = lambda: pl.BlockSpec((1,), lambda t, *_: (t,))  # noqa: E731
+
+    in_arrays = [qk, sets, en, keys_i, fpr_i, vals_i, ma_i, mb_i]
+    in_specs = [chunk_row(), chunk_row(), chunk_row(),
+                full(keys_i), full(fpr_i), full(vals_i), full(ma_i),
+                full(mb_i)]
+    out_shape = [jax.ShapeDtypeStruct((steps,), jnp.int32),
+                 jax.ShapeDtypeStruct((steps,), jnp.int32)] + [
+        jax.ShapeDtypeStruct((s, LANES), jnp.int32) for _ in range(5)]
+    out_specs = [cnt(), cnt()] + [full(keys_i) for _ in range(5)]
+    scratch = [pltpu.VMEM((1, bp), jnp.int32) for _ in range(4)]
+
+    if tl is not None:
+        pk_i = pk.astype(jnp.int32)
+        dr_i = dr.astype(jnp.int32)
+        in_arrays += [pk_i, dr_i]
+        in_specs += [full(pk_i), full(dr_i)]
+        out_shape += [jax.ShapeDtypeStruct(pk_i.shape, jnp.int32),
+                      jax.ShapeDtypeStruct(dr_i.shape, jnp.int32),
+                      jax.ShapeDtypeStruct((1,), jnp.int32)]
+        out_specs += [full(pk_i), full(dr_i),
+                      pl.BlockSpec((1,), lambda t, *_: (0,))]
+        scratch += [pltpu.VMEM((1, bp), jnp.int32),       # adm_row
+                    pltpu.VMEM(pk_i.shape, jnp.int32),    # pk_new
+                    pltpu.VMEM(dr_i.shape, jnp.int32)]    # dr_delta
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(steps,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scal, *in_arrays)
+
+    hits, evs = outs[0], outs[1]
+    keys_f, fpr_f, vals_f, ma_f, mb_f = outs[2:7]
+    unpad = lambda a: a[:, :ways]  # noqa: E731
+    state_out = (unpad(keys_f).astype(jnp.uint32),
+                 unpad(fpr_f).astype(jnp.uint32),
+                 unpad(vals_f), unpad(ma_f), unpad(mb_f),
+                 clock + jnp.int32(2 * batch * steps))
+    if tl is not None:
+        sketch_out = (outs[7].astype(jnp.uint32), outs[8].astype(jnp.uint32),
+                      outs[9][0])
+    else:
+        sketch_out = None
+    return hits, evs, state_out, sketch_out
+
+
+def replay_resident(
+    keys, fpr, vals, ma, mb, clock,
+    chunks, enabled,
+    *,
+    policy: int,
+    ways: int,
+    num_sets: int,
+    seed: int,
+    tinylfu=None,                 # TinyLFUConfig | None
+    sketch=None,                  # TinyLFUState | None (fresh when None)
+    interpret: bool = True,
+):
+    """Run the replay megakernel: ONE launch for the whole chunked trace.
+
+    Returns (hits int32 [steps], evs int32 [steps],
+    (keys, fprint, vals, meta_a, meta_b, clock) final state lanes,
+    TinyLFUState' | None).
+    """
+    from repro.core import admission
+
+    steps, batch = chunks.shape
+    if tinylfu is not None:
+        if sketch is None:
+            sketch = admission.make_sketch(tinylfu)
+        pk, dr, adds = (sketch.packed, sketch.door[None, :],
+                        sketch.additions)
+        tl = (tinylfu.width, tinylfu.door_bits, tinylfu.sample)
+        # pad sketch rows to the 128-lane register width
+        wp = -(-pk.shape[1] // LANES) * LANES
+        if wp != pk.shape[1]:
+            pk = jnp.concatenate(
+                [pk, jnp.zeros((pk.shape[0], wp - pk.shape[1]), pk.dtype)],
+                axis=1)
+        dpad = -(-dr.shape[1] // LANES) * LANES
+        dw = dr.shape[1]
+        if dpad != dw:
+            dr = jnp.concatenate(
+                [dr, jnp.zeros((1, dpad - dw), dr.dtype)], axis=1)
+    else:
+        tl = None
+        pk = jnp.zeros((4, LANES), jnp.uint32)
+        dr = jnp.zeros((1, LANES), jnp.uint32)
+        adds = jnp.zeros((), jnp.int32)
+        dw = 0
+
+    _TRACE_COUNTS[("launch", int(policy), num_sets, ways, steps, batch,
+                   tinylfu is not None)] += 1
+    hits, evs, state_out, sketch_out = _replay_resident_jit(
+        keys, fpr, vals, ma, mb, clock, chunks, enabled, pk, dr, adds,
+        policy=int(policy), ways=ways, num_sets=num_sets, seed=seed,
+        tl=tl, interpret=interpret)
+
+    if tinylfu is not None:
+        pk_f, dr_f, adds_f = sketch_out
+        sketch_out = admission.TinyLFUState(
+            packed=pk_f[:, :tinylfu.width // 8],
+            door=dr_f[0, :dw], additions=adds_f)
+    return hits, evs, state_out, sketch_out

@@ -13,19 +13,24 @@ POLICIES = [Policy.LRU, Policy.LFU, Policy.FIFO, Policy.RANDOM, Policy.HYPERBOLI
 
 
 def _mk_cache(rng, s, ways, kp=128, fill=0.7):
+    from repro.core import hashing
     keys = np.full((s, kp), -1, np.int32)
     occ = rng.random((s, ways)) < fill
     vals = rng.integers(0, 5000, (s, ways)).astype(np.int32)
     keys[:, :ways] = np.where(occ, vals, -1)
+    # consistent fingerprints (what every live state carries); the probes
+    # pre-filter on them and confirm on the full key
+    fpr = np.asarray(hashing.fingerprint(
+        jnp.asarray(keys).astype(jnp.uint32))).astype(np.int32)
     ma = rng.integers(0, 100, (s, kp)).astype(np.int32)
     mb = rng.integers(0, 50, (s, kp)).astype(np.int32)
-    return keys, ma, mb
+    return keys, fpr, ma, mb
 
 
 @pytest.mark.parametrize("policy", POLICIES)
 @pytest.mark.parametrize("s,ways,b", [(16, 4, 16), (64, 8, 32), (128, 16, 64)])
 def test_kway_probe_sweep(policy, s, ways, b, rng):
-    keys, ma, mb = _mk_cache(rng, s, ways)
+    keys, fpr, ma, mb = _mk_cache(rng, s, ways)
     sets = rng.integers(0, s, b).astype(np.int32)
     qk = np.where(
         rng.random(b) < 0.5,
@@ -33,7 +38,7 @@ def test_kway_probe_sweep(policy, s, ways, b, rng):
         rng.integers(0, 5000, b),
     ).astype(np.int32)
     times = (np.arange(b) + 7).astype(np.int32)
-    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    args = [jnp.asarray(a) for a in (keys, fpr, ma, mb, sets, qk, times)]
     out_k = kway_probe(*args, policy=int(policy), ways=ways, qt=8)
     out_r = ref.kway_probe_ref(*args, policy=int(policy), ways=ways)
     for name, a, b_ in zip(["hit", "way", "vway", "vkey"], out_k, out_r):
@@ -45,13 +50,13 @@ def test_kway_probe_full_order(policy, rng):
     """full_order=True: the kernel's iterative min-extraction equals the
     oracle's stable argsort, way for way, over the first `ways` entries."""
     s, ways, b = 32, 8, 24
-    keys, ma, mb = _mk_cache(rng, s, ways)
+    keys, fpr, ma, mb = _mk_cache(rng, s, ways)
     sets = rng.integers(0, s, b).astype(np.int32)
     qk = rng.integers(0, 5000, b).astype(np.int32)
     # times > meta_b everywhere: a real cache never has an insert time in the
     # future (HYPERBOLIC ages must stay positive, as in live states)
     times = (np.arange(b) + 60).astype(np.int32)
-    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    args = [jnp.asarray(a) for a in (keys, fpr, ma, mb, sets, qk, times)]
     out_k = kway_probe(*args, policy=int(policy), ways=ways, qt=8,
                        full_order=True)
     out_r = ref.kway_probe_ref(*args, policy=int(policy), ways=ways,
@@ -72,7 +77,7 @@ def test_kway_probe_need_victims_false(policy, rng):
     """The read-path variant skips victim selection and returns exactly the
     (hit, way) of the full probe — kernel and oracle alike."""
     s, ways, b = 32, 8, 24
-    keys, ma, mb = _mk_cache(rng, s, ways)
+    keys, fpr, ma, mb = _mk_cache(rng, s, ways)
     sets = rng.integers(0, s, b).astype(np.int32)
     qk = np.where(
         rng.random(b) < 0.5,
@@ -80,7 +85,7 @@ def test_kway_probe_need_victims_false(policy, rng):
         rng.integers(0, 5000, b),
     ).astype(np.int32)
     times = (np.arange(b) + 7).astype(np.int32)
-    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, times)]
+    args = [jnp.asarray(a) for a in (keys, fpr, ma, mb, sets, qk, times)]
     out_lean = kway_probe(*args, policy=int(policy), ways=ways, qt=8,
                           need_victims=False)
     out_full = kway_probe(*args, policy=int(policy), ways=ways, qt=8)
@@ -103,7 +108,7 @@ def test_kway_fused_probe_sweep(policy, rng):
     from repro.kernels.kway_probe import kway_fused_probe
 
     s, ways, b = 32, 8, 24
-    keys, ma, mb = _mk_cache(rng, s, ways)
+    keys, fpr, ma, mb = _mk_cache(rng, s, ways)
     sets = rng.integers(0, s, b).astype(np.int32)
     qk = np.where(
         rng.random(b) < 0.5,
@@ -114,7 +119,7 @@ def test_kway_fused_probe_sweep(policy, rng):
     tg = (np.arange(b) + 60).astype(np.int32)
     tp = tg + b
     en = (rng.random(b) < 0.8).astype(np.int32)
-    args = [jnp.asarray(a) for a in (keys, ma, mb, sets, qk, tg, tp, en)]
+    args = [jnp.asarray(a) for a in (keys, fpr, ma, mb, sets, qk, tg, tp, en)]
     out_k = kway_fused_probe(*args, policy=int(policy), ways=ways, qt=8)
     out_r = ref.kway_fused_probe_ref(*args, policy=int(policy), ways=ways)
     np.testing.assert_array_equal(np.asarray(out_k[0]), np.asarray(out_r[0]),
@@ -133,7 +138,7 @@ def test_kway_probe_empty_cache(rng):
     qk = np.arange(8, dtype=np.int32)
     t = np.arange(8, dtype=np.int32)
     hit, way, vway, vkey = kway_probe(
-        *[jnp.asarray(a) for a in (keys, zeros, zeros, sets, qk, t)],
+        *[jnp.asarray(a) for a in (keys, zeros, zeros, zeros, sets, qk, t)],
         policy=int(Policy.LRU), ways=8, qt=8)
     assert not np.asarray(hit).any()
     assert (np.asarray(vway) == 0).all()  # first empty way
