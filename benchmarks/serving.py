@@ -1,6 +1,22 @@
-"""End-to-end serving benchmark — thin shim over
-``repro.eval.figures.serving`` (prefix-cache effect on a shared-prefix
-request mix)."""
+"""End-to-end serving benchmarks.
+
+Two modes:
+
+  * default — thin shim over ``repro.eval.figures.serving`` (prefix-cache
+    effect on a shared-prefix request mix), CSV to stdout;
+  * ``--serving-compare`` — the device-resident jitted serving tick vs the
+    host-loop engine (``figures.serving_engine``): req/s + tok/s percentile
+    rows and a BENCH artifact, plus an ALWAYS-ON equality gate — the jitted
+    engine must emit token-for-token identical generations with an identical
+    prefix hit ratio, or the process exits 3 (same contract as
+    ``benchmarks.throughput --resident-compare``).  The CI perf-smoke mode.
+
+The committed quick baseline lives at
+``benchmarks/baselines/BENCH_serving_engine_quick.json``.
+"""
+import argparse
+import sys
+
 from benchmarks.common import emit
 from repro.eval import figures
 
@@ -12,5 +28,86 @@ def run(requests=12, prefix_len=48):
         emit("serving", r["id"], r["value"])
 
 
-if __name__ == "__main__":
+def serving_parity_gate(records):
+    """(checked, breaches) over the figure's own parity rows.
+
+    Token equality and hit-ratio identity are bit-contracts (tol 0): the
+    two engines run the same unified prefix transaction and the same model
+    ops, so ANY divergence is a semantics bug, never noise.
+    """
+    checked, breaches = 0, []
+    for r in records:
+        if r["metric"] == "tokens_equal":
+            checked += 1
+            if r["value"] != 1.0:
+                breaches.append(
+                    f"{r['id']}: jitted engine emitted different tokens "
+                    "than the host-loop oracle")
+        elif r["metric"] == "prefix_hit_ratio" and "scan_value" in r:
+            checked += 1
+            if r["value"] != r["scan_value"]:
+                breaches.append(
+                    f"{r['id']}: jitted hit ratio {r['value']} != host-loop "
+                    f"{r['scan_value']}")
+    if checked == 0:
+        breaches.append("no parity records found — figure id scheme drifted,"
+                        " the gate is a no-op")
+    return checked, breaches
+
+
+def _serving_compare(args) -> int:
+    from benchmarks.throughput import _run_gate
+    from repro.eval import artifacts
+
+    spec, records, skipped = figures.serving_engine(
+        quick=args.quick,
+        progress=None if args.quiet else
+        (lambda m: print(f"  [serving_engine] {m}", flush=True)))
+    art = artifacts.make_artifact("serving_engine", spec, records, skipped)
+    out = args.out or "BENCH_serving_engine.json"
+    artifacts.write_artifact(out, art)
+
+    by_id = {r["id"]: r for r in records}
+    print(f"\njitted serving tick vs host-loop engine "
+          f"({spec['requests']} requests, max_new={spec['max_new']}; "
+          "p50 steady-state):")
+    print(f"{'slots':<6} {'hostloop req/s':>14} {'jitted req/s':>13} "
+          f"{'speedup':>8} {'jitted tok/s':>13}")
+    for s in spec["slots"]:
+        host = by_id[f"engine-hostloop-slots{s}/req_per_s"]
+        jit = by_id[f"engine-jitted-slots{s}/req_per_s"]
+        speed = by_id[f"engine-jitted-speedup-slots{s}"]
+        print(f"{s:<6} {host['value']:>14.1f} {jit['value']:>13.1f} "
+              f"{speed['value']:>7.2f}x {jit['tok_per_s']:>13.1f}")
+    print(f"\n{len(records)} records -> {out}")
+
+    # the parity gate is always on: the speedup rows are only meaningful if
+    # the jitted tick is semantically indistinguishable from the oracle
+    checked, breaches = serving_parity_gate(records)
+    return _run_gate("jitted-vs-hostloop serving parity", "host-loop engine",
+                     checked, breaches)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.serving",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--serving-compare", action="store_true",
+                    help="jitted-tick vs host-loop comparison + BENCH "
+                         "artifact; gates token/hit-ratio parity (the CI "
+                         "serving perf-smoke mode)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path for --serving-compare "
+                         "(default BENCH_serving_engine.json)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    if args.serving_compare:
+        return _serving_compare(args)
     run()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -106,19 +106,30 @@ class CacheBackend:
 
     # -- derived -----------------------------------------------------------
     def access_two_phase(self, state, qkeys, qvals, admit_on_miss=None,
-                         enabled=None):
+                         enabled=None, *, slot_value: bool = False):
         """The unfused get-then-put-on-miss composition — two probes, two
         apply passes.  Kept on every backend as the differential oracle for
-        the fused ``access`` (tests assert bit-identity)."""
+        the fused ``access`` (tests assert bit-identity).
+
+        ``slot_value`` is the cache-as-allocator mode: the put phase stores
+        slot ids as payload and ``vals`` returns, per lane, the page/slot id
+        the key resides in (hit or fresh insert) or -1 where it did not
+        land — the serving engine's one-call prefix-chain transaction."""
         state, hit, vals = self.get(state, qkeys, enabled=enabled)
         en = (~hit) if enabled is None else (enabled & ~hit)
-        state, ek, ev, _, _ = self.put(
-            state, qkeys, qvals, admit=admit_on_miss, enabled=en
+        state, ek, ev, ss, sw = self.put(
+            state, qkeys, qvals, admit=admit_on_miss, enabled=en,
+            slot_value=slot_value,
         )
-        vals = jnp.where(hit, vals, qvals)
+        if slot_value:
+            slot_id = ss * jnp.int32(self.cfg.ways) + sw
+            vals = jnp.where(hit, vals, jnp.where(ss >= 0, slot_id, -1))
+        else:
+            vals = jnp.where(hit, vals, qvals)
         return state, hit, vals, ek, ev
 
-    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None,
+               *, slot_value: bool = False):
         """-> (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B])
 
         Backends with a fused single-probe path override this; the default
@@ -127,7 +138,7 @@ class CacheBackend:
         """
         return self.access_two_phase(state, qkeys, qvals,
                                      admit_on_miss=admit_on_miss,
-                                     enabled=enabled)
+                                     enabled=enabled, slot_value=slot_value)
 
     def replay(self, state, chunks, enabled, tinylfu=None, sketch=None):
         """Replay a whole chunked trace: ``chunks`` uint32 [steps, B] and
@@ -189,19 +200,22 @@ class JnpBackend(CacheBackend):
         return kway.put(self.cfg, state, qkeys, qvals, admit=admit,
                         enabled=enabled, slot_value=slot_value)
 
-    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None,
+               *, slot_value: bool = False):
         # fused single-probe path (kway.apply_access); bit-identical to
         # access_two_phase
         return kway.access(self.cfg, state, qkeys, qvals,
-                           admit_on_miss=admit_on_miss, enabled=enabled)
+                           admit_on_miss=admit_on_miss, enabled=enabled,
+                           slot_value=slot_value)
 
     def access_donated(self, state, qkeys, qvals, admit_on_miss=None,
-                       enabled=None):
+                       enabled=None, *, slot_value: bool = False):
         """Fused access with the ``state`` buffers donated to XLA —
         in-place update of the 5 S×k lanes.  The caller must rebind and
         never reuse the input state."""
         return kway.access_donated(self.cfg, state, qkeys, qvals,
-                                   admit_on_miss, enabled)
+                                   admit_on_miss, enabled,
+                                   slot_value=slot_value)
 
     def peek_victims(self, state, qkeys):
         return kway.peek_victims(self.cfg, state, qkeys)
@@ -235,7 +249,8 @@ class PallasBackend(CacheBackend):
             hit = hit & enabled
         return kway.apply_get(self.cfg, state, sets, hit, way)
 
-    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None):
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None,
+               *, slot_value: bool = False):
         # ONE kernel launch (fused probe + victim order on hit-updated
         # metadata) + the shared fused apply — bit-identical to the
         # two-launch access_two_phase path
@@ -244,7 +259,7 @@ class PallasBackend(CacheBackend):
             self.cfg, state, jnp.asarray(qkeys, jnp.uint32), enabled)
         return kway.apply_access(
             self.cfg, state, qk, qvals, sets, hit_raw, way,
-            admit_on_miss, enabled, order=order)
+            admit_on_miss, enabled, order=order, slot_value=slot_value)
 
     def put(self, state, qkeys, qvals, admit=None, enabled=None, *,
             slot_value: bool = False):

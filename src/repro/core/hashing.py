@@ -8,10 +8,18 @@ balls-into-bins analysis of Theorem 4.1 applies.  We use the murmur3/xxhash
 same construction xxHash's avalanche step uses.
 
 All functions operate on ``uint32`` arrays elementwise and are jit/vmap safe.
+
+This module is also the single source of truth for the serving engine's
+*prefix-chain block hash* (content addressing of full KV pages):
+``prefix_block_hashes`` is the host/numpy form, ``prefix_block_hashes_jnp``
+the traced form usable inside a jitted serving tick.  Both produce identical
+uint32 values (pinned by tests/test_serve_engine.py).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Odd multiplicative constants (murmur3 fmix32 / xxhash primes).
 _C1 = jnp.uint32(0x85EBCA6B)
@@ -52,6 +60,74 @@ def fingerprint(keys: jnp.ndarray, seed: int = 0xF19E) -> jnp.ndarray:
     """Short fingerprint used by the SoA (KW-WFSC) layout to pre-filter the
     set scan without touching the full key record."""
     return hash_u32(keys, seed) & jnp.uint32(0xFFFF)
+
+
+# ---------------------------------------------------------------------------
+# prefix-chain block hashing (serve/engine.py content addressing)
+# ---------------------------------------------------------------------------
+
+#: FNV-1a fold constants for the per-block digest.
+_FNV_OFFSET = 2166136261
+_FNV_PRIME = 16777619
+#: Position salt multiplier (golden-ratio constant == xxhash PRIME32_1).
+_GOLDEN = 0x9E3779B1
+
+
+def _fmix32_np(x: np.ndarray) -> np.ndarray:
+    """murmur3 finalizer — numpy port of ``_fmix32`` (bit-identical)."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def prefix_block_hashes(tokens: np.ndarray, page: int) -> np.ndarray:
+    """Rolling prefix-chain hash per full block (content addressing).
+
+    block_hash[i] covers tokens[0 : (i+1)*page] — a block only matches when
+    its entire prefix matches, so a page hit guarantees identical KV.
+
+    Vectorized: an FNV-1a fold over each block's tokens runs across all
+    blocks at once (``page`` numpy steps instead of one interpreted step per
+    prompt token), each block digest is avalanche-mixed with its position,
+    and the prefix chain is a cumulative XOR of the position-salted digests.
+    The content-addressing contract — same-prefix ⇒ same-hash,
+    change-block-i ⇒ chain differs from i on — is what matters; hashes are
+    ephemeral in-memory keys, never persisted.  O(page + n) numpy ops.
+    """
+    n = len(tokens) // page
+    if n == 0:
+        return np.empty(0, np.uint32)
+    blocks = np.asarray(tokens[: n * page], dtype=np.uint32).reshape(n, page)
+    h = np.full(n, np.uint32(_FNV_OFFSET), np.uint32)
+    with np.errstate(over="ignore"):
+        for j in range(page):                # page steps, vectorized over n
+            h = (h ^ blocks[:, j]) * np.uint32(_FNV_PRIME)
+        salt = np.arange(1, n + 1, dtype=np.uint32) * np.uint32(_GOLDEN)
+        out = np.bitwise_xor.accumulate(_fmix32_np(h ^ salt)).astype(np.uint32)
+    out[out == np.uint32(0xFFFFFFFF)] = np.uint32(1)  # avoid EMPTY_KEY
+    return out
+
+
+def prefix_block_hashes_jnp(tokens: jnp.ndarray, page: int) -> jnp.ndarray:
+    """Traced twin of ``prefix_block_hashes`` for fixed-width token lanes.
+
+    ``tokens`` int32 [n*page] (a padded prompt lane); returns uint32 [n]
+    chain hashes over ALL n blocks.  The first ``len(prompt) // page``
+    entries are bit-identical to the numpy form (the chain is a prefix
+    scan, so hashes over padding garbage never contaminate real blocks);
+    callers mask the rest with their ``valid`` lane mask.
+    """
+    n = tokens.shape[-1] // page
+    blocks = tokens[..., : n * page].astype(jnp.uint32).reshape(n, page)
+    h = jnp.full((n,), jnp.uint32(_FNV_OFFSET))
+    for j in range(page):                    # page unrolled vector steps
+        h = (h ^ blocks[:, j]) * jnp.uint32(_FNV_PRIME)
+    salt = jnp.arange(1, n + 1, dtype=jnp.uint32) * jnp.uint32(_GOLDEN)
+    out = jax.lax.associative_scan(jnp.bitwise_xor, _fmix32(h ^ salt))
+    return jnp.where(out == EMPTY_KEY, jnp.uint32(1), out)
 
 
 def sanitize_keys(keys: jnp.ndarray) -> jnp.ndarray:

@@ -421,7 +421,7 @@ def put(
     )
 
 
-@partial(jax.jit, static_argnums=0)
+@partial(jax.jit, static_argnums=0, static_argnames=("slot_value",))
 def apply_access(
     cfg: KWayConfig,
     state: KWayState,
@@ -434,6 +434,8 @@ def apply_access(
     enabled: Optional[jnp.ndarray] = None,
     order: Optional[jnp.ndarray] = None,
     set_keys: Optional[jnp.ndarray] = None,
+    *,
+    slot_value: bool = False,
 ):
     """Fused one-pass apply for ``access`` — one probe feeds both phases.
 
@@ -456,6 +458,15 @@ def apply_access(
     policy, and is the identity for FIFO/RANDOM), and the insert phase is
     one packed scatter pass — a single (set, way) index pair shared by all
     five state lanes.
+
+    ``slot_value`` is the cache-as-allocator mode (the paged-KV engine's
+    page-id convention): inserts store ``set * ways + way`` — the landing
+    slot id — as the payload, and ``vals`` returns the hit lane's stored
+    slot id, the insert lane's fresh slot id, or -1 where the key did not
+    land (not admitted / duplicate / per-set overflow / disabled).  One
+    fused call answers "which page holds this block, allocating if absent"
+    for a whole batch — bit-identical to the get + slot-returning-put
+    composition (``CacheBackend.access_two_phase`` with ``slot_value``).
 
     Returns (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B]).
     """
@@ -499,6 +510,13 @@ def apply_access(
     evicted_keys = state.keys[sets, way_victim]
     evicted_valid = is_insert & (evicted_keys != EMPTY_KEY)
 
+    if slot_value:
+        slot_id = (sets * jnp.int32(cfg.ways) + way_victim).astype(jnp.int32)
+        qvals = slot_id                      # stored payload for inserts
+        vals_out = jnp.where(
+            hit, state.vals[sets, way],
+            jnp.where(is_insert, slot_id, jnp.int32(-1)))
+
     ia, ib = on_insert(cfg.policy, times_put, (b,))
 
     # One packed scatter pass: the (set, way) index pair is computed once and
@@ -524,16 +542,20 @@ def _access_fused(
     qvals: jnp.ndarray,
     admit_on_miss: Optional[jnp.ndarray] = None,
     enabled: Optional[jnp.ndarray] = None,
+    *,
+    slot_value: bool = False,
 ):
     qkeys, sets, set_keys, hit_raw, way = _probe(cfg, state, qkeys)
     return apply_access(cfg, state, qkeys, qvals, sets, hit_raw, way,
-                        admit_on_miss, enabled, set_keys=set_keys)
+                        admit_on_miss, enabled, set_keys=set_keys,
+                        slot_value=slot_value)
 
 
 #: The canonical cache loop: get; on miss, put (paper §5.1.2 methodology) —
 #: fused single-probe form.  Returns (state', hit[B], vals[B],
 #: evicted_keys[B], evicted_valid[B]); bit-identical to ``access_two_phase``.
-access = partial(jax.jit, static_argnums=0)(_access_fused)
+access = partial(jax.jit, static_argnums=0,
+                 static_argnames=("slot_value",))(_access_fused)
 
 #: Buffer-donating variant of ``access``: the input ``state`` buffers are
 #: donated to XLA so ``KWayState`` is updated in place (5 S×k arrays are not
@@ -541,10 +563,11 @@ access = partial(jax.jit, static_argnums=0)(_access_fused)
 #: Backends without donation support (CPU on older jaxlibs) fall back to a
 #: copy with a one-time warning.
 access_donated = partial(
-    jax.jit, static_argnums=0, donate_argnums=1)(_access_fused)
+    jax.jit, static_argnums=0, donate_argnums=1,
+    static_argnames=("slot_value",))(_access_fused)
 
 
-@partial(jax.jit, static_argnums=0)
+@partial(jax.jit, static_argnums=0, static_argnames=("slot_value",))
 def access_two_phase(
     cfg: KWayConfig,
     state: KWayState,
@@ -552,17 +575,26 @@ def access_two_phase(
     qvals: jnp.ndarray,
     admit_on_miss: Optional[jnp.ndarray] = None,
     enabled: Optional[jnp.ndarray] = None,
+    *,
+    slot_value: bool = False,
 ):
     """The unfused get-then-put composition — two probes, two apply passes.
 
     Kept as the differential oracle for ``access``: tests assert the fused
-    path is bit-identical to this one (hits, evictions, final state).
+    path is bit-identical to this one (hits, evictions, final state) — with
+    ``slot_value``, also the returned page/slot ids.
     """
     state, hit, vals = get(cfg, state, qkeys, enabled=enabled)
     admit = admit_on_miss if admit_on_miss is not None else None
     en = (~hit) if enabled is None else (enabled & ~hit)
-    state, ek, ev, _, _ = put(cfg, state, qkeys, qvals, admit=admit, enabled=en)
-    vals = jnp.where(hit, vals, qvals)
+    state, ek, ev, ss, sw = put(cfg, state, qkeys, qvals, admit=admit,
+                                enabled=en, slot_value=slot_value)
+    if slot_value:
+        landed = ss >= 0
+        slot_id = ss * jnp.int32(cfg.ways) + sw
+        vals = jnp.where(hit, vals, jnp.where(landed, slot_id, -1))
+    else:
+        vals = jnp.where(hit, vals, qvals)
     return state, hit, vals, ek, ev
 
 

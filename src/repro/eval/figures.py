@@ -15,6 +15,8 @@ Each function runs one figure family's sweep and returns
     stream; includes the single-scan no-host-sync replay rows.
   * ``synthetic_mix``              — Figs. 27-30: fixed hit-rate workloads.
   * ``serving``                    — end-to-end prefix-cache serving rows.
+  * ``serving_engine``             — host-loop vs device-resident jitted
+    serving tick: req/s + tok/s percentiles and token/hit-ratio parity.
 
 Hit-ratio figures run on the stacked sweep runner (one compile per cache
 shape); throughput figures are wall-clock timed per configuration and are
@@ -569,6 +571,108 @@ def serving(quick: bool = False, progress=None, requests=None, prefix_len=48):
     return spec, records, []
 
 
+def serving_engine(quick: bool = False, progress=None, slots=None,
+                   requests=None, max_new=4, decode_block=4):
+    """Device-resident serving tick vs host-loop engine (DESIGN.md §11).
+
+    Rows ``engine-{hostloop,jitted}-slots{S}``: p50/p90 requests/s and
+    sustained tok/s over a shared-prefix continuous-batching workload, using
+    the steady-state run-once protocol of ``time_replay_percentiles`` (each
+    sample builds a FRESH engine and serves the whole request mix — the
+    hostloop's per-request dispatches and the jitted engine's one-dispatch
+    ticks are both inside the timed window; compiles are in the discarded
+    warmup).  Short decodes (``max_new=4``) keep the workload
+    admission-heavy — the regime where per-tick host round-trips dominate
+    and the one-traced-program tick pays off.  Both engines run the same
+    ``decode_block`` burst schedule (multi-step scheduling), so the speedup
+    isolates dispatch/sync economics, not a schedule difference.
+
+    Plus parity rows (comparable, tol 0): emitted tokens equal and identical
+    prefix hit ratio between the two engines — the speedup headline is only
+    meaningful if the jitted tick is indistinguishable semantically.
+    """
+    import jax
+
+    from repro import configs
+    from repro.eval.timing import time_replay_percentiles
+    from repro.models import lm
+    from repro.serve import Engine, EngineConfig
+
+    if slots is None:
+        slots = (32,) if quick else (8, 32)
+    if requests is None:
+        requests = 128 if quick else 192
+
+    cfg = configs.get("deepseek-7b").smoke
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    shared = rng.integers(2, cfg.vocab_size - 1, 48)
+    prompts = [np.concatenate([shared,
+                               rng.integers(2, cfg.vocab_size - 1,
+                                            int(rng.integers(4, 16)))])
+               for _ in range(requests)]
+
+    def engine(s, jitted):
+        return Engine(cfg, params, EngineConfig(
+            page=8, num_sets=64, ways=8, max_batch=s, max_seq=256,
+            private_pages=512, max_prompt=128, decode_block=decode_block,
+            jitted=jitted))
+
+    def serve_all(s, jitted):
+        eng = engine(s, jitted)
+        for pr in prompts:
+            eng.submit(pr, max_new=max_new)
+        fin = eng.run()
+        return eng, fin
+
+    records = []
+    for s in slots:
+        stats = {}
+        toks = {}
+        gen = {}
+        for jitted in (False, True):
+            mode = "jitted" if jitted else "hostloop"
+            if progress:
+                progress(f"engine-{mode}-slots{s}")
+            eng, fin = serve_all(s, jitted)      # parity + token count run
+            gen[mode] = ({rid: list(r.generated) for rid, r in fin.items()},
+                         eng.hit_ratio())
+            toks[mode] = sum(len(r.generated) for r in fin.values())
+            stats[mode] = time_replay_percentiles(
+                lambda jitted=jitted: serve_all(s, jitted),
+                iters=3 if quick else 5, warmup=1)
+            records.append({
+                "id": f"engine-{mode}-slots{s}/req_per_s",
+                "impl": f"engine-{mode}", "slots": s,
+                "requests": requests, "max_new": max_new,
+                "metric": "req_per_s",
+                "value": round(requests / stats[mode]["p50"], 1),
+                "p90_req_s": round(requests / stats[mode]["p90"], 1),
+                "tok_per_s": round(toks[mode] / stats[mode]["p50"], 1),
+                "comparable": False})
+        records.append({
+            "id": f"engine-jitted-speedup-slots{s}",
+            "slots": s, "metric": "speedup_x",
+            "value": round(stats["hostloop"]["p50"] / stats["jitted"]["p50"],
+                           2),
+            "comparable": False})
+        records.append({
+            "id": f"engine-parity-slots{s}/tokens_equal",
+            "slots": s, "metric": "tokens_equal",
+            "value": float(gen["hostloop"][0] == gen["jitted"][0]),
+            "comparable": True, "tol": 0.0})
+        records.append({
+            "id": f"engine-parity-slots{s}/hit_ratio",
+            "slots": s, "metric": "prefix_hit_ratio",
+            "value": round(gen["jitted"][1], 6),
+            "scan_value": round(gen["hostloop"][1], 6),
+            "comparable": True, "tol": 0.0})
+    spec = {"quick": quick, "slots": list(slots), "requests": requests,
+            "max_new": max_new, "decode_block": decode_block,
+            "prefix_len": 48, "model": "deepseek-7b/smoke"}
+    return spec, records, []
+
+
 #: CLI name -> (function, canonical figure name)
 FIGURES = {
     "hit_ratio": (hit_ratio_vs_associativity, "hit_ratio_vs_associativity"),
@@ -579,4 +683,5 @@ FIGURES = {
     "throughput_shards": (throughput_vs_shards, "throughput_vs_shards"),
     "synthetic_mix": (synthetic_mix, "synthetic_mix"),
     "serving": (serving, "serving"),
+    "serving_engine": (serving_engine, "serving_engine"),
 }

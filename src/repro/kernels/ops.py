@@ -230,9 +230,19 @@ def attend_paged(
     *,
     scale: float | None = None,
     softcap: float = 0.0,
-    use_kernel: bool = True,
+    use_kernel: bool | None = None,
 ) -> jnp.ndarray:
-    """Paged GQA decode attention (see kernels/paged_attention.py)."""
+    """Paged GQA decode attention (see kernels/paged_attention.py).
+
+    ``use_kernel=None`` picks per accelerator: the Pallas kernel on TPU, the
+    vectorized jnp reference elsewhere.  Off-TPU the kernel only runs in
+    interpret mode — a per-grid-point Python loop that is a correctness
+    oracle, not an execution path (a [32, 4, 32] decode grid is ~4k
+    interpreted kernel evals per layer); the reference is a single fused XLA
+    computation there.  Pass an explicit bool to force either path.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
     if use_kernel:
         return _pa.paged_attention(
             q, k_pages, v_pages, page_table, seq_lens,

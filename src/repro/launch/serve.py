@@ -1,10 +1,13 @@
 """Serving driver: batched requests through the K-way paged engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --smoke \
-        --requests 16 --policy lru [--tinylfu]
+        --requests 16 --policy lru [--tinylfu] [--jitted] [--decode-block 4]
 
 Prints throughput, prefix-cache hit ratio and page-pool stats — the serving
-analogue of the paper's §5.3 trace runs.
+analogue of the paper's §5.3 trace runs.  ``--jitted`` runs the
+device-resident one-traced-program serving tick (DESIGN.md §11) instead of
+the host loop; ``--decode-block`` sets the multi-step decode burst both
+modes schedule.
 """
 from __future__ import annotations
 
@@ -34,6 +37,13 @@ def main(argv=None):
                     help="prefix-cache backend (DESIGN.md §3): jnp vector "
                          "ops, the Pallas probe kernel, or the Python oracle")
     ap.add_argument("--tinylfu", action="store_true")
+    ap.add_argument("--jitted", action="store_true",
+                    help="device-resident serving tick: whole step is ONE "
+                         "traced program, one host sync per tick "
+                         "(DESIGN.md §11; requires a traceable backend)")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="decode steps per engine tick (both modes run the "
+                         "same burst schedule)")
     ap.add_argument("--shared-prefix", type=int, default=48,
                     help="tokens shared by all prompts (prefix-cache fodder)")
     ap.add_argument("--seed", type=int, default=0)
@@ -49,7 +59,8 @@ def main(argv=None):
     eng = Engine(cfg, params, EngineConfig(
         page=8, num_sets=32, ways=8, policy=Policy[args.policy.upper()],
         tinylfu=args.tinylfu, max_batch=8, max_seq=256, private_pages=256,
-        backend=args.backend,
+        backend=args.backend, jitted=args.jitted,
+        decode_block=args.decode_block,
     ))
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(2, cfg.vocab_size - 1, args.shared_prefix)

@@ -1,0 +1,15 @@
+"""Paged-KV serving on a K-way set-associative prefix cache (DESIGN.md §11).
+
+Public surface: the host-loop/jitted :class:`Engine`, its
+:class:`EngineConfig`, and the jitted-tick compile counters
+(:func:`trace_counts` / :func:`reset_trace_counts`) that pin the ≤1-trace-
+per-shape compile economy.
+"""
+from repro.serve.engine import (  # noqa: F401
+    Engine,
+    EngineConfig,
+    Request,
+    ServeState,
+    reset_trace_counts,
+    trace_counts,
+)

@@ -2,7 +2,7 @@
 cache — the paper's technique as the page-residency manager of a paged KV
 cache.
 
-Design (DESIGN.md §2): the page pool is split into
+Design (DESIGN.md §2, §11): the page pool is split into
   * a **shared region** of exactly ``num_sets × ways`` pages, owned 1:1 by
     the K-way cache slots: cache value == page id.  A full prompt block
     (page_size tokens) keyed by its *prefix-chain hash* lives at most once;
@@ -10,21 +10,38 @@ Design (DESIGN.md §2): the page pool is split into
     decides residency, and evicting a key automatically frees its page —
     the paper's "dense, static memory, no pointers" argument applied to KV
     paging;
-  * a **private region** with a free list for decode-time pages (partial
-    blocks are not content-addressable until full).
+  * a **private region** for decode-time pages (partial blocks are not
+    content-addressable until full), tracked by a per-page owner lane.
 
-The engine is single-host (batched requests on one device — CPU here, one
-TPU chip in production; the multi-chip serve path is the dry-run's
-``decode_*`` cells).  Host-side bookkeeping is numpy; all tensor work is
-jitted (serve/paged_model.py; attention via the Pallas paged kernel).  The
-prefix cache runs on any CacheBackend (DESIGN.md §3) via
-``EngineConfig.backend``: "jnp" vector ops, "pallas" (the probe kernel as
-the residency hot loop), or "ref" (the sequential oracle, for differential
-tests).
+Two execution modes share one set of semantics (DESIGN.md §11):
+
+  * ``jitted=False`` — the host loop: python bookkeeping per request, one
+    jitted call per model op.  The differential oracle.
+  * ``jitted=True``  — the device-resident engine: one serving tick (admit
+    waiting requests into retired lanes → vectorized prefix-cache probe →
+    page allocation through the slot-returning cache access → batched paged
+    decode → sampling → retirement) is ONE traced program over a fixed
+    ``[max_slots]`` request-slot array (``ServeState``), stepped by a jitted
+    ``serve_step(params, state, batch) -> (state', emitted)`` with the state
+    donated.  The host shell only manages queues and token I/O; the single
+    ``device_get(emitted)`` is the one host round-trip per tick.
+
+Both modes drive the SAME fixed-width prefix-chain transaction — TinyLFU
+record → peek_victims → admit, then the slot-returning cache access over
+``max_prompt // page`` padded block lanes — so their emitted tokens, hit
+ratios and eviction counts are identical (pinned by tests and by
+``benchmarks/serving.py --serving-compare``).  The prefix cache runs on any
+CacheBackend (DESIGN.md §3) via ``EngineConfig.backend``; the jitted tick
+requires a traceable backend ("jnp" or "pallas") and an unsharded cache.
+
+``trace_counts()`` exposes per-shape compile counters for the jitted tick —
+the compile-economy contract (≤1 trace per engine shape) is a test.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+from collections import Counter
 from typing import Optional
 
 import jax
@@ -32,56 +49,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import admission
+from repro.core import admission, hashing
 from repro.core.backend import make_backend
+from repro.core.hashing import (  # noqa: F401  (re-export: engine API)
+    prefix_block_hashes,
+    prefix_block_hashes_jnp,
+)
 from repro.core.kway import KWayConfig
 from repro.core.policies import Policy
 from repro.serve import paged_model as pm
 
-_FNV_OFFSET = np.uint32(2166136261)
-_FNV_PRIME = np.uint32(16777619)
-_GOLDEN = np.uint32(0x9E3779B1)
+#: Compile counter for the jitted serving tick, keyed by engine shape —
+#: bumped inside the traced body, so a retrace (shape leak, cache miss)
+#: shows up as a count > 1.  Same pattern as eval/runner.py.
+_TRACE_COUNTS: Counter = Counter()
 
 
-def _fmix32(x: np.ndarray) -> np.ndarray:
-    """murmur3 finalizer (numpy port of core/hashing._fmix32)."""
-    x = x ^ (x >> np.uint32(16))
-    x = x * np.uint32(0x85EBCA6B)
-    x = x ^ (x >> np.uint32(13))
-    x = x * np.uint32(0xC2B2AE35)
-    x = x ^ (x >> np.uint32(16))
-    return x
+def trace_counts() -> dict:
+    """Snapshot of jitted-tick trace counts per engine shape."""
+    return dict(_TRACE_COUNTS)
 
 
-def prefix_block_hashes(tokens: np.ndarray, page: int) -> np.ndarray:
-    """Rolling prefix-chain hash per full block (content addressing).
-
-    block_hash[i] covers tokens[0 : (i+1)*page] — a block only matches when
-    its entire prefix matches, so a page hit guarantees identical KV.
-
-    Vectorized: an FNV-1a fold over each block's tokens runs across all
-    blocks at once (``page`` numpy steps instead of one interpreted step per
-    prompt token), each block digest is avalanche-mixed with its position,
-    and the prefix chain is a cumulative XOR of the position-salted digests.
-    The content-addressing contract is preserved — same-prefix ⇒ same-hash,
-    change-block-i ⇒ chain differs from i on — but the concrete hash VALUES
-    differ from the earlier token-serial rolling FNV (that recurrence is
-    inherently sequential and cannot be vectorized bit-exactly).  Hashes are
-    ephemeral in-memory keys, never persisted, so only the contract matters.
-    O(page + n) numpy ops instead of O(prompt_len) interpreter work per
-    prefill.
-    """
-    n = len(tokens) // page
-    if n == 0:
-        return np.empty(0, np.uint32)
-    blocks = np.asarray(tokens[: n * page], dtype=np.uint32).reshape(n, page)
-    h = np.full(n, _FNV_OFFSET, np.uint32)
-    for j in range(page):                    # page steps, vectorized over n
-        h = (h ^ blocks[:, j]) * _FNV_PRIME
-    salt = (np.arange(1, n + 1, dtype=np.uint32)) * _GOLDEN
-    out = np.bitwise_xor.accumulate(_fmix32(h ^ salt)).astype(np.uint32)
-    out[out == np.uint32(0xFFFFFFFF)] = np.uint32(1)  # avoid EMPTY_KEY
-    return out
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
 
 
 @dataclasses.dataclass
@@ -106,7 +96,7 @@ class EngineConfig:
     ways: int = 8
     policy: Policy = Policy.LRU
     tinylfu: bool = False
-    max_batch: int = 8
+    max_batch: int = 8                # request slots (the jitted tick's lane count)
     max_seq: int = 512
     private_pages: int = 256
     backend: str = "jnp"              # cache backend: "jnp" | "pallas" | "ref"
@@ -115,6 +105,359 @@ class EngineConfig:
     # slot ids stay global, so page bookkeeping is unchanged.  The ref
     # backend cannot be sharded (host Python).
     shards: int = 1
+    # True: run the whole serving tick as ONE traced program (ServeState +
+    # serve_step) — one dispatch and one host sync per tick.  Requires a
+    # traceable backend ("jnp"/"pallas") and shards == 1; the host loop
+    # (jitted=False) is the differential oracle.
+    jitted: bool = False
+    # Static prompt-width ceiling for the fixed-width prefix transaction and
+    # the padded prefill (0: max_seq).  Must be a multiple of ``page``;
+    # prompts longer than this are rejected at submit().
+    max_prompt: int = 0
+    # 0: greedy decode (argmax).  > 0: softmax sampling at this temperature,
+    # seeded from (sample_seed, decode_step) identically in both modes.  The
+    # prefill's first token is always argmax.
+    temperature: float = 0.0
+    sample_seed: int = 0
+    # Decode steps per engine tick (multi-step scheduling).  The jitted
+    # engine runs the whole burst inside ONE traced tick (one dispatch, one
+    # host sync per ``decode_block`` tokens); the host loop runs the same
+    # admit-then-N-decodes schedule so it stays an exact oracle — page
+    # allocation order, and thus out-of-page retirement, depends on the
+    # schedule, so both modes must share it.
+    decode_block: int = 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServeState:
+    """Device-resident serving state — the jitted tick's donated carry.
+
+    Slot lanes are indexed by the fixed ``[max_batch]`` request-slot array;
+    ``owner`` maps each private page to its owning slot (-1 = free); the
+    prefix cache (``kstate``), TinyLFU sketch and the stat counters ride in
+    the same pytree so one donated step updates everything in place.
+    """
+
+    kstate: object        # KWayState
+    sketch: object        # TinyLFUState | int32[] placeholder
+    pool_k: jnp.ndarray   # bf16 [L, KVH, P, page, D]
+    pool_v: jnp.ndarray
+    owner: jnp.ndarray    # int32 [private_pages] owning slot | -1
+    active: jnp.ndarray   # bool  [S]
+    rid: jnp.ndarray      # int32 [S]
+    pos: jnp.ndarray      # int32 [S] tokens materialized
+    n_gen: jnp.ndarray    # int32 [S] tokens emitted (prefill token included)
+    max_new: jnp.ndarray  # int32 [S]
+    last_tok: jnp.ndarray  # int32 [S]
+    n_pages: jnp.ndarray  # int32 [S]
+    page_tbl: jnp.ndarray  # int32 [S, PPS]
+    prefix_hits: jnp.ndarray     # int32 [] device stat counters
+    prefix_lookups: jnp.ndarray  # int32 []
+    evictions: jnp.ndarray       # int32 []
+    prefills: jnp.ndarray        # int32 []
+    decode_steps: jnp.ndarray    # int32 []
+
+
+def _sample_next(ecfg: EngineConfig, logits: jnp.ndarray,
+                 decode_step) -> jnp.ndarray:
+    """Next-token choice shared by both modes: greedy argmax, or seeded
+    categorical sampling keyed on the decode-step counter (identical key
+    sequence ⇒ identical tokens in host-loop and jitted engines)."""
+    if ecfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(ecfg.sample_seed),
+                             jnp.asarray(decode_step, jnp.int32))
+    return jax.random.categorical(
+        key, logits / jnp.float32(ecfg.temperature), axis=-1
+    ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the jitted serving tick
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _serve_step_fn(cfg: ModelConfig, ecfg: EngineConfig):
+    """Build (once per engine shape) the jitted one-tick program.
+
+    The lru_cache makes the compile economy structural: two engines with the
+    same (model, engine) configs share one traced program, and
+    ``trace_counts()`` proves it.
+    """
+    kcfg = KWayConfig(num_sets=ecfg.num_sets, ways=ecfg.ways,
+                      policy=ecfg.policy)
+    backend = make_backend(ecfg.backend, kcfg)
+    sketch_cfg = admission.for_capacity(kcfg.capacity) if ecfg.tinylfu else None
+    page = ecfg.page
+    n_slots = ecfg.max_batch
+    max_prompt = ecfg.max_prompt or ecfg.max_seq
+    pbw = max_prompt // page          # prefix-transaction block lanes
+    pps = ecfg.max_seq // page        # page-table row width
+    shared = kcfg.capacity
+    n_priv = ecfg.private_pages
+    total_pages = shared + n_priv
+    # one counter key per (model, engine) config — exactly the lru_cache key,
+    # so "shares a traced program" and "shares a counter" coincide
+    tkey = ("serve_step", cfg.name, ecfg)
+    tile = min(8, n_slots)            # prefill tile width (phase 3)
+
+    def step(params, st: ServeState, batch):
+        _TRACE_COUNTS[tkey] += 1
+        # ---- phase 1: admission transactions -----------------------------
+        # Waiting lane j -> j-th free slot, in order; a refused lane blocks
+        # the rest (the host loop's break-on-refusal back-off; refusal is
+        # checked AFTER the cache mutation, also like the host).  The scan
+        # carries ONLY the cache lanes + the page-owner vector: the multi-MB
+        # KV pools never enter the per-lane cond branches, and the model
+        # compute is hoisted into phase 3's tiled batched prefill.
+        order = jnp.argsort(st.active, stable=True).astype(jnp.int32)
+        n_free = jnp.sum(~st.active).astype(jnp.int32)
+
+        def admit_lane(carry, xs):
+            kstate, sketch, owner, blocked = carry
+            j, toks, length, avail = xs
+            slot = order[j]
+            do = avail & (j < n_free) & ~blocked
+
+            def run(args):
+                kstate, sketch, owner = args
+                # fixed-width prefix-chain transaction (same phase order as
+                # the host loop and CacheBackend.replay)
+                hashes = hashing.prefix_block_hashes_jnp(toks, page)
+                n_full = (length // page).astype(jnp.int32)
+                validb = jnp.arange(pbw, dtype=jnp.int32) < n_full
+                admit_mask = None
+                if sketch_cfg is not None:
+                    sketch = admission.record(sketch_cfg, sketch, hashes,
+                                              enabled=validb)
+                    vk, vv = backend.peek_victims(kstate, hashes)
+                    admit_mask = admission.admit(sketch_cfg, sketch, hashes,
+                                                 vk, vv)
+                # ONE fused slot-returning access answers "which page holds
+                # this block, allocating if absent" for the whole chain
+                kstate, hit, pages_blk, _, ev = backend.access(
+                    kstate, hashes, jnp.zeros(pbw, jnp.int32),
+                    admit_on_miss=admit_mask, enabled=validb,
+                    slot_value=True)
+                n_hit = jnp.sum(jnp.cumprod(hit.astype(jnp.int32)))
+                tail = length - n_full * page
+                unlanded = validb & (pages_blk < 0)
+                need = (jnp.sum(unlanded.astype(jnp.int32))
+                        + (tail > 0).astype(jnp.int32))
+                free_cnt = jnp.sum((owner < 0).astype(jnp.int32))
+                ok = free_cnt >= need + 2
+                # private pages for unlanded blocks + tail, lowest free
+                # indices first (page identity is engine-local; only counts
+                # are part of the differential contract).  The owner
+                # scatters are masked by ``ok``: a refused lane allocates
+                # nothing.
+                free_order = jnp.argsort(owner >= 0,
+                                         stable=True).astype(jnp.int32)
+                rank = jnp.cumsum(unlanded.astype(jnp.int32)) - 1
+                blk_idx = free_order[jnp.clip(rank, 0, n_priv - 1)]
+                pages2 = jnp.where(unlanded, shared + blk_idx, pages_blk)
+                n_unl = jnp.sum(unlanded.astype(jnp.int32))
+                tail_idx = free_order[jnp.clip(n_unl, 0, n_priv - 1)]
+                owner = owner.at[
+                    jnp.where(ok & unlanded, blk_idx, n_priv)
+                ].set(slot, mode="drop")
+                owner = owner.at[
+                    jnp.where(ok & (tail > 0), tail_idx, n_priv)
+                ].set(slot, mode="drop")
+                return ((kstate, sketch, owner),
+                        (jnp.bool_(True), ok, n_hit, n_full, tail,
+                         jnp.sum(ev.astype(jnp.int32)), pages2,
+                         shared + tail_idx))
+
+            def skip(args):
+                return (args, (jnp.bool_(False), jnp.bool_(False),
+                               jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                               jnp.int32(0), jnp.zeros(pbw, jnp.int32),
+                               jnp.int32(0)))
+
+            (kstate, sketch, owner), ys = jax.lax.cond(
+                do, run, skip, (kstate, sketch, owner))
+            blocked = blocked | (do & ~ys[1])
+            return (kstate, sketch, owner, blocked), ys
+
+        lanes = (jnp.arange(n_slots, dtype=jnp.int32), batch["tokens"],
+                 batch["length"], batch["avail"])
+        (kstate, sketch, owner, _), ys = jax.lax.scan(
+            admit_lane,
+            (st.kstate, st.sketch, st.owner, jnp.bool_(False)), lanes)
+        (attempted, admitted, pre_hits, pre_lookups, tail, ev_cnt,
+         pages2, tail_page) = ys
+        st = dataclasses.replace(
+            st, kstate=kstate, sketch=sketch, owner=owner,
+            prefix_lookups=st.prefix_lookups + jnp.sum(pre_lookups),
+            prefix_hits=st.prefix_hits + jnp.sum(pre_hits),
+            evictions=st.evictions + jnp.sum(ev_cnt),
+            prefills=st.prefills + jnp.sum(admitted.astype(jnp.int32)))
+
+        # ---- phase 2: lane activation (one vectorized scatter per field) --
+        safe_slot = jnp.where(admitted, order, n_slots)
+        validb_all = (jnp.arange(pbw, dtype=jnp.int32)[None, :]
+                      < pre_lookups[:, None])
+        rows = jnp.zeros((n_slots, pps), jnp.int32).at[:, :pbw].set(
+            jnp.where(validb_all, pages2, 0))
+        rows = rows.at[
+            jnp.where(admitted & (tail > 0),
+                      jnp.arange(n_slots, dtype=jnp.int32), n_slots),
+            jnp.clip(pre_lookups, 0, pps - 1)
+        ].set(tail_page, mode="drop")
+        st = dataclasses.replace(
+            st,
+            active=st.active.at[safe_slot].set(True, mode="drop"),
+            rid=st.rid.at[safe_slot].set(batch["rid"], mode="drop"),
+            pos=st.pos.at[safe_slot].set(batch["length"], mode="drop"),
+            n_gen=st.n_gen.at[safe_slot].set(1, mode="drop"),
+            max_new=st.max_new.at[safe_slot].set(batch["max_new"],
+                                                 mode="drop"),
+            n_pages=st.n_pages.at[safe_slot].set(
+                pre_lookups + (tail > 0).astype(jnp.int32), mode="drop"),
+            page_tbl=st.page_tbl.at[safe_slot].set(rows, mode="drop"))
+
+        # ---- phase 3: tiled batched prefill + page writes ----------------
+        # Batched prefill rows are bitwise-identical to per-lane prefill
+        # (row-diagonal attention mask, per-row logit gather), so hoisting
+        # the model call out of the admission scan is invisible to the host
+        # oracle.  Tiles whose lanes admitted nothing skip entirely, so the
+        # steady-state decode-only tick pays no prefill FLOPs.
+        pool_k, pool_v = st.pool_k, st.pool_v
+        tok0 = jnp.zeros(n_slots, jnp.int32)
+        arange_pg = jnp.arange(page, dtype=jnp.int32)
+        for lo in range(0, n_slots, tile):
+            sel = slice(lo, min(lo + tile, n_slots))
+            adm_t = admitted[sel]
+
+            def run_tile(pools, sel=sel, adm_t=adm_t):
+                pool_k, pool_v = pools
+                logits, ks, vs = pm._prefill_impl(
+                    cfg, params, batch["tokens"][sel], batch["length"][sel])
+                # write KV for blocks from each lane's first chain miss on
+                wmask = (validb_all[sel]
+                         & (jnp.arange(pbw, dtype=jnp.int32)[None, :]
+                            >= pre_hits[sel, None])
+                         & adm_t[:, None])
+                pool_k, pool_v = pm._write_pages_impl(
+                    cfg, (ks, vs), pages2[sel], pool_k, pool_v, wmask)
+                # tail tokens -> one private page per lane (zero-padded)
+                idx = jnp.minimum(pre_lookups[sel, None] * page
+                                  + arange_pg[None, :], max_prompt - 1)
+                kt = jnp.take_along_axis(ks, idx[None, :, :, None, None],
+                                         axis=2)
+                vt = jnp.take_along_axis(vs, idx[None, :, :, None, None],
+                                         axis=2)
+                tmask = (arange_pg[None, :]
+                         < tail[sel, None])[None, :, :, None, None]
+                kt = jnp.where(tmask, kt, 0)
+                vt = jnp.where(tmask, vt, 0)
+                tgt = jnp.where(adm_t & (tail[sel] > 0), tail_page[sel],
+                                total_pages)
+                pool_k = pool_k.at[:, :, tgt].set(
+                    jnp.moveaxis(kt, 3, 1), mode="drop")
+                pool_v = pool_v.at[:, :, tgt].set(
+                    jnp.moveaxis(vt, 3, 1), mode="drop")
+                return (pool_k, pool_v,
+                        jnp.argmax(logits, axis=-1).astype(jnp.int32))
+
+            def skip_tile(pools, n=sel.stop - sel.start):
+                return (*pools, jnp.zeros(n, jnp.int32))
+
+            pool_k, pool_v, tk = jax.lax.cond(
+                jnp.any(adm_t), run_tile, skip_tile, (pool_k, pool_v))
+            tok0 = tok0.at[sel].set(tk)
+        st = dataclasses.replace(
+            st, pool_k=pool_k, pool_v=pool_v,
+            last_tok=st.last_tok.at[safe_slot].set(tok0, mode="drop"))
+
+        # ---- phase 4: decode burst (decode_block steps, one dispatch) ----
+        def decode_once(st):
+            # sequential page allocation: an out-of-page retire frees its
+            # private pages for later slots in the SAME step, exactly like
+            # the host loop
+            def alloc_lane(carry, i):
+                owner, page_tbl, n_pages, active = carry
+                a = active[i]
+                needs = a & (st.pos[i] % page == 0) & \
+                    (st.pos[i] // page >= n_pages[i])
+                free_cnt = jnp.sum((owner < 0).astype(jnp.int32))
+                can = needs & (free_cnt > 0)
+                fidx = jnp.argmin(owner >= 0).astype(jnp.int32)  # first free
+                owner = owner.at[jnp.where(can, fidx, n_priv)].set(
+                    i, mode="drop")
+                page_tbl = page_tbl.at[
+                    jnp.where(can, i, n_slots), st.pos[i] // page
+                ].set(shared + fidx, mode="drop")
+                n_pages = n_pages.at[jnp.where(can, i, n_slots)].add(
+                    1, mode="drop")
+                er = needs & ~can              # out of pages: retire early
+                owner = jnp.where(er & (owner == i), -1, owner)
+                active = active.at[i].set(a & ~er)
+                return (owner, page_tbl, n_pages, active), er
+
+            (owner, page_tbl, n_pages, active2), early_ret = jax.lax.scan(
+                alloc_lane,
+                (st.owner, st.page_tbl, st.n_pages, st.active),
+                jnp.arange(n_slots, dtype=jnp.int32))
+
+            # batched paged decode + sampling
+            tok = jnp.where(active2, st.last_tok, 0)
+            posv = jnp.where(active2, st.pos, 0)
+
+            def dec(pools):
+                pool_k, pool_v = pools
+                logits, pk, pv = pm._decode_paged_impl(
+                    cfg, params, tok, posv, pool_k, pool_v, page_tbl,
+                    active2)
+                nxt = _sample_next(ecfg, logits, st.decode_steps)
+                return pk, pv, nxt, jnp.int32(1)
+
+            def nodec(pools):
+                pool_k, pool_v = pools
+                return (pool_k, pool_v, jnp.zeros(n_slots, jnp.int32),
+                        jnp.int32(0))
+
+            pool_k, pool_v, nxt, did = jax.lax.cond(
+                jnp.any(active2), dec, nodec, (st.pool_k, st.pool_v))
+
+            pos2 = jnp.where(active2, st.pos + 1, st.pos)
+            n_gen2 = jnp.where(active2, st.n_gen + 1, st.n_gen)
+            last2 = jnp.where(active2, nxt, st.last_tok)
+
+            # retirement
+            fin = active2 & ((n_gen2 >= st.max_new + 1) |
+                             (pos2 >= ecfg.max_seq - 1))
+            owner = jnp.where(
+                (owner >= 0) & fin[jnp.clip(owner, 0, n_slots - 1)], -1,
+                owner)
+            st = dataclasses.replace(
+                st, pool_k=pool_k, pool_v=pool_v, owner=owner,
+                page_tbl=page_tbl, n_pages=n_pages, active=active2 & ~fin,
+                pos=pos2, n_gen=n_gen2, last_tok=last2,
+                decode_steps=st.decode_steps + did)
+            return st, (active2, jnp.where(active2, nxt, 0),
+                        early_ret | fin)
+
+        st, (dec_mask, dec_tok, retired) = jax.lax.scan(
+            lambda st, _: decode_once(st), st, None,
+            length=ecfg.decode_block)
+
+        emitted = {
+            "admitted": admitted,            # [S] per waiting lane
+            "pre_tok": tok0,                 # [S] prefill token per lane
+            "pre_hits": pre_hits,            # [S] prefix-chain hits
+            "pre_lookups": pre_lookups,      # [S] prefix-chain lookups
+            "rid": st.rid,                   # [S] slot-resident request ids
+            "dec_mask": dec_mask,            # [N, S] decoded at burst step n
+            "dec_tok": dec_tok,              # [N, S]
+            "retired": retired,              # [N, S] left its slot at step n
+            "n_active": jnp.sum(st.active.astype(jnp.int32)),
+        }
+        return st, emitted
+
+    return jax.jit(step, donate_argnums=(1,))
 
 
 class Engine:
@@ -123,7 +466,13 @@ class Engine:
             "paged engine serves decoder-only attention archs; attention-free"
             " archs bypass it (DESIGN.md §4)"
         )
+        assert ecfg.max_seq % ecfg.page == 0, "max_seq must align to pages"
+        assert ecfg.decode_block >= 1, "decode_block must be >= 1"
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.max_prompt = ecfg.max_prompt or ecfg.max_seq
+        assert self.max_prompt % ecfg.page == 0 and \
+            self.max_prompt <= ecfg.max_seq, (
+                "max_prompt must be a page multiple <= max_seq")
         self.kcfg = KWayConfig(
             num_sets=ecfg.num_sets, ways=ecfg.ways, policy=ecfg.policy
         )
@@ -145,38 +494,176 @@ class Engine:
         )
         shared = self.kcfg.capacity
         total = shared + ecfg.private_pages
+        self._shared = shared
         shape = (cfg.num_layers, cfg.num_kv_heads, total, ecfg.page, cfg.hd)
-        self.pool_k = jnp.zeros(shape, jnp.bfloat16)
-        self.pool_v = jnp.zeros(shape, jnp.bfloat16)
-        self.free = list(range(shared, total))
         self.pps = ecfg.max_seq // ecfg.page
-        self.slots: list[Optional[Request]] = [None] * ecfg.max_batch
+        self.pbw = self.max_prompt // ecfg.page
         self.waiting: list[Request] = []
         self.finished: dict[int, Request] = {}
         self._next_rid = 0
-        self.stats = {"prefix_hits": 0, "prefix_lookups": 0, "prefills": 0,
-                      "decode_steps": 0, "evictions": 0}
+        self._stats = {"prefix_hits": 0, "prefix_lookups": 0, "prefills": 0,
+                       "decode_steps": 0}
+        self._ev_dev = jnp.zeros((), jnp.int32)  # device eviction tally
+        if ecfg.jitted:
+            if ecfg.shards > 1:
+                raise ValueError(
+                    "jitted engine requires an unsharded prefix cache "
+                    "(shards == 1); the sharded path is host-loop only")
+            if not getattr(self.backend, "traceable", False):
+                raise ValueError(
+                    f"jitted engine requires a traceable cache backend; "
+                    f"{ecfg.backend!r} is host Python — use the host loop "
+                    "(jitted=False) for the ref oracle")
+            self.running: dict[int, Request] = {}
+            self._sstate = ServeState(
+                kstate=self.kstate,
+                sketch=(self.sketch if self.sketch is not None
+                        else jnp.zeros((), jnp.int32)),
+                pool_k=jnp.zeros(shape, jnp.bfloat16),
+                pool_v=jnp.zeros(shape, jnp.bfloat16),
+                owner=jnp.full((ecfg.private_pages,), -1, jnp.int32),
+                active=jnp.zeros(ecfg.max_batch, bool),
+                rid=jnp.zeros(ecfg.max_batch, jnp.int32),
+                pos=jnp.zeros(ecfg.max_batch, jnp.int32),
+                n_gen=jnp.zeros(ecfg.max_batch, jnp.int32),
+                max_new=jnp.zeros(ecfg.max_batch, jnp.int32),
+                last_tok=jnp.zeros(ecfg.max_batch, jnp.int32),
+                n_pages=jnp.zeros(ecfg.max_batch, jnp.int32),
+                page_tbl=jnp.zeros((ecfg.max_batch, self.pps), jnp.int32),
+                prefix_hits=jnp.zeros((), jnp.int32),
+                prefix_lookups=jnp.zeros((), jnp.int32),
+                evictions=jnp.zeros((), jnp.int32),
+                prefills=jnp.zeros((), jnp.int32),
+                decode_steps=jnp.zeros((), jnp.int32),
+            )
+            self._step_fn = _serve_step_fn(cfg, ecfg)
+            s = ecfg.max_batch
+            self._zero_batch = {
+                "tokens": jnp.zeros((s, self.max_prompt), jnp.int32),
+                "length": jnp.zeros(s, jnp.int32),
+                "max_new": jnp.zeros(s, jnp.int32),
+                "rid": jnp.zeros(s, jnp.int32),
+                "avail": jnp.zeros(s, bool),
+            }
+        else:
+            self.pool_k = jnp.zeros(shape, jnp.bfloat16)
+            self.pool_v = jnp.zeros(shape, jnp.bfloat16)
+            self.free = list(range(shared, total))
+            self.slots: list[Optional[Request]] = [None] * ecfg.max_batch
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt, max_new: int = 16) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        assert 1 <= len(prompt) <= self.max_prompt, (
+            f"prompt length {len(prompt)} outside [1, {self.max_prompt}] "
+            "(EngineConfig.max_prompt)")
         rid = self._next_rid
         self._next_rid += 1
-        self.waiting.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        self.waiting.append(Request(rid, prompt, max_new))
         return rid
 
     def step(self, greedy: bool = True):
         """One engine iteration: admit + prefill waiting, decode running."""
-        self._admit()
-        self._decode(greedy)
+        if self.ecfg.jitted:
+            self._step_jitted()
+        else:
+            self._admit()
+            for _ in range(self.ecfg.decode_block):
+                self._decode()
 
     def run(self, greedy: bool = True, max_steps: int = 10_000):
         steps = 0
-        while (self.waiting or any(self.slots)) and steps < max_steps:
+        while (self.waiting or self._any_running()) and steps < max_steps:
             self.step(greedy)
             steps += 1
         return self.finished
 
-    # ------------------------------------------------------------- internals
+    @property
+    def stats(self) -> dict:
+        """Engine counters, synced from the device in one pull.
+
+        The host loop accumulates evictions as a device scalar (no per-call
+        host round trip — the old ``int(ev.sum())`` pull per insert burned a
+        sync per prefill); the jitted engine keeps every counter in
+        ``ServeState``.
+        """
+        if self.ecfg.jitted:
+            s = self._sstate
+            ph, pl, ev, pf, ds = jax.device_get(
+                (s.prefix_hits, s.prefix_lookups, s.evictions, s.prefills,
+                 s.decode_steps))
+            return {"prefix_hits": int(ph), "prefix_lookups": int(pl),
+                    "prefills": int(pf), "decode_steps": int(ds),
+                    "evictions": int(ev)}
+        d = dict(self._stats)
+        d["evictions"] = int(jax.device_get(self._ev_dev))
+        return d
+
+    def hit_ratio(self) -> float:
+        st = self.stats
+        if st["prefix_lookups"] == 0:
+            return 0.0
+        return st["prefix_hits"] / st["prefix_lookups"]
+
+    def _any_running(self) -> bool:
+        if self.ecfg.jitted:
+            return bool(self.running)
+        return any(self.slots)
+
+    # ----------------------------------------------------- jitted tick shell
+    def _step_jitted(self):
+        """One device tick + ONE host round-trip to drain emitted tokens."""
+        s = self.ecfg.max_batch
+        nwait = min(len(self.waiting), s)
+        if nwait:
+            toks = np.zeros((s, self.max_prompt), np.int32)
+            length = np.zeros(s, np.int32)
+            mx = np.zeros(s, np.int32)
+            rid = np.zeros(s, np.int32)
+            avail = np.zeros(s, bool)
+            for j in range(nwait):
+                r = self.waiting[j]
+                toks[j, : len(r.prompt)] = r.prompt
+                length[j] = len(r.prompt)
+                mx[j] = r.max_new
+                rid[j] = r.rid
+                avail[j] = True
+            batch = {"tokens": jnp.asarray(toks),
+                     "length": jnp.asarray(length),
+                     "max_new": jnp.asarray(mx),
+                     "rid": jnp.asarray(rid),
+                     "avail": jnp.asarray(avail)}
+        else:
+            batch = self._zero_batch
+        self._sstate, emitted = self._step_fn(self.params, self._sstate,
+                                              batch)
+        em = jax.device_get(emitted)     # the one host sync of the tick
+        # admitted lanes are a PREFIX of the waiting queue (in-order
+        # free-lane assignment + break-on-refusal)
+        n_adm = int(em["admitted"].sum())
+        newly = self.waiting[:n_adm]
+        del self.waiting[:n_adm]
+        for j, r in enumerate(newly):
+            r.generated.append(int(em["pre_tok"][j]))
+            r.prefix_hits = int(em["pre_hits"][j])
+            r.prefix_lookups = int(em["pre_lookups"][j])
+            r.pos = len(r.prompt)
+            self.running[r.rid] = r
+        for n in range(self.ecfg.decode_block):
+            dm, dt, rt = (em["dec_mask"][n], em["dec_tok"][n],
+                          em["retired"][n])
+            for i in range(s):
+                if dm[i]:
+                    r = self.running[int(em["rid"][i])]
+                    r.generated.append(int(dt[i]))
+                    r.pos += 1
+            for i in range(s):
+                if rt[i]:
+                    r = self.running.pop(int(em["rid"][i]))
+                    r.done = True
+                    self.finished[r.rid] = r
+
+    # ------------------------------------------------- host-loop internals
     def _admit(self):
         for i in range(self.ecfg.max_batch):
             if self.slots[i] is None and self.waiting:
@@ -187,95 +674,88 @@ class Engine:
                     self.waiting.insert(0, req)  # no free pages: back off
                     break
 
-    def _probe_prefix(self, hashes: np.ndarray):
-        """K-way lookup of the prompt's block chain; stop at first miss
-        (later blocks can't be valid without their prefix)."""
-        if len(hashes) == 0:
-            return 0, []
-        keys = jnp.asarray(hashes, jnp.uint32)
-        self.kstate, hit, vals = self.backend.get(self.kstate, keys)
-        hit = np.asarray(hit)
-        # first-miss = argmin of the cumulative AND of the hit flags; its
-        # closed form is the chain sum (every element before the first zero
-        # is one), so the host loop collapses to two vector ops.
-        chain = np.cumprod(hit.astype(np.int64))
-        n_hit = int(chain.sum())
-        pages = [int(v) for v in np.asarray(vals)[:n_hit]]
-        return n_hit, pages
+    def _prefix_transaction(self, hashes: np.ndarray):
+        """Fixed-width slot-returning prefix-chain transaction.
 
-    def _insert_blocks(self, hashes: np.ndarray):
-        """Admit missed blocks; returns their assigned page ids (== slot
-        index in the shared region) or -1 when not admitted."""
-        if len(hashes) == 0:
-            return []
-        keys = jnp.asarray(hashes, jnp.uint32)
+        Pads the block chain to the static ``max_prompt // page`` lane width
+        and runs TinyLFU record → peek_victims → admit, then the two-phase
+        get + slot-returning put — bit-identical, by the fused≡two-phase
+        invariant, to the single fused ``access(slot_value=True)`` the
+        jitted tick issues.  Returns (n_hit, pages int64[n_full]) where
+        ``pages[i]`` is block i's page id (hit or fresh insert) or -1.
+        """
+        pbw = self.pbw
+        n_full = len(hashes)
+        keys = np.zeros(pbw, np.uint32)
+        keys[:n_full] = hashes
+        valid = np.arange(pbw) < n_full
+        jkeys = jnp.asarray(keys)
+        jvalid = jnp.asarray(valid)
         admit_mask = None
         if self.sketch is not None:
-            self.sketch = admission.record(self.sketch_cfg, self.sketch, keys)
-            vk, vv = self.backend.peek_victims(self.kstate, keys)
-            admit_mask = admission.admit(self.sketch_cfg, self.sketch, keys, vk, vv)
-        # value payload: the slot index the key lands in == page id.  The
-        # slot-returning put writes it in the same call (slot_value=True) and
-        # reports where every key landed.
-        self.kstate, ek, ev, slot_sets, slot_ways = self.backend.put(
-            self.kstate, keys, jnp.zeros(len(hashes), jnp.int32),
-            admit=admit_mask, slot_value=True,
-        )
-        self.stats["evictions"] += int(np.asarray(ev).sum())
-        slot_sets = np.asarray(slot_sets)
-        slot_ways = np.asarray(slot_ways)
-        slots = np.where(
-            slot_sets >= 0, slot_sets * self.kcfg.ways + slot_ways, -1
-        )
-        return [int(s) for s in slots]
+            self.sketch = admission.record(self.sketch_cfg, self.sketch,
+                                           jkeys, enabled=jvalid)
+            vk, vv = self.backend.peek_victims(self.kstate, jkeys)
+            admit_mask = admission.admit(self.sketch_cfg, self.sketch,
+                                         jkeys, vk, vv)
+        self.kstate, hit, vals = self.backend.get(self.kstate, jkeys,
+                                                  enabled=jvalid)
+        self.kstate, _, ev, ss, sw = self.backend.put(
+            self.kstate, jkeys, jnp.zeros(pbw, jnp.int32), admit=admit_mask,
+            enabled=jvalid & ~hit, slot_value=True)
+        self._ev_dev = self._ev_dev + jnp.sum(ev.astype(jnp.int32))
+        hit_h, vals_h, ss_h, sw_h = [
+            np.asarray(a) for a in jax.device_get((hit, vals, ss, sw))]
+        pages = np.where(hit_h, vals_h,
+                         np.where(ss_h >= 0,
+                                  ss_h * self.kcfg.ways + sw_h, -1))[:n_full]
+        chain = np.cumprod(hit_h[:n_full].astype(np.int64)) \
+            if n_full else np.empty(0, np.int64)
+        return int(chain.sum()), pages
 
     def _prefill(self, req: Request, slot: int) -> bool:
         page = self.ecfg.page
         prompt = req.prompt
-        hashes = prefix_block_hashes(prompt, page)
-        n_hit, hit_pages = self._probe_prefix(hashes)
-        req.prefix_lookups = len(hashes)
-        req.prefix_hits = n_hit
-        self.stats["prefix_lookups"] += len(hashes)
-        self.stats["prefix_hits"] += n_hit
-
-        # compute KV for everything past the shared hit (simplicity: one
-        # prefill over the full prompt; reuse would skip the hit tokens —
-        # recorded as a hillclimb TODO since hits still save *decode* pages)
-        miss_hashes = hashes[n_hit:]
-        new_slots = self._insert_blocks(miss_hashes)
-
         ntok = len(prompt)
-        n_full = ntok // page
+        hashes = prefix_block_hashes(prompt, page)
+        n_full = len(hashes)
         tail = ntok - n_full * page
-        need_private = (1 if tail else 0) + sum(1 for s in new_slots if s < 0)
+        n_hit, pages_blk = self._prefix_transaction(hashes)
+        req.prefix_lookups = n_full
+        req.prefix_hits = n_hit
+        self._stats["prefix_lookups"] += n_full
+        self._stats["prefix_hits"] += n_hit
+
+        need_private = (1 if tail else 0) + int((pages_blk < 0).sum())
         if len(self.free) < need_private + 2:
             return False
 
-        logits, ks, vs = pm.prefill_with_kv(
-            self.cfg, self.params, jnp.asarray(prompt[None])
-        )
-        self.stats["prefills"] += 1
+        padded = np.zeros(self.max_prompt, np.int32)
+        padded[:ntok] = prompt
+        logits, ks, vs = pm.prefill_padded(
+            self.cfg, self.params, jnp.asarray(padded[None]),
+            jnp.asarray([ntok], jnp.int32))
+        self._stats["prefills"] += 1
 
-        # page assignment for the full blocks
-        pages = list(hit_pages)
-        blk_slots = []
-        for s in new_slots:
-            if s < 0:              # not admitted by TinyLFU: private page
-                s = self.free.pop()
-                req.private.append(s)
-            pages.append(s)
-            blk_slots.append(s)
-        if blk_slots:
-            slot_arr = jnp.asarray(
-                np.array(blk_slots, np.int32)[None], jnp.int32
-            )
-            # write only the missed blocks' KV (slice from n_hit)
-            kseg = ks[:, :, n_hit * page : n_full * page]
-            vseg = vs[:, :, n_hit * page : n_full * page]
+        # page assignment for the full blocks (private fill-ins for blocks
+        # the cache did not admit)
+        pages = []
+        for j in range(n_full):
+            p = int(pages_blk[j])
+            if p < 0:
+                p = self.free.pop()
+                req.private.append(p)
+            pages.append(p)
+        if n_full > n_hit:
+            # write KV from the first chain miss on (later-chain resident
+            # blocks are re-written with identical content — same as the
+            # jitted tick's masked scatter)
+            slot_arr = jnp.asarray(np.array(pages[n_hit:], np.int32)[None])
+            kseg = ks[:, :, n_hit * page: n_full * page]
+            vseg = vs[:, :, n_hit * page: n_full * page]
             self.pool_k, self.pool_v = pm.write_pages(
                 self.cfg, (kseg, vseg), slot_arr, self.pool_k, self.pool_v,
-                jnp.ones((1, len(blk_slots)), bool),
+                jnp.ones((1, n_full - n_hit), bool),
             )
         # tail tokens -> one private page
         if tail:
@@ -283,10 +763,12 @@ class Engine:
             req.private.append(p)
             pages.append(p)
             kt = jnp.zeros(
-                (self.cfg.num_layers, 1, page, self.cfg.num_kv_heads, self.cfg.hd),
-                jnp.bfloat16,
-            ).at[:, :, :tail].set(ks[:, :, n_full * page :])
-            vt = jnp.zeros_like(kt).at[:, :, :tail].set(vs[:, :, n_full * page :])
+                (self.cfg.num_layers, 1, page, self.cfg.num_kv_heads,
+                 self.cfg.hd), jnp.bfloat16,
+            ).at[:, :, :tail].set(
+                ks[:, :, n_full * page: n_full * page + tail])
+            vt = jnp.zeros_like(kt).at[:, :, :tail].set(
+                vs[:, :, n_full * page: n_full * page + tail])
             self.pool_k, self.pool_v = pm.write_pages(
                 self.cfg, (kt, vt),
                 jnp.asarray([[p]], jnp.int32), self.pool_k, self.pool_v,
@@ -295,8 +777,7 @@ class Engine:
         req.pages = pages
         req.pos = ntok
         req.slot = slot
-        tok = int(jnp.argmax(logits[0]))
-        req.generated.append(tok)
+        req.generated.append(int(jnp.argmax(logits[0])))
         return True
 
     def _page_table(self):
@@ -314,7 +795,7 @@ class Engine:
             active[i] = True
         return pt, pos, tok, active
 
-    def _decode(self, greedy: bool):
+    def _decode(self):
         # Ensure every running request has a page for the incoming token
         # BEFORE the batch table is built: a request that cannot get one
         # finishes — and retires — in this very step (its slot is free for
@@ -323,7 +804,8 @@ class Engine:
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
-            if req.pos % self.ecfg.page == 0 and req.pos // self.ecfg.page >= len(req.pages):
+            if req.pos % self.ecfg.page == 0 and \
+                    req.pos // self.ecfg.page >= len(req.pages):
                 if not self.free:
                     req.done = True  # out of pages: finish early
                     self._retire(i)
@@ -340,14 +822,16 @@ class Engine:
             self.pool_k, self.pool_v,
             jnp.asarray(pt), jnp.asarray(active),
         )
-        self.stats["decode_steps"] += 1
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(
+            _sample_next(self.ecfg, logits, self._stats["decode_steps"]))
+        self._stats["decode_steps"] += 1
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
             req.pos += 1
             req.generated.append(int(nxt[i]))
-            if len(req.generated) >= req.max_new + 1 or req.pos >= self.ecfg.max_seq - 1:
+            if len(req.generated) >= req.max_new + 1 or \
+                    req.pos >= self.ecfg.max_seq - 1:
                 req.done = True
                 self._retire(i)
 
@@ -357,8 +841,3 @@ class Engine:
         req.private = []
         self.finished[req.rid] = req
         self.slots[slot] = None
-
-    def hit_ratio(self) -> float:
-        if self.stats["prefix_lookups"] == 0:
-            return 0.0
-        return self.stats["prefix_hits"] / self.stats["prefix_lookups"]

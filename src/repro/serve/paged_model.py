@@ -1,12 +1,20 @@
 """Model entry points for the paged serving engine.
 
-Two jitted functions per config:
+Each op comes in two forms: an undecorated ``_*_impl`` (inlinable inside a
+larger traced program — the jitted serving tick of serve/engine.py calls
+these directly so the whole tick stays ONE XLA computation) and a jitted
+wrapper with buffer donation for the host-loop engine:
+
   * ``prefill_with_kv``  — forward over prompt tokens returning last-token
     logits AND the per-layer K/V [L, B, S, KVH, D] (to be scattered into
     the page pool at the slots the K-way cache assigned);
+  * ``prefill_padded``   — the fixed-width form: tokens are padded to a
+    static width and the logits are gathered at ``length - 1`` (causal
+    attention makes real-token outputs independent of the padding);
   * ``decode_paged``     — one decode token per sequence, attending through
     the page table with the Pallas paged_attention kernel (ops.attend_paged)
-    and writing the new token's K/V into the current private page slot.
+    and writing the new token's K/V into the current private page slot;
+  * ``write_pages``      — scatter whole-page prefill KV into the pool.
 
 The page pool layout is [L, KVH, P, page, D] (head-major per layer, matching
 kernels/paged_attention.py).
@@ -24,9 +32,12 @@ from repro.models import layers as L
 from repro.models import lm
 
 
-@partial(jax.jit, static_argnums=0)
-def prefill_with_kv(cfg: ModelConfig, params, tokens):
-    """Run the prompt; return (logits_last [B, Vp], k, v [L,B,S,KVH,D])."""
+def _prefill_impl(cfg: ModelConfig, params, tokens, length=None):
+    """Forward over (possibly padded) prompt tokens.
+
+    tokens int32 [B, S]; ``length`` int32 [B] (None: the full width S).
+    Returns (logits [B, Vp] at position length-1, k, v [L, B, S, KVH, D]).
+    """
     x = params["embed"][tokens] * jnp.asarray(cfg.scale_emb, jnp.bfloat16)
     b, s, _ = x.shape
     positions = jnp.arange(s, dtype=jnp.int32)[None]
@@ -43,24 +54,44 @@ def prefill_with_kv(cfg: ModelConfig, params, tokens):
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if length is None:
+        xl = x[:, -1]
+    else:
+        last = jnp.clip(jnp.asarray(length, jnp.int32) - 1, 0, s - 1)
+        xl = x[jnp.arange(b), last]
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = (x[:, -1] @ head.astype(x.dtype)).astype(jnp.float32)
+    logits = (xl @ head.astype(x.dtype)).astype(jnp.float32)
     if cfg.final_softcap > 0:
         logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
     return logits, ks, vs
 
 
-@partial(jax.jit, static_argnums=0, donate_argnums=(3, 4))
-def write_pages(cfg: ModelConfig, kv, slots, pool_k, pool_v, valid):
+@partial(jax.jit, static_argnums=0)
+def prefill_with_kv(cfg: ModelConfig, params, tokens):
+    """Run the prompt; return (logits_last [B, Vp], k, v [L,B,S,KVH,D])."""
+    return _prefill_impl(cfg, params, tokens)
+
+
+@partial(jax.jit, static_argnums=0)
+def prefill_padded(cfg: ModelConfig, params, tokens, length):
+    """Fixed-width prefill: logits are read at ``length - 1`` per lane, so
+    one compiled program serves every prompt length up to the pad width."""
+    return _prefill_impl(cfg, params, tokens, length)
+
+
+def _write_pages_impl(cfg: ModelConfig, kv, slots, pool_k, pool_v, valid):
     """Scatter prefill KV into pool pages.
 
     kv: (k, v) [L, B, S, KVH, D];  slots: [B, nblocks] page ids (-1 = skip);
     pool: [L, KVH, P, page, D].  Writes whole pages (S must be a multiple of
-    the page size).
+    the page size).  Skipped lanes route their scatter out of bounds —
+    ``mode="drop"`` makes them true no-ops (parking them on page 0 would let
+    a stale masked write race a genuine write to page 0).
     """
     k, v = kv
     lnum, b, s, kvh, d = k.shape
     page = pool_k.shape[3]
+    total = pool_k.shape[2]
     nb = s // page
     kp = k.reshape(lnum, b, nb, page, kvh, d)
     vp = v.reshape(lnum, b, nb, page, kvh, d)
@@ -68,16 +99,18 @@ def write_pages(cfg: ModelConfig, kv, slots, pool_k, pool_v, valid):
     vp = jnp.moveaxis(vp.reshape(lnum, b * nb, page, kvh, d), 3, 1)
     flat_slots = slots.reshape(-1)
     ok = (flat_slots >= 0) & valid.reshape(-1)
-    safe = jnp.where(ok, flat_slots, 0)
-    kp = jnp.where(ok[None, None, :, None, None], kp, pool_k[:, :, safe])
-    vp = jnp.where(ok[None, None, :, None, None], vp, pool_v[:, :, safe])
-    pool_k = pool_k.at[:, :, safe].set(kp)
-    pool_v = pool_v.at[:, :, safe].set(vp)
+    safe = jnp.where(ok, flat_slots, total)
+    pool_k = pool_k.at[:, :, safe].set(kp, mode="drop")
+    pool_v = pool_v.at[:, :, safe].set(vp, mode="drop")
     return pool_k, pool_v
 
 
-@partial(jax.jit, static_argnums=0, donate_argnums=(4, 5))
-def decode_paged(
+@partial(jax.jit, static_argnums=0, donate_argnums=(3, 4))
+def write_pages(cfg: ModelConfig, kv, slots, pool_k, pool_v, valid):
+    return _write_pages_impl(cfg, kv, slots, pool_k, pool_v, valid)
+
+
+def _decode_paged_impl(
     cfg: ModelConfig,
     params,
     token,        # [B] int32
@@ -150,3 +183,10 @@ def decode_paged(
     if cfg.final_softcap > 0:
         logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
     return logits, pools["pk"], pools["pv"]
+
+
+@partial(jax.jit, static_argnums=0, donate_argnums=(4, 5))
+def decode_paged(cfg: ModelConfig, params, token, pos, pool_k, pool_v,
+                 page_table, active):
+    return _decode_paged_impl(cfg, params, token, pos, pool_k, pool_v,
+                              page_table, active)

@@ -168,18 +168,23 @@ def test_engine_sharded_prefix_cache_matches(small_model, rng):
 
 
 def test_probe_prefix_first_miss_vectorized(small_model):
-    """_probe_prefix stops at the first miss of the block chain (later
+    """The prefix transaction stops its hit chain at the first miss (later
     blocks cannot be valid without their prefix) — the vectorized
     cumulative-AND must honour that, not count disjoint later hits."""
     cfg, params = small_model
     eng = _engine(cfg, params)
     # insert blocks 0,1 and block 3 — leaving a hole at block 2
     hashes = np.asarray([11, 22, 33, 44], np.uint32)
-    eng.kstate, _, _, ss, _ = eng.backend.put(
+    eng.kstate, _, _, ss, sw = eng.backend.put(
         eng.kstate, jnp.asarray(hashes[[0, 1, 3]]),
         jnp.zeros(3, jnp.int32), slot_value=True)
-    n_hit, pages = eng._probe_prefix(hashes)
-    assert n_hit == 2 and len(pages) == 2
+    slots = np.asarray(ss) * eng.kcfg.ways + np.asarray(sw)
+    n_hit, pages = eng._prefix_transaction(hashes)
+    assert n_hit == 2 and len(pages) == 4
+    # hits return the stored page ids; the chain-broken blocks 2 and 3 are
+    # still resolved to pages (insert-on-miss) so the engine can place them
+    assert list(pages[:2]) == list(slots[:2])
+    assert (pages >= 0).all()
 
 
 def test_engine_rejects_ssm():

@@ -1,0 +1,245 @@
+"""Device-resident serving tick: jitted-vs-hostloop parity, continuous-
+batching invariants, compile economy, and a pinned golden serving trace.
+
+The jitted engine (one traced program per tick, DESIGN.md §11) and the host
+loop (one jitted call per model op) must be indistinguishable from outside:
+identical emitted tokens, hit ratios, eviction counts, and retirement
+behaviour.  The host loop is the differential oracle; every test here runs
+both and diffs.
+
+Golden update workflow (DESIGN.md §7/§11) — only after deliberately changing
+hashing, policy, sampling, or engine-transaction semantics:
+
+    PYTHONPATH=src python tests/test_serve_jitted.py --regen
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.hashing import prefix_block_hashes, prefix_block_hashes_jnp
+from repro.core.policies import Policy
+from repro.models import lm
+from repro.serve import (
+    Engine,
+    EngineConfig,
+    reset_trace_counts,
+    trace_counts,
+)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "serve_trace.json")
+GOLDEN_KIND = "repro.golden.serve"
+
+BASE = dict(page=8, num_sets=16, ways=4, max_batch=4, max_seq=128,
+            private_pages=96, max_prompt=80)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get("deepseek-7b").smoke
+    params = lm.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _workload(cfg, eng, seed=0, n=8, shared_len=40, max_new=6):
+    """Shared-prefix request mix; returns (per-rid tokens, hit ratio, stats)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(2, cfg.vocab_size - 1, shared_len)
+    for _ in range(n):
+        tail = rng.integers(2, cfg.vocab_size - 1, int(rng.integers(3, 14)))
+        eng.submit(np.concatenate([shared, tail]), max_new=max_new)
+    fin = eng.run()
+    return ({rid: list(r.generated) for rid, r in fin.items()},
+            eng.hit_ratio(), eng.stats)
+
+
+def _pair(cfg, params, **kw):
+    e = dict(BASE)
+    e.update(kw)
+    host = Engine(cfg, params, EngineConfig(**e))
+    jit = Engine(cfg, params, EngineConfig(**e, jitted=True))
+    return host, jit
+
+
+# ---------------------------------------------------------------------------
+# hashing satellite: the traced chain hash is the numpy chain hash
+# ---------------------------------------------------------------------------
+
+def test_prefix_hashes_jnp_matches_numpy(rng):
+    t = rng.integers(0, 512, 67).astype(np.int32)
+    want = prefix_block_hashes(t, 8)           # 8 full blocks of 67 tokens
+    padded = np.zeros(80, np.int32)
+    padded[:67] = t
+    got = np.asarray(prefix_block_hashes_jnp(jnp.asarray(padded), 8))
+    assert (got[: len(want)] == want).all()
+
+
+def test_prefix_hashes_pinned_values():
+    """Pin the actual uint32 chain values: any change to the FNV fold, the
+    fmix32 avalanche, the position salt or the XOR chain fails HERE (the
+    serving analogue of the trace512 golden)."""
+    t = np.random.default_rng(0).integers(0, 512, 67).astype(np.int32)
+    got = prefix_block_hashes(t, 8)[:4].tolist()
+    assert got == [1741624807, 425176065, 3914042232, 652229286]
+
+
+# ---------------------------------------------------------------------------
+# jitted == hostloop (the differential oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(policy=Policy.LFU, num_sets=4, ways=2),   # eviction pressure
+    dict(tinylfu=True),
+    dict(temperature=0.8, sample_seed=3),
+    dict(decode_block=3),                          # multi-step decode burst
+    dict(decode_block=4, temperature=0.8),         # burst + sampling
+], ids=["lru", "lfu-evict", "tinylfu", "sampled", "burst", "burst-sampled"])
+def test_jitted_matches_hostloop(small_model, kw):
+    cfg, params = small_model
+    host, jit = _pair(cfg, params, **kw)
+    gh, hrh, sth = _workload(cfg, host)
+    gj, hrj, stj = _workload(cfg, jit)
+    assert gh == gj
+    assert hrh == hrj
+    assert sth == stj          # prefix hits/lookups, prefills, evictions...
+
+
+@pytest.mark.parametrize("db", [1, 3], ids=["db1", "db3"])
+def test_jitted_out_of_page_retirement(small_model, db):
+    """Page exhaustion mid-decode retires early — at the same step, with the
+    same truncated output, in both engines (the sequential allocation scan
+    must free retired pages for later slots exactly like the host loop,
+    including mid-burst when decode_block > 1)."""
+    cfg, params = small_model
+    host, jit = _pair(cfg, params, private_pages=7, decode_block=db)
+    gh, hrh, sth = _workload(cfg, host, n=10, max_new=50)
+    gj, hrj, stj = _workload(cfg, jit, n=10, max_new=50)
+    assert gh == gj and hrh == hrj and sth == stj
+    lens = sorted(len(g) for g in gh.values())
+    assert lens[0] < 51, "scenario must actually exhaust the page pool"
+
+
+def test_jitted_overflow_queues(small_model):
+    """More requests than slots: the fixed-lane engine queues the overflow
+    and completes every request exactly once (no drop, no double-finish)."""
+    cfg, params = small_model
+    host, jit = _pair(cfg, params)
+    n = 3 * BASE["max_batch"] + 1
+    gh, _, _ = _workload(cfg, host, n=n)
+    gj, _, _ = _workload(cfg, jit, n=n)
+    assert gh == gj
+    assert sorted(gj) == list(range(n))          # every rid finished once
+    assert all(len(g) >= 1 for g in gj.values())  # nobody dropped pre-decode
+
+
+def test_jitted_no_double_decode(small_model):
+    """Stepping an idle jitted engine is a no-op: no token emission, no
+    counter movement (the all-inactive tick skips the decode branch)."""
+    cfg, params = small_model
+    _, jit = _pair(cfg, params)
+    jit.submit(np.arange(2, 26, dtype=np.int32), max_new=3)
+    fin = jit.run()
+    before = jit.stats
+    toks = {rid: list(r.generated) for rid, r in fin.items()}
+    for _ in range(3):
+        jit.step()
+    assert jit.stats == before
+    assert {rid: list(r.generated) for rid, r in fin.items()} == toks
+
+
+def test_jitted_one_sync_per_tick(small_model, monkeypatch):
+    """The tick's host round-trip budget is exactly one device_get."""
+    cfg, params = small_model
+    _, jit = _pair(cfg, params)
+    for i in range(3):
+        jit.submit(np.arange(2, 26 + i, dtype=np.int32), max_new=4)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get", lambda x: calls.append(1) or real(x))
+    steps = 0
+    while (jit.waiting or jit.running) and steps < 50:
+        jit.step()
+        steps += 1
+    assert steps > 1 and len(calls) == steps
+
+
+def test_jitted_trace_economy(small_model):
+    """≤1 compile per engine shape — same-shape engines share one traced
+    program (lru-cached step builder + jit cache), so even across every
+    jitted engine this module has constructed, each shape key counts exactly
+    one trace.  A retrace (shape leak, cache miss) shows up as > 1."""
+    cfg, params = small_model
+    for seed in (0, 1):
+        _, jit = _pair(cfg, params)
+        _workload(cfg, jit, seed=seed, n=5)
+    counts = trace_counts()
+    assert counts, "jitted runs must register a trace key"
+    assert all(v == 1 for v in counts.values()), counts
+
+
+def test_jitted_rejects_untraceable(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="traceable"):
+        Engine(cfg, params, EngineConfig(**BASE, jitted=True, backend="ref"))
+    with pytest.raises(ValueError, match="unsharded"):
+        Engine(cfg, params, EngineConfig(**BASE, jitted=True, shards=2))
+
+
+# ---------------------------------------------------------------------------
+# golden serving trace (pinned end-to-end tokens)
+# ---------------------------------------------------------------------------
+
+def _golden_run(cfg, params):
+    """The pinned workload: jitted engine, eviction pressure, TinyLFU off."""
+    eng = Engine(cfg, params, EngineConfig(
+        **{**BASE, "num_sets": 8, "ways": 2}, jitted=True))
+    gen, hr, st = _workload(cfg, eng, seed=7, n=10, max_new=5)
+    return {"generated": {str(k): v for k, v in gen.items()},
+            "hit_ratio": round(hr, 6), "evictions": st["evictions"]}
+
+
+def regen():
+    cfg = configs.get("deepseek-7b").smoke
+    params = lm.init_params(cfg, jax.random.key(0))
+    golden = {"kind": GOLDEN_KIND, "version": 1,
+              "config": {"arch": "deepseek-7b smoke", "workload_seed": 7,
+                         "engine": {**BASE, "num_sets": 8, "ways": 2}},
+              "run": _golden_run(cfg, params)}
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1)
+        f.write("\n")
+    return golden
+
+
+def test_golden_serving_trace(small_model):
+    """End-to-end pinned tokens through the jitted engine: any drift in
+    hashing, probe order, paging, prefill numerics or sampling fails here
+    with a per-request diff.  If intentional, regen per the module header."""
+    cfg, params = small_model
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    assert golden["kind"] == GOLDEN_KIND
+    got = _golden_run(cfg, params)
+    want = golden["run"]
+    assert got["generated"] == want["generated"], (
+        "serving trace diverged — hashing/policy/numerics change? "
+        "If intentional, regen per DESIGN.md §11")
+    assert got["hit_ratio"] == want["hit_ratio"]
+    assert got["evictions"] == want["evictions"]
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        g = regen()
+        print(f"wrote {GOLDEN_PATH}: {len(g['run']['generated'])} requests, "
+              f"hit_ratio={g['run']['hit_ratio']}")
+    else:
+        print(__doc__)
