@@ -3,8 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
 
 Sections: hit_ratio (Figs 4-13), throughput (Figs 14-26),
-synthetic_mix (Figs 27-30), theorem41 (§4), kernels, serving, roofline
-(reads dryrun_results.json when present).
+synthetic_mix (Figs 27-30), showdown (Fig. 1 analogue: production caches
+vs our paths), theorem41 (§4), kernels, serving, roofline (reads
+dryrun_results.json when present).
 
 The figure sections are thin shims over ``repro.eval`` (DESIGN.md §7) — for
 machine-readable, baseline-gated artifacts use
@@ -51,8 +52,8 @@ def main():
     if args.shards < 1 or args.shards & (args.shards - 1):
         ap.error(f"--shards must be a power of two, got {args.shards}")
 
-    from benchmarks import (hit_ratio, kernels_bench, serving, synthetic_mix,
-                            theorem41, throughput)
+    from benchmarks import (hit_ratio, kernels_bench, serving, showdown,
+                            synthetic_mix, theorem41, throughput)
 
     backends = (args.backend,) if args.backend else ("jnp", "pallas", "ref")
     shards = (1, args.shards) if args.shards > 1 else (1,)
@@ -62,6 +63,7 @@ def main():
         "throughput": (lambda: throughput.run(
             quick=args.quick, backends=backends, shards=shards)),
         "synthetic_mix": synthetic_mix.run,
+        "showdown": lambda: showdown.run(quick=args.quick),
         "theorem41": (lambda: theorem41.run(ks=(8, 64), trials=10))
         if args.quick else theorem41.run,
         "kernels": kernels_bench.run,

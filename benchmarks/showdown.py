@@ -1,0 +1,130 @@
+"""Showdown vs production caches (paper Fig. 1 analogue) — CLI.
+
+The measurement lives in ``repro.eval.figures.showdown``: the same uint32
+key traces replayed through ``cachetools`` (LRU/LFU behind the documented
+global lock) and a lock-striped pure-Python k-way baseline under a thread
+pool at thread counts {1, 2, 4, 8}, next to our jnp chunked-scan and
+pallas trace-resident replay rows — req/s per library plus deterministic
+single-threaded hit-ratio parity records.
+
+    PYTHONPATH=src python -m benchmarks.showdown --quick \
+        [--out BENCH_showdown.json] \
+        [--hit-ratio-gate benchmarks/baselines/BENCH_showdown_quick.json]
+
+Every invocation writes the schema-versioned BENCH artifact and prints the
+req/s-vs-threads table; ``--hit-ratio-gate`` additionally diffs the
+``showdown-hr/...`` parity records against the committed baseline through
+the shared ``_baseline_gate``/``_run_gate`` contract from
+``benchmarks.throughput`` — exit 3 on divergence, dead gate = breach.  This
+is the CI perf-smoke entry point; ``run()`` is the CSV section for
+``benchmarks/run.py``.
+
+Requires ``cachetools`` (requirements-dev.txt); without it the command
+exits 4 with an install hint instead of crashing mid-figure.
+"""
+import argparse
+import sys
+
+from benchmarks.common import emit
+from benchmarks.throughput import _baseline_gate, _run_gate
+from repro.eval import figures
+
+
+def showdown_hit_ratio_gate(baseline_path: str, records, tol: float = 1e-6):
+    """Diff a fresh run's ``showdown-hr/...`` parity records against the
+    committed baseline.  Every library's single-threaded replay is
+    deterministic (external Python caches and our batched paths alike), so
+    the band is essentially zero — a breach means a library upgrade, a
+    trace change, or a cache-semantics regression.  Returns
+    ``(checked, breaches)`` under the shared dead-gate contract.
+    """
+    points = []
+    for r in records:
+        if not r["id"].startswith("showdown-hr/"):
+            continue
+        points.append((r["id"],
+                       lambda rec, _r=r: [(_r["id"], _r["value"],
+                                           rec["value"])]))
+    return _baseline_gate(baseline_path, points, tol)
+
+
+def _compare(args) -> int:
+    from repro.eval import artifacts
+
+    spec, records, skipped = figures.showdown(
+        quick=args.quick,
+        progress=None if args.quiet else
+        (lambda m: print(f"  [showdown] {m}", flush=True)))
+    art = artifacts.make_artifact("showdown", spec, records, skipped)
+    out = args.out or "BENCH_showdown.json"
+    artifacts.write_artifact(out, art)
+
+    by_id = {r["id"]: r for r in records}
+    print(f"\nshowdown vs production caches (n={spec['n']}, capacity="
+          f"{spec['capacity']}, k={spec['ways']}; p50 steady-state req/s):")
+    head = " ".join(f"{'t=' + str(t):>10}" for t in spec["threads"])
+    print(f"{'family/library':<28} {head} {'ours':>12}")
+    for family in spec["families"]:
+        for policy in spec["policies"]:
+            for lib in ("cachetools", "striped"):
+                row = [by_id[f"showdown/{family}/{lib}-{policy}"
+                             f"/threads{t}"]["value"]
+                       for t in spec["threads"]]
+                cells = " ".join(f"{v:>10.0f}" for v in row)
+                print(f"{family + '/' + lib + '-' + policy:<28} {cells}")
+            for ours in ("jnp-batched", "pallas-resident"):
+                r = by_id[f"showdown/{family}/{ours}-{policy}"
+                          f"/batch{spec['batch']}"]
+                pad = " " * (11 * len(spec["threads"]))
+                print(f"{family + '/' + ours + '-' + policy:<28}"
+                      f"{pad} {r['value']:>12.0f}")
+    print(f"\n{len(records)} records -> {out}")
+
+    if args.hit_ratio_gate:
+        checked, breaches = showdown_hit_ratio_gate(args.hit_ratio_gate,
+                                                    records)
+        return _run_gate("showdown hit-ratio", args.hit_ratio_gate,
+                         checked, breaches)
+    return 0
+
+
+def run(quick=False):
+    """CSV section for benchmarks/run.py."""
+    from repro.showdown import HAVE_CACHETOOLS
+    if not HAVE_CACHETOOLS:
+        print("showdown,skipped,cachetools not installed")
+        return
+    print("table,config,req_per_s")
+    _, records, _ = figures.showdown(quick=quick)
+    for r in records:
+        if r["metric"] != "req_per_s":
+            continue
+        emit("showdown", r["id"], f"{r['value']:.1f}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.showdown",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default BENCH_showdown.json)")
+    ap.add_argument("--hit-ratio-gate", default=None, metavar="BASELINE",
+                    help="diff the showdown-hr parity records against this "
+                         "committed baseline; exit 3 on divergence")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.showdown import HAVE_CACHETOOLS
+    if not HAVE_CACHETOOLS:
+        print("cachetools is not installed — pip install -r "
+              "requirements-dev.txt to run the showdown harness",
+              file=sys.stderr)
+        return 4
+
+    return _compare(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

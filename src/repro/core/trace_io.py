@@ -1,0 +1,261 @@
+"""Real-trace ingestion — public cache traces as drop-in trace families.
+
+The paper evaluates on public traces (Wikipedia, OLTP, F1/F2, multi*, ...)
+that ship in two dominant on-disk shapes.  This module parses both into the
+same ``np.uint32`` key arrays the synthetic families in ``core/traces.py``
+emit, so a downloaded trace file drops into every existing sweep, gate and
+golden-trace workflow unchanged:
+
+  * ``"arc"``  — ARC/LIRS-style plain text (``.trace``/``.lirs``): one
+    decimal block id per line.  Extra whitespace-separated columns after the
+    key (the 4-column ARC header form ``start count ignored id``) are
+    tolerated; the first field is the key.  Numeric ids are used directly
+    (mod 2^32) — block-id locality is part of the workload.
+  * ``"csv"``  — Twitter/Memcached-style CSV with op/key/size columns.
+    A header row naming ``op``/``key`` (any column order, extra columns
+    ignored) is auto-detected; headerless files are read positionally as
+    ``op,key[,size]``.  Keys are opaque strings and are **fingerprint-
+    hashed** into the uint32 key space (see ``fingerprint_keys``).
+
+Key-space fingerprint contract: a string key maps to
+``fmix32(FNV1a_32(utf8(key)))`` — deterministic across runs/platforms, full
+avalanche (murmur3 finalizer, the same mixer ``core/hashing.py`` uses), and
+folded away from the cache's EMPTY_KEY sentinel.  Collisions are the usual
+birthday bound (~n^2/2^33); at trace sizes up to a few million keys this
+perturbs hit ratios far below the gate tolerances.
+
+Reads are streaming/chunked (``iter_trace_chunks``): a multi-GB trace never
+needs to fit in memory as text — only the uint32 key array does.
+
+``register_trace`` drops an ingested file into the ``traces.generate()``
+registry: ``generate(name, n)`` serves the first ``n`` requests (tiling the
+file if ``n`` exceeds it), which is exactly the contract every sweep and
+replay entry point already assumes.
+"""
+from __future__ import annotations
+
+import csv as _csv
+import os
+
+import numpy as np
+
+from repro.core import traces
+
+__all__ = ["load_trace", "iter_trace_chunks", "fingerprint_keys",
+           "trace_fingerprint", "register_trace", "unregister_trace",
+           "detect_format"]
+
+#: murmur3 fmix32 constants — the same avalanche mixer as core/hashing.py.
+_C1 = 0x85EBCA6B
+_C2 = 0xC2B2AE35
+_FNV_OFFSET = 2166136261
+_FNV_PRIME = 16777619
+_MASK = 0xFFFFFFFF
+_EMPTY_KEY = 0xFFFFFFFF
+
+#: default read-op set for the ``ops=`` filter ("reads only" ingestion);
+#: ``ops=None`` keeps every row — our caches model key residency, and a
+#: SET on a missing key allocates just like a GET-miss does.
+READ_OPS = frozenset({"get", "gets", "read"})
+
+
+def _fmix32_int(x: int) -> int:
+    x ^= x >> 16
+    x = (x * _C1) & _MASK
+    x ^= x >> 13
+    x = (x * _C2) & _MASK
+    x ^= x >> 16
+    return x
+
+
+def _sanitize(k: int) -> int:
+    """Fold the EMPTY_KEY sentinel exactly like hashing.sanitize_keys."""
+    k &= _MASK
+    return 0xFFFFFFFE if k == _EMPTY_KEY else k
+
+
+def fingerprint_keys(keys) -> np.ndarray:
+    """Map opaque string keys into the uint32 key space (the contract the
+    module docstring documents).  -> uint32 [len(keys)]."""
+    out = np.empty(len(keys), np.uint32)
+    for i, key in enumerate(keys):
+        h = _FNV_OFFSET
+        for b in key.encode("utf-8"):
+            h = ((h ^ b) * _FNV_PRIME) & _MASK
+        out[i] = _sanitize(_fmix32_int(h))
+    return out
+
+
+def trace_fingerprint(keys: np.ndarray) -> str:
+    """Order-sensitive digest of a key array — provenance for artifacts.
+
+    FNV-1a folded over the raw little-endian bytes, avalanche-finished;
+    eight hex chars.  Two ingestions of the same file always agree; any
+    reordering, truncation or parse change shows up immediately.
+    """
+    h = _FNV_OFFSET
+    for b in np.ascontiguousarray(keys, np.uint32).tobytes():
+        h = ((h ^ b) * _FNV_PRIME) & _MASK
+    return f"{_fmix32_int(h):08x}"
+
+
+def detect_format(path: str) -> str:
+    """File-extension format sniff: ``.csv`` -> "csv", else "arc"."""
+    return "csv" if os.path.splitext(path)[1].lower() == ".csv" else "arc"
+
+
+# ---------------------------------------------------------------------------
+# parsers (streaming)
+# ---------------------------------------------------------------------------
+
+def _iter_arc(path: str, chunk: int):
+    buf = []
+    n_seen = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, start=1):
+            fields = line.split()
+            if not fields:
+                continue                     # blank lines are separators
+            try:
+                key = int(fields[0], 10)
+            except ValueError:
+                raise ValueError(
+                    f"{path}:{lineno}: malformed ARC/LIRS trace line "
+                    f"{line.strip()!r} — the first field must be a decimal "
+                    "key") from None
+            buf.append(_sanitize(key))
+            n_seen += 1
+            if len(buf) >= chunk:
+                yield np.asarray(buf, np.uint32)
+                buf = []
+    if buf:
+        yield np.asarray(buf, np.uint32)
+    if n_seen == 0:
+        raise ValueError(f"{path}: empty trace (no requests parsed)")
+
+
+def _header_columns(row) -> dict | None:
+    """Map column name -> index when ``row`` is a header row, else None."""
+    names = [c.strip().lower() for c in row]
+    if "op" in names and "key" in names:
+        return {name: i for i, name in enumerate(names)}
+    return None
+
+
+def _iter_csv(path: str, chunk: int, ops):
+    ops = None if ops is None else frozenset(o.lower() for o in ops)
+    buf: list[str] = []
+    n_seen = 0
+
+    def flush():
+        arr = fingerprint_keys(buf)
+        buf.clear()
+        return arr
+
+    with open(path, newline="") as f:
+        reader = _csv.reader(f)
+        cols = {"op": 0, "key": 1}
+        first = True
+        for lineno, row in enumerate(reader, start=1):
+            if not row or all(not c.strip() for c in row):
+                continue
+            if first:
+                first = False
+                named = _header_columns(row)
+                if named is not None:
+                    cols = named
+                    continue                 # header row consumed
+            if len(row) <= max(cols["op"], cols["key"]):
+                raise ValueError(
+                    f"{path}:{lineno}: malformed CSV trace row {row!r} — "
+                    f"need op/key columns at indices "
+                    f"{cols['op']}/{cols['key']}")
+            op = row[cols["op"]].strip().lower()
+            key = row[cols["key"]].strip()
+            if not op or not key:
+                raise ValueError(
+                    f"{path}:{lineno}: malformed CSV trace row {row!r} — "
+                    "empty op or key field")
+            n_seen += 1
+            if ops is not None and op not in ops:
+                continue
+            buf.append(key)
+            if len(buf) >= chunk:
+                yield flush()
+    if buf:
+        yield flush()
+    if n_seen == 0:
+        raise ValueError(f"{path}: empty trace (no requests parsed)")
+
+
+def iter_trace_chunks(path: str, fmt: str | None = None,
+                      chunk: int = 1 << 16, ops=None):
+    """Stream a trace file as uint32 key-array chunks (<= ``chunk`` keys).
+
+    ``fmt``: "arc" | "csv" | None (sniff from the extension).  ``ops``
+    filters CSV rows to the given operation names (e.g. ``READ_OPS``);
+    ignored for the op-less ARC format.
+    """
+    fmt = fmt or detect_format(path)
+    if fmt == "arc":
+        return _iter_arc(path, chunk)
+    if fmt == "csv":
+        return _iter_csv(path, chunk, ops)
+    raise ValueError(f"unknown trace format {fmt!r}; expected 'arc' or 'csv'")
+
+
+def load_trace(path: str, fmt: str | None = None, limit: int | None = None,
+               ops=None) -> np.ndarray:
+    """Parse a whole trace file -> uint32 key array (see module docstring).
+
+    ``limit`` stops the streaming read after that many requests — a cheap
+    way to sample the head of a multi-GB trace.
+    """
+    parts, total = [], 0
+    for arr in iter_trace_chunks(path, fmt=fmt, ops=ops):
+        parts.append(arr)
+        total += len(arr)
+        if limit is not None and total >= limit:
+            break
+    if not parts:
+        raise ValueError(
+            f"{path}: no requests survived the op filter {sorted(ops)!r}")
+    out = parts[0] if len(parts) == 1 else np.concatenate(parts)
+    return out[:limit] if limit is not None else out
+
+
+# ---------------------------------------------------------------------------
+# traces.generate() registry integration
+# ---------------------------------------------------------------------------
+
+def register_trace(name: str, path: str, fmt: str | None = None,
+                   ops=None, limit: int | None = None) -> str:
+    """Register a trace file as a ``traces.generate()`` family.
+
+    The file is parsed lazily on first use and memoized.  The family
+    callable ignores the rng (real traces are fixed request streams — the
+    seed only matters for synthetic families) and serves the first ``n``
+    requests, tiling the file when ``n`` exceeds its length, so ingested
+    traces satisfy the same ``generate(family, n)`` contract as every
+    synthetic family.  Returns ``name``.
+    """
+    cache: dict = {}
+
+    def ingested(rng, n):
+        if "keys" not in cache:
+            cache["keys"] = load_trace(path, fmt=fmt, limit=limit, ops=ops)
+        keys = cache["keys"]
+        if n <= len(keys):
+            return keys[:n].copy()
+        reps = -(-n // len(keys))
+        return np.tile(keys, reps)[:n]
+
+    ingested.__name__ = f"ingested_{name}"
+    ingested.path = path
+    traces.register_family(name, ingested)
+    return name
+
+
+def unregister_trace(name: str) -> None:
+    """Remove a ``register_trace`` entry from the family registry."""
+    traces.unregister_family(name)

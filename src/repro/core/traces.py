@@ -14,12 +14,20 @@ parameterized to match a *class* of those workloads (DESIGN.md §6):
                     F1/F2 financial)
 
 Generators are seeded numpy (host side — traces are inputs, not model state).
+
+Ingested real traces (``core/trace_io.py``) register additional families at
+runtime via ``register_family`` — every registry entry, synthetic or
+ingested, is callable as ``fn(rng, n, **kw) -> np.ndarray`` and drops into
+``generate()`` (and therefore every sweep, gate and golden-trace workflow)
+unchanged.
 """
 from __future__ import annotations
 
+import inspect
+
 import numpy as np
 
-__all__ = ["generate", "FAMILIES"]
+__all__ = ["generate", "FAMILIES", "register_family", "unregister_family"]
 
 
 def _zipf_catalog(rng: np.random.Generator, n: int, catalog: int, alpha: float):
@@ -66,7 +74,10 @@ def recency(rng, n, catalog=1 << 18, theta=0.8):
     dist = rng.geometric(0.02, size=n) % window
     for i in range(n):
         if reuse[i] and i > 0:
-            k = recent[(head - 1 - dist[i]) % window]
+            # Only the most recent min(i, window) ring slots have been
+            # written; an unclamped distance wraps into unwritten zero slots
+            # and inflates key 0's popularity for the whole warm-up window.
+            k = recent[(head - 1 - dist[i] % min(i, window)) % window]
         else:
             k = next(fresh)
         out[i] = k
@@ -90,7 +101,46 @@ FAMILIES = {
     "oltp_mix": oltp_mix,
 }
 
+#: the synthetic families above are permanent; runtime registrations
+#: (ingested traces) may shadow nothing in this set
+_BUILTINS = frozenset(FAMILIES)
+
+
+def register_family(name: str, fn) -> None:
+    """Register a runtime trace family (``fn(rng, n, **kw) -> ndarray``).
+
+    Used by ``core/trace_io.py`` to drop ingested real traces into the
+    ``generate()`` registry.  Re-registering a runtime family replaces it;
+    the built-in synthetic families cannot be shadowed.
+    """
+    if name in _BUILTINS:
+        raise ValueError(
+            f"cannot register {name!r}: it would shadow the built-in "
+            f"synthetic family of the same name")
+    FAMILIES[name] = fn
+
+
+def unregister_family(name: str) -> None:
+    """Remove a runtime-registered family (built-ins cannot be removed)."""
+    if name in _BUILTINS:
+        raise ValueError(f"cannot unregister built-in family {name!r}")
+    FAMILIES.pop(name, None)
+
 
 def generate(family: str, n: int, seed: int = 0, **kw) -> np.ndarray:
+    fn = FAMILIES.get(family)
+    if fn is None:
+        raise ValueError(
+            f"unknown trace family {family!r}; known families: "
+            f"{', '.join(sorted(FAMILIES))}")
+    params = inspect.signature(fn).parameters
+    if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values()):
+        bad = sorted(set(kw) - set(params))
+        if bad:
+            accepted = sorted(set(params) - {"rng", "n"})
+            raise ValueError(
+                f"unknown trace kwargs {bad} for family {family!r}; "
+                f"accepted: {accepted}")
     rng = np.random.default_rng(seed)
-    return FAMILIES[family](rng, n, **kw).astype(np.uint32)
+    return fn(rng, n, **kw).astype(np.uint32)

@@ -13,6 +13,10 @@ Each function runs one figure family's sweep and returns
   * ``throughput_vs_shards``       — the threads-vs-throughput scaling plot:
     shards stand in for threads, each bringing its own per-tick request
     stream; includes the single-scan no-host-sync replay rows.
+  * ``showdown``                   — Fig. 1 analogue: req/s vs thread count
+    for production caches (cachetools + global lock, lock-striped k-way)
+    next to our batched/resident device paths, with gateable hit-ratio
+    parity records.
   * ``synthetic_mix``              — Figs. 27-30: fixed hit-rate workloads.
   * ``serving``                    — end-to-end prefix-cache serving rows.
   * ``serving_engine``             — host-loop vs device-resident jitted
@@ -469,6 +473,120 @@ def throughput_vs_shards(quick: bool = False, progress=None,
     return spec, records, []
 
 
+def showdown(quick: bool = False, progress=None, threads=(1, 2, 4, 8),
+             families=("zipf", "oltp_mix"), policies=("lru", "lfu")):
+    """The paper's Fig. 1 analogue: req/s vs thread count, production caches
+    next to our batched/resident paths (DESIGN.md §12).
+
+    External rows (per family × policy), one per thread count in
+    ``threads``:
+
+      * ``cachetools-{policy}/threads{T}`` — ``cachetools.LRUCache``/
+        ``LFUCache`` behind the documented global lock, T pool workers each
+        replaying a contiguous trace slice against the shared cache;
+      * ``striped-{policy}/threads{T}``   — the lock-striped pure-Python
+        k-way baseline (one lock per set, same set hash as the device
+        paths): limited associativity's structural benefit without SIMD.
+
+    Our rows (same trace, same total capacity, k=8):
+
+      * ``jnp-batched-{policy}/batch{B}``     — the chunked-scan batched
+        replay (one jitted scan, one host sync);
+      * ``pallas-resident-{policy}/batch{B}`` — the trace-resident replay
+        megakernel (ONE launch, state pinned in VMEM).
+
+    All throughput rows are wall-clock and ``comparable: false``.  The
+    gateable output is the ``showdown-hr/...`` records: deterministic
+    single-threaded hit ratios per library (cachetools is full-assoc
+    LRU/LFU, striped and ours are k=8), ``comparable: true`` — CI diffs
+    them against the committed baseline via the shared ``_baseline_gate``
+    contract (exit 3 on breach).
+    """
+    from repro.core import trace_io, traces
+    from repro.core.kway import KWayConfig
+    from repro.core.simulate import SimConfig, replay_batched
+    from repro.showdown import make_baseline, replay_threaded
+    from repro.showdown import hit_ratio as baseline_hit_ratio
+
+    capacity, ways, batch, seed = THROUGHPUT_CAPACITY, 8, 256, 7
+    n = 8_192 if quick else 65_536
+    iters = 2 if quick else 5
+    pol_enum = {"lru": Policy.LRU, "lfu": Policy.LFU}
+    records = []
+    trace_fp = {}
+
+    def rec(rid, value, **extra):
+        r = {"id": rid, "metric": "req_per_s", "value": round(value, 1),
+             "capacity": capacity, "n": n, "comparable": False}
+        r.update(extra)
+        records.append(r)
+
+    for family in families:
+        tr = traces.generate(family, n, seed=seed)
+        trace_fp[family] = trace_io.trace_fingerprint(tr)
+        for policy in policies:
+            # -- external libraries under threads -------------------------
+            for lib in ("cachetools", "striped"):
+                for t in threads:
+                    if progress:
+                        progress(f"{family}/{lib}-{policy} threads={t}")
+                    cache = make_baseline(lib, capacity, policy, ways=ways)
+                    st = replay_threaded(cache, tr, t, iters=iters)
+                    rec(f"showdown/{family}/{lib}-{policy}/threads{t}",
+                        st["req_s_p50"], family=family, lib=lib,
+                        policy=policy, threads=t,
+                        p90_req_s=round(st["req_s_p90"], 1),
+                        reps_discarded=st["reps_discarded"])
+
+            # -- our device paths (same trace, same capacity, k=8) --------
+            kcfg = KWayConfig(num_sets=capacity // ways, ways=ways,
+                              policy=pol_enum[policy])
+            ours = (("jnp-batched", "jnp", False),
+                    ("pallas-resident", "pallas", True))
+            hr_ours = {}
+            for name, backend, resident in ours:
+                if progress:
+                    progress(f"{family}/{name}-{policy}")
+                sim = SimConfig(cache=kcfg, backend=backend)
+                hr_ours[name] = replay_batched(sim, tr, batch=batch,
+                                               resident=resident)  # + warm
+                st = time_replay_percentiles(
+                    lambda sim=sim, r=resident: replay_batched(
+                        sim, tr, batch=batch, resident=r),
+                    iters=iters, warmup=1)
+                rec(f"showdown/{family}/{name}-{policy}/batch{batch}",
+                    n / st["p50"], family=family, lib=name, policy=policy,
+                    batch=batch, p90_req_s=round(n / st["p90"], 1),
+                    reps_discarded=st["reps_discarded"])
+
+            # -- deterministic hit-ratio parity records (the gated rows) --
+            hr = {
+                "cachetools": baseline_hit_ratio(
+                    make_baseline("cachetools", capacity, policy), tr),
+                "striped": baseline_hit_ratio(
+                    make_baseline("striped", capacity, policy, ways=ways),
+                    tr),
+                "jnp-batched": hr_ours["jnp-batched"],
+                "pallas-resident": hr_ours["pallas-resident"],
+            }
+            for lib, value in hr.items():
+                records.append({
+                    "id": f"showdown-hr/{family}/{policy}/{lib}",
+                    "family": family, "policy": policy, "lib": lib,
+                    "capacity": capacity, "n": n, "seed": seed,
+                    "batch": batch if lib.startswith(("jnp", "pallas"))
+                    else None,
+                    "metric": "hit_ratio", "value": round(float(value), 6),
+                    "comparable": True, "tol": 1e-6,
+                })
+
+    spec = {"quick": quick, "families": list(families),
+            "policies": list(policies), "threads": list(threads),
+            "capacity": capacity, "ways": ways, "batch": batch,
+            "n": n, "seed": seed, "trace_fingerprints": trace_fp}
+    return spec, records, []
+
+
 def synthetic_mix(quick: bool = False, progress=None, kinds=None):
     """Paper Figs. 27-30: fixed-hit-rate workloads per implementation."""
     if kinds is None:
@@ -681,6 +799,7 @@ FIGURES = {
     "throughput": (throughput_vs_batch, "throughput_vs_batch"),
     "throughput_resident": (throughput_resident, "throughput_resident"),
     "throughput_shards": (throughput_vs_shards, "throughput_vs_shards"),
+    "showdown": (showdown, "showdown"),
     "synthetic_mix": (synthetic_mix, "synthetic_mix"),
     "serving": (serving, "serving"),
     "serving_engine": (serving_engine, "serving_engine"),

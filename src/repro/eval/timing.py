@@ -117,13 +117,19 @@ def time_replay_percentiles(replay, iters=5, warmup=1):
     host synchronization) — so each sample covers the full replay with no
     per-chunk dispatch or transfers, which is what the figure's
     no-host-sync rows certify.
+
+    The timer blocks on ``replay()``'s return value itself: a callable that
+    returns an unrealized device array would otherwise be timed
+    dispatch-only (JAX dispatch is async on every backend, CPU included).
+    For callables that already sync — returning a Python int/float — the
+    block is a no-op.
     """
     for _ in range(warmup):
-        replay()
+        jax.block_until_ready(replay())
     samples = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        replay()
+        jax.block_until_ready(replay())
         samples.append(time.perf_counter() - t0)
     samples.sort()
     _tally(warmup, iters)

@@ -1,0 +1,215 @@
+"""Showdown harness tests: baseline cache semantics, hash parity with the
+device paths, the striped-vs-device differential anchor, threaded replay
+accounting, and the hit-ratio gate contract (dead gate = breach).
+"""
+import json
+
+import numpy as np
+import pytest
+
+cachetools = pytest.importorskip("cachetools")
+
+from repro.core import traces
+from repro.showdown import (CachetoolsCache, LockStripedKWay, hit_ratio,
+                            make_baseline, replay_threaded)
+from repro.showdown.baselines import hash_u32_host
+from repro.showdown.harness import ThreadedReplay
+
+
+def test_host_hash_matches_device_hash():
+    from repro.core import hashing
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1 << 32, size=256, dtype=np.uint32)
+    for seed in (0x51CA, 0, 7):
+        dev = np.asarray(hashing.hash_u32(keys, seed))
+        host = np.asarray([hash_u32_host(int(k), seed) for k in keys],
+                          np.uint32)
+        np.testing.assert_array_equal(dev, host)
+
+
+def test_cachetools_lru_semantics():
+    c = CachetoolsCache(2, policy="lru")
+    assert not c.access(1)
+    assert not c.access(2)
+    assert c.access(1)              # hit refreshes recency
+    assert not c.access(3)          # evicts 2 (the LRU entry)
+    assert c.access(1)
+    assert not c.access(2)          # 2 was evicted
+    assert len(c) == 2
+
+
+def test_striped_lru_semantics_single_set():
+    c = LockStripedKWay(num_sets=1, ways=2, policy="lru")
+    assert not c.access(1)
+    assert not c.access(2)
+    assert c.access(1)
+    assert not c.access(3)          # evicts 2
+    assert c.access(1)
+    assert not c.access(2)
+    assert len(c) == 2
+
+
+def test_striped_lfu_semantics_single_set():
+    c = LockStripedKWay(num_sets=1, ways=2, policy="lfu")
+    assert not c.access(1)
+    assert c.access(1)              # count(1)=2
+    assert not c.access(2)          # count(2)=1
+    assert not c.access(3)          # evicts 2 (lowest count)
+    assert c.access(1)
+    assert not c.access(2)
+
+
+def test_striped_validates_arguments():
+    with pytest.raises(ValueError, match="power of two"):
+        LockStripedKWay(num_sets=3, ways=2)
+    with pytest.raises(ValueError, match="unknown striped policy"):
+        LockStripedKWay(num_sets=2, ways=2, policy="fifo")
+    with pytest.raises(ValueError, match="unknown baseline library"):
+        make_baseline("redis", 64, "lru")
+    with pytest.raises(ValueError, match="unknown cachetools policy"):
+        CachetoolsCache(8, policy="arc")
+    with pytest.raises(ValueError, match="not divisible"):
+        make_baseline("striped", 100, "lru", ways=8)
+
+
+def test_striped_lru_is_bit_exact_with_device_sequential_replay():
+    """The differential anchor: same set hash, same sentinel fold, same
+    LRU victim rule -> the pure-Python striped cache reproduces the device
+    B=1 replay hit ratio EXACTLY (LRU timestamps are unique, so there are
+    no ties for tie-breaking to diverge on)."""
+    from repro.core.kway import KWayConfig
+    from repro.core.policies import Policy
+    from repro.core.simulate import SimConfig, replay
+
+    tr = traces.generate("zipf", 6_000, seed=42)
+    cfg = KWayConfig(num_sets=128, ways=8, policy=Policy.LRU)
+    hr_device = replay(SimConfig(cache=cfg), tr)
+    hr_striped = hit_ratio(make_baseline("striped", 1024, "lru", ways=8), tr)
+    assert hr_striped == pytest.approx(hr_device, abs=1e-12)
+
+
+def test_striped_lfu_tracks_device_replay_within_band():
+    # LFU counts tie constantly, and the two implementations break ties
+    # differently (way order vs insertion order) — a band, not bit parity.
+    from repro.core.kway import KWayConfig
+    from repro.core.policies import Policy
+    from repro.core.simulate import SimConfig, replay
+
+    tr = traces.generate("zipf", 6_000, seed=42)
+    cfg = KWayConfig(num_sets=128, ways=8, policy=Policy.LFU)
+    hr_device = replay(SimConfig(cache=cfg), tr)
+    hr_striped = hit_ratio(make_baseline("striped", 1024, "lfu", ways=8), tr)
+    assert abs(hr_striped - hr_device) < 0.05
+
+
+def test_hit_ratio_is_deterministic():
+    tr = traces.generate("oltp_mix", 3_000, seed=1)
+    a = hit_ratio(make_baseline("cachetools", 512, "lru"), tr)
+    b = hit_ratio(make_baseline("cachetools", 512, "lru"), tr)
+    assert a == b
+    assert 0.0 < a < 1.0
+
+
+def test_threaded_replay_covers_every_request():
+    tr = traces.generate("zipf", 1_000, seed=2)
+    for threads in (1, 2, 3, 8):
+        rep = ThreadedReplay(make_baseline("striped", 256, "lru"), tr,
+                             threads)
+        try:
+            assert sum(len(s) for s in rep._slices) == len(tr)
+            hits = rep()
+            assert 0 <= hits <= len(tr)
+        finally:
+            rep.close()
+    with pytest.raises(ValueError, match="threads"):
+        ThreadedReplay(make_baseline("striped", 256, "lru"), tr, 0)
+
+
+def test_threaded_replay_single_thread_matches_hit_ratio():
+    tr = traces.generate("zipf", 2_000, seed=3)
+    cache = make_baseline("cachetools", 512, "lfu")
+    with ThreadedReplay(cache, tr, 1) as rep:
+        hits = rep()
+    assert hits / len(tr) == pytest.approx(
+        hit_ratio(make_baseline("cachetools", 512, "lfu"), tr), abs=1e-12)
+
+
+def test_replay_threaded_stats_shape():
+    tr = traces.generate("zipf", 1_000, seed=4)
+    st = replay_threaded(make_baseline("striped", 256, "lru"), tr, 2,
+                         iters=2, warmup=1)
+    assert st["n"] == 1_000 and st["iters"] == 2
+    assert st["reps_discarded"] == 1
+    assert st["req_s_p50"] > 0 and st["req_s_p90"] <= st["req_s_p50"] * 1e6
+    assert 0 <= st["hits_last"] <= st["n"]
+
+
+def test_concurrent_access_is_consistent():
+    # 4 threads hammer one striped cache; every access returns a bool and
+    # the resident count never exceeds total capacity (per-set locks keep
+    # set invariants intact)
+    tr = traces.generate("zipf", 8_000, seed=5)
+    cache = make_baseline("striped", 256, "lru", ways=8)
+    with ThreadedReplay(cache, tr, 4) as rep:
+        for _ in range(3):
+            rep()
+    assert len(cache) <= 256
+    for d in cache._sets:
+        assert len(d) <= cache.ways
+
+
+# ---------------------------------------------------------------------------
+# gate contract
+# ---------------------------------------------------------------------------
+
+def _artifact(records):
+    from repro.eval import artifacts
+    return artifacts.make_artifact("showdown", {"quick": True}, records)
+
+
+def _hr_record(rid, value):
+    return {"id": rid, "metric": "hit_ratio", "value": value,
+            "comparable": True, "tol": 1e-6}
+
+
+def test_showdown_gate_pass_breach_and_dead(tmp_path):
+    from benchmarks.showdown import showdown_hit_ratio_gate
+    from repro.eval import artifacts
+
+    base_records = [_hr_record("showdown-hr/zipf/lru/cachetools", 0.5),
+                    _hr_record("showdown-hr/zipf/lru/striped", 0.4)]
+    base_path = tmp_path / "BENCH_showdown_quick.json"
+    artifacts.write_artifact(str(base_path), _artifact(base_records))
+
+    # pass: fresh values match the baseline
+    checked, breaches = showdown_hit_ratio_gate(str(base_path), base_records)
+    assert checked == 2 and not breaches
+
+    # breach: a diverged hit ratio is reported
+    drift = [_hr_record("showdown-hr/zipf/lru/cachetools", 0.5),
+             _hr_record("showdown-hr/zipf/lru/striped", 0.47)]
+    checked, breaches = showdown_hit_ratio_gate(str(base_path), drift)
+    assert checked == 2 and len(breaches) == 1
+    assert "striped" in breaches[0]
+
+    # dead gate: fresh ids that match nothing must be a breach, not a pass
+    alien = [_hr_record("showdown-hr/other/lru/cachetools", 0.5)]
+    checked, breaches = showdown_hit_ratio_gate(str(base_path), alien)
+    assert checked == 0 and breaches
+    assert "no-op" in breaches[0]
+
+
+def test_gate_survives_json_round_trip(tmp_path):
+    # the committed-baseline workflow: fresh records -> artifact file ->
+    # reload -> gate against itself must pass exactly
+    from benchmarks.showdown import showdown_hit_ratio_gate
+    from repro.eval import artifacts
+
+    tr = traces.generate("zipf", 2_000, seed=7)
+    value = hit_ratio(make_baseline("cachetools", 512, "lru"), tr)
+    recs = [_hr_record("showdown-hr/zipf/lru/cachetools",
+                       round(float(value), 6))]
+    path = tmp_path / "base.json"
+    artifacts.write_artifact(str(path), _artifact(recs))
+    checked, breaches = showdown_hit_ratio_gate(str(path), recs)
+    assert checked == 1 and not breaches

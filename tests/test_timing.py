@@ -1,0 +1,95 @@
+"""Regression tests for the steady-state timing protocol (eval/timing.py).
+
+The PR-7 bug: ``time_replay_percentiles`` never blocked on ``replay()``'s
+return value, so a callable returning an unrealized device array was timed
+dispatch-only (JAX dispatch is async on every backend, CPU included — a
+dispatch returns in microseconds while the computation runs for however
+long it likes).  The fake-async test fails on the pre-fix implementation by
+construction; the real-JAX test fails on it because dispatch-only p50 is
+orders of magnitude below the synced execution time.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.eval import timing
+
+
+class _FakeAsyncResult:
+    """Mimics an unrealized device array: the 'work' only completes when
+    block_until_ready() is called (jax.block_until_ready duck-types any
+    leaf with that method)."""
+
+    def __init__(self, tally, delay):
+        self._tally = tally
+        self._delay = delay
+
+    def block_until_ready(self):
+        time.sleep(self._delay)
+        self._tally["blocks"] += 1
+        return self
+
+
+def test_time_replay_percentiles_blocks_on_async_result():
+    delay = 0.01
+    tally = {"blocks": 0, "calls": 0}
+
+    def replay():
+        tally["calls"] += 1
+        return _FakeAsyncResult(tally, delay)
+
+    st = timing.time_replay_percentiles(replay, iters=3, warmup=1)
+    # every repetition — warmup included — must sync its result before the
+    # next starts; the pre-fix timer never blocked at all (blocks == 0)
+    assert tally["calls"] == 4
+    assert tally["blocks"] == 4
+    # ... and the samples must cover the blocked work, not just dispatch
+    assert st["p50"] >= 0.8 * delay
+    assert st["p90"] >= st["p50"]
+    assert st["iters"] == 3 and st["reps_discarded"] == 1
+
+
+def test_time_replay_percentiles_times_execution_not_dispatch():
+    x = jnp.ones((512, 512))
+
+    @jax.jit
+    def heavy(a):
+        for _ in range(4):
+            a = a @ a / 33.0
+        return a
+
+    jax.block_until_ready(heavy(x))          # compile outside the timers
+
+    # dispatch-only wall time of the async call (what the pre-fix timer
+    # effectively measured)
+    t0 = time.perf_counter()
+    y = heavy(x)
+    dispatch = time.perf_counter() - t0
+    jax.block_until_ready(y)
+
+    # synced wall time of one complete round trip
+    t0 = time.perf_counter()
+    jax.block_until_ready(heavy(x))
+    synced = time.perf_counter() - t0
+
+    st = timing.time_replay_percentiles(lambda: heavy(x), iters=3, warmup=1)
+    # the timed samples must be in the synced regime, far above dispatch
+    assert st["p50"] >= 0.3 * synced, (st, dispatch, synced)
+    if synced > 20 * dispatch:               # async dispatch is real here
+        assert st["p50"] > 5 * dispatch, (st, dispatch, synced)
+
+
+def test_timing_provenance_tallies():
+    timing.reset_timing_provenance()
+    timing.time_replay_percentiles(lambda: 0, iters=2, warmup=3)
+    prov = timing.timing_provenance()
+    assert prov == {"reps_discarded": 3, "steady_reps": 2, "timers": 1}
+
+
+def test_block_is_noop_for_host_values():
+    # callables that already sync (returning Python ints/floats) keep
+    # working unchanged through the blocking timer
+    st = timing.time_replay_percentiles(lambda: 42, iters=2, warmup=1)
+    assert st["iters"] == 2 and st["p50"] >= 0.0
