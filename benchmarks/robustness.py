@@ -1,0 +1,136 @@
+"""Robustness benchmark: validator coverage, recovery cost, ladder, overhead.
+
+The measurement lives in ``repro.eval.figures.robustness`` (DESIGN.md §13):
+the golden 512-request trace validated clean across policies and backends
+(the zero-false-positive pins), seeded bit-flip → scrub → replay-on
+recovery hit ratios, the degradation ladder under a forced VMEM breach,
+and the wall-clock overhead of fusing the invariant validator into the
+replay scan.
+
+    PYTHONPATH=src python -m benchmarks.robustness --quick \
+        [--out BENCH_robustness.json] \
+        [--gate benchmarks/baselines/BENCH_robustness_quick.json] \
+        [--overhead-gate 5.0]
+
+Every invocation writes the schema-versioned BENCH artifact and prints the
+record table; ``--gate`` diffs all deterministic ``robust-*`` records
+(clean-violation pins, scrub hit ratios and forced-eviction tallies, the
+ladder rung and its parity hit ratio) against the committed baseline via
+the shared ``_baseline_gate``/``_run_gate`` contract from
+``benchmarks.throughput`` — exit 3 on divergence, dead gate = breach.
+``--overhead-gate`` additionally enforces the absolute validator-overhead
+ceiling (<5% by default) on ``robust-overhead/validated-replay/pct``; a
+missing overhead record is a breach, never a silent pass.  This is the CI
+chaos-smoke entry point; ``run()`` is the CSV section for
+``benchmarks/run.py``.
+"""
+import argparse
+import sys
+
+from benchmarks.common import emit
+from benchmarks.throughput import _baseline_gate, _run_gate
+from repro.eval import figures
+
+
+def robustness_gate(baseline_path: str, records, tol: float = 1e-6):
+    """Diff a fresh run's deterministic ``robust-*`` records against the
+    committed baseline.  Everything gated here is seeded and replayed
+    bit-identically (validator pins, scrub recovery, ladder rung/parity),
+    so the band is essentially zero — a breach means the invariant
+    catalogue, the scrub semantics, or the ladder's rung selection moved.
+    Returns ``(checked, breaches)`` under the shared dead-gate contract.
+    """
+    points = []
+    for r in records:
+        if not r["id"].startswith("robust-") or not r.get("comparable"):
+            continue
+        points.append((r["id"],
+                       lambda rec, _r=r: [(_r["id"], _r["value"],
+                                           rec["value"])]))
+    return _baseline_gate(baseline_path, points, tol)
+
+
+def overhead_gate(records, ceiling: float):
+    """Absolute gate on the validator-overhead record: the fused validator
+    must cost < ``ceiling`` percent over the plain replay scan.  Returns
+    ``(checked, breaches)`` — no record found is a dead gate, a breach.
+    """
+    rec = next((r for r in records
+                if r["id"] == "robust-overhead/validated-replay/pct"), None)
+    if rec is None:
+        return 0, ["dead gate: no robust-overhead/validated-replay/pct "
+                   "record in this run"]
+    if rec["value"] >= ceiling:
+        return 1, [f"validator overhead {rec['value']:.2f}% >= "
+                   f"ceiling {ceiling:.2f}% (plain p50 "
+                   f"{rec['plain_p50_s']}s, validated p50 "
+                   f"{rec['validated_p50_s']}s)"]
+    return 1, []
+
+
+def _compare(args) -> int:
+    from repro.eval import artifacts
+
+    spec, records, skipped = figures.robustness(
+        quick=args.quick,
+        progress=None if args.quiet else
+        (lambda m: print(f"  [robustness] {m}", flush=True)))
+    art = artifacts.make_artifact("robustness", spec, records, skipped)
+    out = args.out or "BENCH_robustness.json"
+    artifacts.write_artifact(out, art)
+
+    print(f"\nrobustness (golden n={spec['n']}, {spec['num_sets']}x"
+          f"{spec['ways']} cache):")
+    print(f"{'record':<44} {'value':>12}")
+    for r in records:
+        extra = ""
+        if "rung" in r:
+            extra = f"  ({r['rung']})"
+        elif "clean_value" in r:
+            extra = f"  (clean {r['clean_value']})"
+        print(f"{r['id']:<44} {r['value']:>12.6g}{extra}")
+    print(f"\n{len(records)} records -> {out}")
+
+    rc = 0
+    if args.gate:
+        checked, breaches = robustness_gate(args.gate, records)
+        rc = _run_gate("robustness", args.gate, checked, breaches)
+    if args.overhead_gate is not None:
+        checked, breaches = overhead_gate(records, args.overhead_gate)
+        rc = max(rc, _run_gate("validator-overhead",
+                               f"<{args.overhead_gate}% ceiling",
+                               checked, breaches))
+    return rc
+
+
+def run(quick=False):
+    """CSV section for benchmarks/run.py."""
+    print("table,config,value")
+    _, records, _ = figures.robustness(quick=quick)
+    for r in records:
+        emit("robustness", r["id"], f"{r['value']:.6g}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.robustness",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default BENCH_robustness.json)")
+    ap.add_argument("--gate", default=None, metavar="BASELINE",
+                    help="diff the deterministic robust-* records against "
+                         "this committed baseline; exit 3 on divergence")
+    ap.add_argument("--overhead-gate", type=float, default=None,
+                    metavar="PCT", nargs="?", const=5.0,
+                    help="enforce the absolute validator-overhead ceiling "
+                         "in percent (default 5.0 when given bare); exit 3 "
+                         "on breach")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    return _compare(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

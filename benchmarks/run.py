@@ -4,7 +4,8 @@
 
 Sections: hit_ratio (Figs 4-13), throughput (Figs 14-26),
 synthetic_mix (Figs 27-30), showdown (Fig. 1 analogue: production caches
-vs our paths), theorem41 (§4), kernels, serving, roofline (reads
+vs our paths), theorem41 (§4), kernels, serving, robustness (validator /
+recovery / degradation ladder, DESIGN.md §13), roofline (reads
 dryrun_results.json when present).
 
 The figure sections are thin shims over ``repro.eval`` (DESIGN.md §7) — for
@@ -52,8 +53,8 @@ def main():
     if args.shards < 1 or args.shards & (args.shards - 1):
         ap.error(f"--shards must be a power of two, got {args.shards}")
 
-    from benchmarks import (hit_ratio, kernels_bench, serving, showdown,
-                            synthetic_mix, theorem41, throughput)
+    from benchmarks import (hit_ratio, kernels_bench, robustness, serving,
+                            showdown, synthetic_mix, theorem41, throughput)
 
     backends = (args.backend,) if args.backend else ("jnp", "pallas", "ref")
     shards = (1, args.shards) if args.shards > 1 else (1,)
@@ -68,6 +69,7 @@ def main():
         if args.quick else theorem41.run,
         "kernels": kernels_bench.run,
         "serving": serving.run,
+        "robustness": lambda: robustness.run(quick=args.quick),
         "roofline": _roofline_section,
     }
     for name, fn in sections.items():

@@ -35,8 +35,13 @@ def _leaf_name(i: int) -> str:
 
 
 def save(root: str, step: int, tree, extra: dict | None = None,
-         keep_last: int = 3) -> str:
-    """Atomically persist a pytree.  Returns the committed directory."""
+         keep_last: int = 3, commit: bool = True) -> str:
+    """Atomically persist a pytree.  Returns the committed directory.
+
+    ``commit=False`` writes every leaf but skips the atomic rename —
+    the fault injector's crash-mid-commit hook (robust/faults.py): the
+    orphaned ``.tmp`` must be invisible to ``latest_step``/``restore``.
+    """
     os.makedirs(root, exist_ok=True)
     final = os.path.join(root, f"step_{step:09d}")
     tmp = final + ".tmp"
@@ -44,11 +49,17 @@ def save(root: str, step: int, tree, extra: dict | None = None,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    leaves, treedef = jax.tree.flatten(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [leaf for _, leaf in flat]
     manifest = {
         "step": step,
         "treedef": str(treedef),
         "num_leaves": len(leaves),
+        # per-leaf identity so restore can name a divergence instead of
+        # failing deep in np.load
+        "paths": [jax.tree_util.keystr(kp) for kp, _ in flat],
+        "shapes": [list(np.shape(leaf)) for leaf in leaves],
+        "dtypes": [str(np.asarray(leaf).dtype) for leaf in leaves],
         "extra": extra or {},
     }
     for i, leaf in enumerate(leaves):
@@ -60,6 +71,8 @@ def save(root: str, step: int, tree, extra: dict | None = None,
         np.save(os.path.join(tmp, _leaf_name(i)), arr)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    if not commit:
+        return tmp  # crash before the rename: checkpoint never happened
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)  # atomic commit
@@ -87,20 +100,50 @@ def restore(root: str, step: int, like_tree, shardings=None):
     Returns (tree, extra).
     """
     d = os.path.join(root, f"step_{step:09d}")
+    if not os.path.isdir(d):
+        raise ValueError(
+            f"no committed checkpoint step_{step:09d} under {root!r} "
+            f"(latest committed: {latest_step(root)})")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    leaves, treedef = jax.tree.flatten(like_tree)
-    assert manifest["num_leaves"] == len(leaves), (
-        f"checkpoint has {manifest['num_leaves']} leaves, "
-        f"target structure has {len(leaves)}"
-    )
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = [leaf for _, leaf in flat]
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    ck_paths = manifest.get("paths")
+    if ck_paths is not None and ck_paths != paths:
+        missing = [p for p in paths if p not in ck_paths]
+        extra_l = [p for p in ck_paths if p not in paths]
+        raise ValueError(
+            f"checkpoint {d} does not match the target structure: "
+            f"missing from checkpoint: {missing or 'none'}; "
+            f"extra in checkpoint: {extra_l or 'none'}"
+            + ("" if missing or extra_l else
+               f"; leaf order differs: {ck_paths} vs {paths}"))
+    if manifest["num_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint {d} has {manifest['num_leaves']} leaves, target "
+            f"structure has {len(leaves)} — structures diverged (manifest "
+            "predates per-leaf paths, so the divergent leaf cannot be "
+            "named)")
+    ck_shapes = manifest.get("shapes")
+    if ck_shapes is not None:
+        for i, ref in enumerate(leaves):
+            if tuple(ck_shapes[i]) != tuple(np.shape(ref)):
+                raise ValueError(
+                    f"checkpoint {d} leaf {paths[i]!r} has shape "
+                    f"{tuple(ck_shapes[i])}, target expects "
+                    f"{tuple(np.shape(ref))}")
     loaded = []
     shard_leaves = (
         jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
     )
     for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
         arr = np.load(os.path.join(d, _leaf_name(i)))
-        assert tuple(arr.shape) == tuple(ref.shape), (i, arr.shape, ref.shape)
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"checkpoint {d} leaf {paths[i]!r} ({_leaf_name(i)}) has "
+                f"shape {tuple(arr.shape)}, target expects "
+                f"{tuple(np.shape(ref))}")
         jarr = jax.numpy.asarray(arr).astype(ref.dtype)
         if shd is not None:
             jarr = jax.device_put(jarr, shd)

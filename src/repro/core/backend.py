@@ -306,6 +306,14 @@ class PallasBackend(CacheBackend):
         """
         from repro.kernels import ops
         if not self.resident_fits():
+            from repro.robust import events
+            lane_bytes = self.cfg.num_sets * 128 * 4
+            events.record(
+                component="pallas.replay", reason="vmem_budget",
+                fallback_from="pallas-resident", fallback_to="chunked-scan",
+                detail=(f"resident footprint {2 * 5 * lane_bytes} B exceeds "
+                        f"budget {RESIDENT_VMEM_BUDGET} B "
+                        f"(num_sets={self.cfg.num_sets})"))
             return self.replay_scan(state, chunks, enabled,
                                     tinylfu=tinylfu, sketch=sketch)
         return ops.replay_resident(self.cfg, state, chunks, enabled,

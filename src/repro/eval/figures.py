@@ -791,6 +791,181 @@ def serving_engine(quick: bool = False, progress=None, slots=None,
     return spec, records, []
 
 
+def robustness(quick: bool = False, progress=None):
+    """DESIGN.md §13: validator coverage, recovery cost, ladder
+    observability, and validator overhead.
+
+    Four record groups:
+
+      * ``robust-clean/{policy}/{backend}/violations`` — the invariant
+        validator over the final state of the golden 512-request zipf
+        trace, all 5 policies on the jnp and pallas backends (plus the
+        sequential ref oracle on LRU; every policy in full mode).  Pinned
+        at 0.0 with tol 0 — the zero-false-positive contract.
+      * ``robust-scrub/{site}/...`` — inject one seeded bit-flip at the
+        replay midpoint, scrub-and-invalidate, replay on: the recovered
+        hit ratio and the forced-eviction tally, both deterministic from
+        ``(seed, site, step)`` and pinned against the committed band.
+      * ``robust-ladder/vmem-breach/...`` — replay under a forced
+        zero-VMEM budget: the ladder must land on the chunked-scan rung,
+        record observable degradation events, and still produce the clean
+        run's exact hit count (rungs are pinned bit-identical).
+      * ``robust-overhead/validated-replay/pct`` — wall-clock cost of
+        fusing the validator into the replay scan at the quick cadence,
+        vs the plain scan (``comparable: false``; the CLI gates the
+        absolute <5% target).
+    """
+    from repro.core import backend as backend_mod
+    from repro.core import trace_io, traces
+    from repro.core.kway import KWayConfig
+    from repro.core.router import pad_chunks
+    from repro.robust import check_cache, events, faults, resilient_replay
+    from repro.robust.ladder import RUNGS
+    from repro.robust.recovery import scrub, validated_replay
+
+    num_sets, ways, batch, seed = 16, 4, 8, 2026
+    # the golden-trace recipe (tests/test_golden_trace.py)
+    tr = traces.generate("zipf", 512, seed=seed, catalog=96)
+    tr[::13] = 0
+    chunks, enabled = pad_chunks(tr, batch)
+    n = int(len(tr))
+    records = []
+    policies = {"lru": Policy.LRU, "lfu": Policy.LFU, "fifo": Policy.FIFO,
+                "random": Policy.RANDOM, "hyperbolic": Policy.HYPERBOLIC}
+
+    def cfg_for(pol):
+        return KWayConfig(num_sets=num_sets, ways=ways, policy=pol)
+
+    # ---- clean validator: zero false positives -------------------------
+    for pname, pol in policies.items():
+        cfg = cfg_for(pol)
+        for backend in ("jnp", "pallas"):
+            if progress:
+                progress(f"clean {pname}/{backend}")
+            be = backend_mod.make_backend(backend, cfg)
+            _, _, st, _ = be.replay(be.init(), chunks, enabled)
+            bad = int((np.asarray(check_cache(cfg, st, vals_mode="key")
+                                  .lane_bits) != 0).sum())
+            records.append({
+                "id": f"robust-clean/{pname}/{backend}/violations",
+                "policy": pname, "backend": backend, "n": n,
+                "metric": "violating_lanes", "value": float(bad),
+                "comparable": True, "tol": 0.0})
+        ref_policies = ("lru",) if quick else tuple(policies)
+        if pname in ref_policies:
+            if progress:
+                progress(f"clean {pname}/ref")
+            be = backend_mod.make_backend("ref", cfg)
+            st = be.init()
+            for i in range(chunks.shape[0]):
+                keys_i = np.asarray(chunks[i], np.uint32)
+                st, _, _, _, _ = be.access(
+                    st, keys_i, keys_i.astype(np.int32),
+                    enabled=np.asarray(enabled[i]))
+            bad = int((np.asarray(check_cache(cfg, st, vals_mode="key")
+                                  .lane_bits) != 0).sum())
+            records.append({
+                "id": f"robust-clean/{pname}/ref/violations",
+                "policy": pname, "backend": "ref", "n": n,
+                "metric": "violating_lanes", "value": float(bad),
+                "comparable": True, "tol": 0.0})
+
+    # ---- scrub recovery: inject -> detect -> repair -> replay on -------
+    cfg = cfg_for(Policy.LRU)
+    be = backend_mod.make_backend("jnp", cfg)
+    hits_clean, _, _, _ = be.replay(be.init(), chunks, enabled)
+    hr_clean = float(np.asarray(hits_clean).sum()) / n
+    records.append({
+        "id": "robust-scrub/clean/hit_ratio", "site": None, "n": n,
+        "metric": "hit_ratio", "value": round(hr_clean, 6),
+        "comparable": True, "tol": 1e-6})
+    half = chunks.shape[0] // 2
+    for site in ("keys", "fprint", "meta_a"):
+        if progress:
+            progress(f"scrub {site}")
+        h1, _, st, _ = be.replay(be.init(), chunks[:half], enabled[:half])
+        st, _ = faults.flip_bit(st, site, seed=seed, step=half)
+        st, forced, _ = scrub(cfg, st, vals_mode="key")
+        h2, _, st, _ = be.replay(st, chunks[half:], enabled[half:])
+        hr = (float(np.asarray(h1).sum()) + float(np.asarray(h2).sum())) / n
+        records.append({
+            "id": f"robust-scrub/{site}/hit_ratio", "site": site, "n": n,
+            "seed": seed, "step": half, "metric": "hit_ratio",
+            "value": round(hr, 6), "clean_value": round(hr_clean, 6),
+            "comparable": True, "tol": 1e-6})
+        records.append({
+            "id": f"robust-scrub/{site}/forced_evictions", "site": site,
+            "seed": seed, "step": half, "metric": "forced_evictions",
+            "value": float(int(forced)), "comparable": True, "tol": 0.0})
+
+    # ---- degradation ladder under a forced VMEM breach -----------------
+    if progress:
+        progress("ladder vmem-breach")
+    c0 = events.cursor()
+    budget = backend_mod.RESIDENT_VMEM_BUDGET
+    try:
+        backend_mod.RESIDENT_VMEM_BUDGET = 0
+        out = resilient_replay(cfg, chunks, enabled)
+    finally:
+        backend_mod.RESIDENT_VMEM_BUDGET = budget
+    n_events = len(events.since(c0))
+    records.append({
+        "id": "robust-ladder/vmem-breach/rung", "metric": "ladder_rung",
+        "rung": out.rung, "value": float(RUNGS.index(out.rung)),
+        "comparable": True, "tol": 0.0})
+    records.append({
+        "id": "robust-ladder/vmem-breach/hit_ratio", "metric": "hit_ratio",
+        "value": round(float(np.asarray(out.hits).sum()) / n, 6),
+        "clean_value": round(hr_clean, 6),
+        "comparable": True, "tol": 1e-6})
+    records.append({
+        "id": "robust-ladder/vmem-breach/events", "metric": "event_count",
+        "value": float(n_events), "comparable": False})
+
+    # ---- validator overhead on the quick replay ------------------------
+    interval = 1
+    ov_sets, ov_ways, ov_batch = 512, 8, 256
+    ov_n = 8_192 if quick else 65_536
+    iters = 3 if quick else 5
+    if progress:
+        progress(f"overhead n={ov_n} interval={interval}")
+    ov_cfg = KWayConfig(num_sets=ov_sets, ways=ov_ways, policy=Policy.LRU)
+    ov_tr = traces.generate("zipf", ov_n, seed=7)
+    ov_chunks, ov_enabled = pad_chunks(ov_tr, ov_batch)
+    ov_be = backend_mod.make_backend("jnp", ov_cfg)
+
+    def plain():
+        h, _, _, _ = ov_be.replay(ov_be.init(), ov_chunks, ov_enabled)
+        return int(np.asarray(h).sum())
+
+    def validated():
+        h, _, _, _, alarm = validated_replay(
+            ov_cfg, ov_chunks, ov_enabled, interval=interval,
+            vals_mode="key")
+        return int(np.asarray(h).sum()) + int(alarm) * 0
+
+    t_plain = time_replay_percentiles(plain, iters=iters, warmup=1)
+    t_val = time_replay_percentiles(validated, iters=iters, warmup=1)
+    pct = (t_val["p50"] - t_plain["p50"]) / t_plain["p50"] * 100.0
+    records.append({
+        "id": "robust-overhead/validated-replay/pct",
+        "metric": "overhead_pct", "value": round(pct, 2),
+        "interval": interval, "n": ov_n, "batch": ov_batch,
+        "capacity": ov_sets * ov_ways,
+        "plain_p50_s": round(t_plain["p50"], 6),
+        "validated_p50_s": round(t_val["p50"], 6),
+        "comparable": False})
+
+    spec = {"quick": quick, "num_sets": num_sets, "ways": ways,
+            "batch": batch, "n": n, "seed": seed,
+            "trace_fingerprint": trace_io.trace_fingerprint(tr),
+            "scrub_sites": ["keys", "fprint", "meta_a"],
+            "overhead": {"num_sets": ov_sets, "ways": ov_ways,
+                         "batch": ov_batch, "n": ov_n,
+                         "interval": interval}}
+    return spec, records, []
+
+
 #: CLI name -> (function, canonical figure name)
 FIGURES = {
     "hit_ratio": (hit_ratio_vs_associativity, "hit_ratio_vs_associativity"),
@@ -803,4 +978,5 @@ FIGURES = {
     "synthetic_mix": (synthetic_mix, "synthetic_mix"),
     "serving": (serving, "serving"),
     "serving_engine": (serving_engine, "serving_engine"),
+    "robustness": (robustness, "robustness"),
 }

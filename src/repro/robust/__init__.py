@@ -1,0 +1,47 @@
+"""Fault tolerance for the k-way serving stack (DESIGN.md §13).
+
+The paper's pitch — limited associativity makes concurrent caches simple —
+is also what makes them *defensible*: the whole cache is a handful of dense
+``[sets, ways]`` lanes with explicit metadata, so structural corruption is
+cheap to detect (one vectorized pass) and cheap to repair (reset the
+damaged sets and keep serving).  This package wires that observation
+through the stack:
+
+  * :mod:`repro.robust.invariants` — jittable structural validators over
+    ``KWayState``, the TinyLFU sketch and the serving engine's
+    ``ServeState``, returning violation bitmaps plus a host-side
+    ``explain()`` that names set/way/slot/page;
+  * :mod:`repro.robust.faults` — a deterministic fault injector (seeded
+    bit-flips, NaN injection, duplicate/stale slot entries, crash-mid-
+    commit, request-stream faults), every fault reproducible from
+    ``(seed, site, step)``;
+  * :mod:`repro.robust.recovery` — scrub-and-invalidate repair (corrupted
+    sets reset to EMPTY, tallied as forced evictions) and engine
+    checkpoint/restore through ``ckpt/manager.py``'s atomic-rename
+    protocol;
+  * :mod:`repro.robust.ladder` — the graceful-degradation backend ladder
+    (pallas resident → chunked scan → jnp) with every fallback recorded as
+    an observable :mod:`repro.robust.events` event;
+  * :mod:`repro.robust.watchdog` — bounded retry/backoff around host↔device
+    sync points (the serving tick's ``device_get``, the showdown harness's
+    worker joins).
+"""
+from repro.robust import events, faults  # noqa: F401
+from repro.robust.faults import FaultReport  # noqa: F401
+from repro.robust.invariants import (  # noqa: F401
+    CacheReport,
+    ServeReport,
+    check_cache,
+    check_serve,
+    explain_cache,
+    explain_serve,
+)
+from repro.robust.ladder import ReplayOutcome, resilient_replay  # noqa: F401
+from repro.robust.recovery import (  # noqa: F401
+    CheckpointedEngine,
+    restore_engine,
+    save_engine,
+    scrub,
+    validated_replay,
+)
+from repro.robust.watchdog import WatchdogTimeout, watch  # noqa: F401

@@ -1,0 +1,89 @@
+"""Degradation-event log — fallbacks and recoveries made observable.
+
+Before PR 8 the system degraded *silently*: the pallas replay fell back to
+the chunked scan when the cache state outgrew the VMEM budget, and nothing
+recorded that the fast path was not taken.  This module is the single
+process-wide log every degradation writes to — backend-ladder descents
+(:mod:`repro.robust.ladder`), the VMEM-budget fallback in
+``PallasBackend.replay``, watchdog re-waits (:mod:`repro.robust.watchdog`)
+and scrub repairs — so engine/replay stats, the robustness benchmark and
+the chaos tests can all see *that* and *why* a slow path ran.
+
+The log is append-only within a process; readers hold a ``cursor()`` and
+ask for events ``since(cursor)`` (the serving engine does this for its
+``stats["degradation_events"]``), so one component draining the log can
+never hide events from another.  ``clear()`` exists for test isolation.
+
+This module deliberately imports nothing from the rest of the repo: core
+layers (``core/backend.py``) may record events without a dependency cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+__all__ = ["DegradationEvent", "record", "log", "cursor", "since", "count",
+           "clear"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationEvent:
+    component: str          # e.g. "pallas.replay", "engine.tick_sync"
+    reason: str             # "vmem_budget" | "kernel_failure" |
+    #                         "validator_alarm" | "sync_timeout" | ...
+    fallback_from: str = ""  # rung/path abandoned ("" for non-ladder events)
+    fallback_to: str = ""    # rung/path taken instead
+    detail: str = ""
+    time_unix: float = 0.0
+
+
+_LOCK = threading.Lock()
+_LOG: list[DegradationEvent] = []
+
+
+def record(component: str, reason: str, fallback_from: str = "",
+           fallback_to: str = "", detail: str = "") -> DegradationEvent:
+    """Append one event; returns it (handy for in-line logging)."""
+    ev = DegradationEvent(component=component, reason=reason,
+                          fallback_from=fallback_from,
+                          fallback_to=fallback_to, detail=detail,
+                          time_unix=time.time())
+    with _LOCK:
+        _LOG.append(ev)
+    return ev
+
+
+def log() -> tuple[DegradationEvent, ...]:
+    """The full event log (immutable snapshot)."""
+    with _LOCK:
+        return tuple(_LOG)
+
+
+def cursor() -> int:
+    """Position marker: pass to ``since``/``count`` to scope a reader to
+    events recorded after this call."""
+    with _LOCK:
+        return len(_LOG)
+
+
+def since(start: int) -> tuple[DegradationEvent, ...]:
+    with _LOCK:
+        return tuple(_LOG[start:])
+
+
+def count(component: str | None = None, reason: str | None = None,
+          start: int = 0) -> int:
+    """Number of events (optionally filtered) recorded at/after ``start``."""
+    return sum(
+        1 for ev in since(start)
+        if (component is None or ev.component == component)
+        and (reason is None or ev.reason == reason)
+    )
+
+
+def clear() -> None:
+    """Drop all events — test isolation only; production readers use
+    cursors so they never need to mutate the log."""
+    with _LOCK:
+        _LOG.clear()

@@ -1,0 +1,208 @@
+"""Deterministic fault injector — every fault reproducible from
+``(seed, site, step)``.
+
+Chaos testing is only useful if a failing run can be replayed exactly, so
+every injector here derives its randomness from
+``numpy.random.default_rng([seed, step, crc32(site)])`` — no global RNG, no
+process-dependent ``hash()`` (Python string hashing is salted per process).
+Calling the same injector with the same arguments on the same state always
+flips the same bit in the same lane.
+
+Fault classes (ISSUE/DESIGN.md §13 fault model):
+
+  * :func:`flip_bit` — single-event upset in a cache lane (``keys`` /
+    ``fprint`` / ``vals`` / ``meta_a`` / ``meta_b``) of an occupied slot.
+    Metadata flips are confined to the high bits (24..31) so the corruption
+    is out-of-bounds *detectable* rather than a silent policy nudge.
+  * :func:`inject_nan` — NaN dropped into a KV pool tensor.
+  * :func:`double_book_page` — a slot's page-table entry redirected onto a
+    private page already booked elsewhere (referential-integrity break).
+  * :func:`stale_owner` — a private page's owner lane orphaned or pointed
+    at an inactive slot.
+  * :func:`crashed_save` — checkpoint written but never committed (kill
+    between the leaf write and the atomic rename), via
+    ``ckpt.manager.save(commit=False)``.
+  * :func:`corrupt_trace` — request-stream faults: duplicated submits and
+    poison keys (the reserved ``EMPTY_KEY`` sentinel and 0), which the
+    stack must *survive*, not detect.
+
+Injectors are host-side (they pull the arrays once); all return
+``(mutated, FaultReport)`` so a test can assert exactly what was injected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import EMPTY_KEY
+from repro.core.kway import KWayState
+
+__all__ = ["FaultReport", "rng_for", "flip_bit", "inject_nan",
+           "double_book_page", "stale_owner", "crashed_save",
+           "corrupt_trace"]
+
+#: cache-lane sites accepted by flip_bit
+LANE_SITES = ("keys", "fprint", "vals", "meta_a", "meta_b")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultReport:
+    """What was injected, precisely enough to assert detection against."""
+
+    kind: str          # "bit_flip" | "nan" | "double_book" | ...
+    site: str          # lane/tensor name or stream kind
+    index: tuple       # coordinates of the mutated element(s)
+    bit: int           # flipped bit position (-1 when not a bit flip)
+    before: float      # prior value (as float for uniformity)
+    after: float       # mutated value
+    seed: int
+    step: int
+
+
+def rng_for(seed: int, site: str, step: int = 0) -> np.random.Generator:
+    """The (seed, site, step) → RNG contract all injectors share."""
+    return np.random.default_rng([seed, step, zlib.crc32(site.encode())])
+
+
+def flip_bit(state: KWayState, site: str, seed: int,
+             step: int = 0) -> tuple[KWayState, FaultReport]:
+    """Flip one bit in an *occupied* lane of ``site``.  Raises
+    ``ValueError`` on an empty cache (nothing to corrupt) or unknown site.
+    """
+    if site not in LANE_SITES:
+        raise ValueError(f"flip_bit site must be one of {LANE_SITES}, "
+                         f"got {site!r}")
+    rng = rng_for(seed, site, step)
+    keys = np.asarray(state.keys)
+    occ = np.argwhere(keys != np.uint32(EMPTY_KEY))
+    if occ.size == 0:
+        raise ValueError("flip_bit: cache has no occupied lanes")
+    s, w = (int(v) for v in occ[rng.integers(len(occ))])
+    if site in ("meta_a", "meta_b"):
+        bit = int(rng.integers(24, 32))   # out-of-bounds-detectable range
+    else:
+        bit = int(rng.integers(0, 32))
+    arr = np.array(getattr(state, site))
+    before = int(arr[s, w])
+    arr[s, w] = np.asarray(
+        np.uint32(arr[s, w]) ^ np.uint32(1 << bit)).astype(arr.dtype)
+    report = FaultReport(kind="bit_flip", site=site, index=(s, w), bit=bit,
+                         before=float(before), after=float(int(arr[s, w])),
+                         seed=seed, step=step)
+    return dataclasses.replace(state, **{site: jnp.asarray(arr)}), report
+
+
+def inject_nan(pool, seed: int, step: int = 0,
+               site: str = "pool_k") -> tuple[jnp.ndarray, FaultReport]:
+    """Set one element of a (floating) KV pool tensor to NaN."""
+    rng = rng_for(seed, site, step)
+    arr = np.array(jnp.asarray(pool, jnp.float32))
+    flat = int(rng.integers(arr.size))
+    idx = np.unravel_index(flat, arr.shape)
+    before = float(arr[idx])
+    arr[idx] = np.nan
+    report = FaultReport(kind="nan", site=site,
+                         index=tuple(int(i) for i in idx), bit=-1,
+                         before=before, after=float("nan"),
+                         seed=seed, step=step)
+    return jnp.asarray(arr).astype(jnp.asarray(pool).dtype), report
+
+
+def _active_private_entries(ecfg, st) -> np.ndarray:
+    """[n, 3] rows (slot, entry_index, page_id) of valid private-page
+    page-table entries of active slots."""
+    shared = ecfg.num_sets * ecfg.ways
+    tbl = np.asarray(st.page_tbl)
+    n_pages = np.asarray(st.n_pages)
+    active = np.asarray(st.active)
+    rows = []
+    for slot in np.flatnonzero(active):
+        for j in range(int(n_pages[slot])):
+            pg = int(tbl[slot, j])
+            if pg >= shared:
+                rows.append((int(slot), j, pg))
+    return np.asarray(rows, np.int64).reshape(-1, 3)
+
+
+def double_book_page(ecfg, st, seed: int, step: int = 0):
+    """Redirect one valid page-table entry onto a *different* private page
+    that is already booked — two slots (or two rows of one slot) now claim
+    the same private KV page.  Raises ``ValueError`` when fewer than two
+    private bookings exist to collide."""
+    rng = rng_for(seed, "page_tbl", step)
+    entries = _active_private_entries(ecfg, st)
+    if len(entries) < 2:
+        raise ValueError("double_book_page: need >= 2 booked private pages")
+    i, j = rng.choice(len(entries), size=2, replace=False)
+    victim_slot, victim_entry, before_pg = (int(v) for v in entries[i])
+    target_pg = int(entries[j][2])
+    tbl = np.array(st.page_tbl)
+    tbl[victim_slot, victim_entry] = target_pg
+    report = FaultReport(kind="double_book", site="page_tbl",
+                         index=(victim_slot, victim_entry), bit=-1,
+                         before=float(before_pg), after=float(target_pg),
+                         seed=seed, step=step)
+    return dataclasses.replace(st, page_tbl=jnp.asarray(tbl)), report
+
+
+def stale_owner(ecfg, st, seed: int, step: int = 0):
+    """Corrupt the owner lane of one booked private page: orphan it
+    (``owner = -1``) or point it at a different slot.  Raises
+    ``ValueError`` when no private page is booked."""
+    rng = rng_for(seed, "owner", step)
+    owner = np.array(st.owner)
+    booked = np.flatnonzero(owner >= 0)
+    if booked.size == 0:
+        raise ValueError("stale_owner: no booked private pages")
+    p = int(booked[rng.integers(booked.size)])
+    before = int(owner[p])
+    wrong = int(rng.integers(-1, ecfg.max_batch))
+    if wrong == before:   # ensure the fault is a fault
+        wrong = -1 if before != -1 else (before + 1) % ecfg.max_batch
+    owner[p] = wrong
+    report = FaultReport(kind="stale_owner", site="owner", index=(p,),
+                         bit=-1, before=float(before), after=float(wrong),
+                         seed=seed, step=step)
+    return dataclasses.replace(st, owner=jnp.asarray(owner)), report
+
+
+def crashed_save(tree, root, step: int) -> str:
+    """Simulate a crash between the checkpoint write and its commit: all
+    leaves land on disk under ``step_N.tmp`` but the atomic rename never
+    happens, so ``latest_step``/``restore`` must ignore it.  Returns the
+    orphaned tmp path."""
+    from repro.ckpt import manager
+    return manager.save(root, step, tree, commit=False)
+
+
+def corrupt_trace(trace, kind: str, seed: int, step: int = 0,
+                  n: int = 4) -> tuple[np.ndarray, FaultReport]:
+    """Request-stream faults the stack must survive.
+
+    ``kind="dup"``: ``n`` entries overwritten with their predecessor
+    (duplicate submits).  ``kind="poison"``: ``n`` entries set to reserved
+    keys — alternating ``EMPTY_KEY`` (must be folded by ``sanitize_keys``,
+    never stored raw) and 0.
+    """
+    if kind not in ("dup", "poison"):
+        raise ValueError(f"corrupt_trace kind must be 'dup'|'poison', "
+                         f"got {kind!r}")
+    rng = rng_for(seed, f"trace.{kind}", step)
+    out = np.array(trace, np.uint32)
+    if out.size < 2:
+        raise ValueError("corrupt_trace: trace too short")
+    pos = rng.choice(np.arange(1, out.size), size=min(n, out.size - 1),
+                     replace=False)
+    if kind == "dup":
+        out[pos] = out[pos - 1]
+    else:
+        out[pos] = np.where(np.arange(pos.size) % 2 == 0,
+                            np.uint32(EMPTY_KEY), np.uint32(0))
+    report = FaultReport(kind=kind, site="trace",
+                         index=tuple(int(p) for p in np.sort(pos)), bit=-1,
+                         before=float("nan"), after=float("nan"),
+                         seed=seed, step=step)
+    return out, report

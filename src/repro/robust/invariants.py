@@ -1,0 +1,330 @@
+"""Jittable structural invariants over cache and serving state.
+
+The k-way cache is dense, fixed-shape state with explicit metadata — the
+paper's simplicity argument — which means "is this state well-formed?" is
+one vectorized pass, not a pointer walk.  This module encodes the invariant
+catalogue (DESIGN.md §13) as pure functions returning **violation
+bitmaps**: a ``uint32`` word per lane/slot/page whose bits name the failed
+checks, plus an OR-reduced scalar so a replay loop can carry "anything
+wrong yet?" as one word.  Host-side ``explain_*`` functions turn a report
+into strings naming set/way/slot/page and the violated invariant.
+
+Everything here is read-only and jit-safe; the scrub repair that *acts* on
+a report lives in :mod:`repro.robust.recovery`.
+
+Invariants over ``KWayState`` (per lane, given the frozen ``core/hashing``
+contract):
+
+  * ``fprint_mismatch`` — an occupied lane's stored fingerprint must equal
+    ``hashing.fingerprint(key)`` (soa layout only; aos keeps the lane
+    unused);
+  * ``empty_lane_dirty`` — an ``EMPTY_KEY`` lane must be fully zeroed
+    (fprint, vals, meta_a, meta_b): inserts never un-occupy a lane, so a
+    dirty empty lane is corruption, not wear;
+  * ``wrong_set`` — an occupied key must live in ``set_index(key)``'s row;
+  * ``dup_key_in_set`` — a key may occupy at most one way of its set;
+  * ``meta_bounds`` — policy metadata must be in range (e.g. LRU/FIFO
+    timestamps in ``[0, clock)``, LFU counts in ``[1, clock]``, RANDOM
+    metadata identically zero, Hyperbolic ``t0`` before ``clock``);
+  * ``vals_convention`` — optional payload check: replay paths store
+    ``val == key`` (``vals_mode="key"``), the serving engine stores
+    ``val == set*ways + way`` (``vals_mode="slot"``).
+
+Invariants over the TinyLFU sketch:
+
+  * ``additions`` in ``[0, sample)`` — ``record`` ages at ``sample``;
+  * ``popcount(door) <= additions`` — each addition sets at most one door
+    bit and aging clears both.
+
+Invariants over ``ServeState`` (slot/queue referential integrity):
+
+  * per slot: ``pos``/``n_gen``/``n_pages`` ranges, ``pos`` covered by the
+    allocated pages, page-table entries in ``[0, total_pages)`` and
+    pairwise distinct within the valid prefix;
+  * per private page: booked by at most one slot, the booking slot matches
+    the ``owner`` lane, owners point at active slots and stay in range;
+  * global: no NaN in the KV pools, stat counters non-negative with
+    ``prefix_hits <= prefix_lookups``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.hashing import EMPTY_KEY
+from repro.core.kway import KWayConfig, KWayState
+from repro.core.policies import Policy
+
+# ---------------------------------------------------------------------------
+# bit catalogues — explain_* and the chaos tests key off these names
+# ---------------------------------------------------------------------------
+
+CACHE_CHECKS = {
+    0: "fprint_mismatch",
+    1: "empty_lane_dirty",
+    2: "wrong_set",
+    3: "dup_key_in_set",
+    4: "meta_bounds",
+    5: "vals_convention",
+}
+CACHE_GLOBAL_CHECKS = {0: "clock_negative"}
+SKETCH_CHECKS = {0: "sketch_additions_range", 1: "sketch_door_popcount"}
+SLOT_CHECKS = {
+    0: "pos_range",
+    1: "page_accounting",
+    2: "page_table_range",
+    3: "gen_range",
+    4: "dup_page_in_row",
+}
+PAGE_CHECKS = {
+    0: "double_booked",
+    1: "owner_mismatch",
+    2: "owner_inactive",
+    3: "owner_range",
+}
+SERVE_GLOBAL_CHECKS = {0: "nan_in_kv", 1: "counter_bounds"}
+
+
+def _bit(cond: jnp.ndarray, i: int) -> jnp.ndarray:
+    return jnp.where(cond, jnp.uint32(1 << i), jnp.uint32(0))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CacheReport:
+    """Violation bitmap over one ``KWayState``."""
+
+    lane_bits: jnp.ndarray    # uint32 [S, k] — CACHE_CHECKS bits per lane
+    global_bits: jnp.ndarray  # uint32 []     — CACHE_GLOBAL_CHECKS bits
+    bits: jnp.ndarray         # uint32 []     — OR of everything
+
+    def clean(self) -> bool:
+        return int(jax.device_get(self.bits)) == 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServeReport:
+    """Violation bitmap over one ``ServeState`` (cache report included)."""
+
+    cache: CacheReport
+    slot_bits: jnp.ndarray    # uint32 [max_slots] — SLOT_CHECKS bits
+    page_bits: jnp.ndarray    # uint32 [private_pages] — PAGE_CHECKS bits
+    global_bits: jnp.ndarray  # uint32 [] — SERVE_GLOBAL_CHECKS+SKETCH bits
+    bits: jnp.ndarray         # uint32 [] — OR of everything
+
+    def clean(self) -> bool:
+        return int(jax.device_get(self.bits)) == 0
+
+
+# ---------------------------------------------------------------------------
+# cache invariants
+# ---------------------------------------------------------------------------
+
+def cache_lane_bits(cfg: KWayConfig, state: KWayState,
+                    vals_mode: str = "any") -> jnp.ndarray:
+    """Per-lane violation bits, uint32 [S, k].  Pure traced function —
+    usable inside a replay scan (``recovery.validated_replay``) as well as
+    under the jitted ``check_cache`` wrapper."""
+    if vals_mode not in ("any", "key", "slot"):
+        raise ValueError(
+            f"vals_mode must be 'any', 'key' or 'slot', got {vals_mode!r}")
+    keys, fpr = state.keys, state.fprint
+    s, k = cfg.num_sets, cfg.ways
+    occupied = keys != EMPTY_KEY
+    empty = ~occupied
+    bits = jnp.zeros((s, k), jnp.uint32)
+
+    if cfg.layout == "soa":
+        bits |= _bit(occupied & (fpr != hashing.fingerprint(keys)), 0)
+        empty_dirty = empty & ((fpr != 0) | (state.vals != 0)
+                               | (state.meta_a != 0) | (state.meta_b != 0))
+    else:  # aos: the fprint lane is unused by the probe — exclude it
+        empty_dirty = empty & ((state.vals != 0) | (state.meta_a != 0)
+                               | (state.meta_b != 0))
+    bits |= _bit(empty_dirty, 1)
+
+    home = hashing.set_index(keys, s, cfg.seed)
+    rows = jnp.arange(s, dtype=jnp.int32)[:, None]
+    bits |= _bit(occupied & (home != rows), 2)
+
+    # duplicate key within a set: O(k^2) pairwise compare per row (k is
+    # small by design — that is the paper)
+    same = (keys[:, :, None] == keys[:, None, :]) \
+        & occupied[:, :, None] & occupied[:, None, :]
+    bits |= _bit(jnp.sum(same, axis=-1) > 1, 3)
+
+    clk = state.clock
+    a, b = state.meta_a, state.meta_b
+    if cfg.policy in (Policy.LRU, Policy.FIFO):
+        bad_meta = (a < 0) | (a >= clk) | (b != 0)
+    elif cfg.policy == Policy.LFU:
+        bad_meta = (a < 1) | (a > clk) | (b != 0)
+    elif cfg.policy == Policy.RANDOM:
+        bad_meta = (a != 0) | (b != 0)
+    elif cfg.policy == Policy.HYPERBOLIC:
+        bad_meta = (a < 1) | (a > clk) | (b < 0) | (b >= clk)
+    else:  # pragma: no cover - Policy is a closed enum
+        raise ValueError(f"unknown policy {cfg.policy}")
+    bits |= _bit(occupied & bad_meta, 4)
+
+    if vals_mode == "key":
+        bits |= _bit(occupied & (state.vals.astype(jnp.uint32) != keys), 5)
+    elif vals_mode == "slot":
+        slot_id = rows * jnp.int32(k) + jnp.arange(k, dtype=jnp.int32)[None]
+        bits |= _bit(occupied & (state.vals != slot_id), 5)
+    return bits
+
+
+def _cache_report(cfg: KWayConfig, state: KWayState,
+                  vals_mode: str) -> CacheReport:
+    lane_bits = cache_lane_bits(cfg, state, vals_mode)
+    gbits = _bit(state.clock < 0, 0)
+    bits = jnp.bitwise_or(jnp.bitwise_or.reduce(lane_bits, axis=(0, 1)),
+                          gbits)
+    return CacheReport(lane_bits=lane_bits, global_bits=gbits, bits=bits)
+
+
+@partial(jax.jit, static_argnums=0, static_argnames=("vals_mode",))
+def check_cache(cfg: KWayConfig, state: KWayState, *,
+                vals_mode: str = "any") -> CacheReport:
+    """Validate one cache state.  ``vals_mode`` selects the payload
+    convention to enforce: ``"key"`` for the replay paths (val == key),
+    ``"slot"`` for the serving engine (val == landing slot id), ``"any"``
+    to skip the payload check."""
+    return _cache_report(cfg, state, vals_mode)
+
+
+def sketch_bits(cfg, st) -> jnp.ndarray:
+    """TinyLFU sketch violation bits (SKETCH_CHECKS), uint32 scalar.
+    ``cfg`` is a ``TinyLFUConfig``, ``st`` a ``TinyLFUState``."""
+    bad_add = (st.additions < 0) | (st.additions >= cfg.sample)
+    pop = jnp.sum(jax.lax.population_count(st.door).astype(jnp.int32))
+    return _bit(bad_add, 0) | _bit(pop > st.additions, 1)
+
+
+# ---------------------------------------------------------------------------
+# serving-state invariants
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0,))
+def check_serve(ecfg, st) -> ServeReport:
+    """Validate one ``ServeState`` against its (static) ``EngineConfig``.
+
+    Covers the prefix cache (vals_mode="slot"), the TinyLFU sketch when
+    enabled, page-table/owner referential integrity, per-slot counters and
+    the KV pools.
+    """
+    from repro.core import admission
+
+    kcfg = KWayConfig(num_sets=ecfg.num_sets, ways=ecfg.ways,
+                      policy=ecfg.policy)
+    n_slots = ecfg.max_batch
+    n_priv = ecfg.private_pages
+    shared = kcfg.capacity
+    total = shared + n_priv
+    page = ecfg.page
+    pps = ecfg.max_seq // page
+
+    cache = _cache_report(kcfg, st.kstate, "slot")
+
+    # ---- per slot --------------------------------------------------------
+    active = st.active
+    sbits = jnp.zeros((n_slots,), jnp.uint32)
+    sbits |= _bit(active & ((st.pos < 1) | (st.pos > ecfg.max_seq)), 0)
+    sbits |= _bit(active & ((st.n_pages < 0) | (st.n_pages > pps)
+                            | (st.pos > st.n_pages * page)), 1)
+    valid_e = active[:, None] & (jnp.arange(pps, dtype=jnp.int32)[None, :]
+                                 < st.n_pages[:, None])
+    in_range = (st.page_tbl >= 0) & (st.page_tbl < total)
+    sbits |= _bit(jnp.any(valid_e & ~in_range, axis=1), 2)
+    sbits |= _bit(active & ((st.n_gen < 1)
+                            | (st.n_gen > st.max_new + 1)), 3)
+    same_pg = (st.page_tbl[:, :, None] == st.page_tbl[:, None, :]) \
+        & valid_e[:, :, None] & valid_e[:, None, :]
+    sbits |= _bit(jnp.any(jnp.sum(same_pg, axis=-1) > 1, axis=1), 4)
+
+    # ---- per private page ------------------------------------------------
+    # refcount over the valid prefixes of active slots' page tables; shared
+    # pages are legitimately multi-booked (that is the prefix cache), the
+    # private region must be exclusive.
+    is_priv = valid_e & (st.page_tbl >= shared) & in_range
+    pidx = jnp.where(is_priv, st.page_tbl - shared, n_priv)
+    counts = jnp.zeros((n_priv,), jnp.int32).at[pidx].add(1, mode="drop")
+    slot_ids = jnp.broadcast_to(
+        jnp.arange(n_slots, dtype=jnp.int32)[:, None], pidx.shape)
+    ref_slot = jnp.full((n_priv,), -1, jnp.int32).at[pidx].max(
+        slot_ids, mode="drop")
+    owner = st.owner
+    pbits = jnp.zeros((n_priv,), jnp.uint32)
+    pbits |= _bit(counts > 1, 0)
+    owned = owner >= 0
+    pbits |= _bit(((counts == 1) & (owner != ref_slot))
+                  | (owned & (counts == 0)), 1)
+    owner_c = jnp.clip(owner, 0, n_slots - 1)
+    pbits |= _bit(owned & ~active[owner_c], 2)
+    pbits |= _bit((owner < -1) | (owner >= n_slots), 3)
+
+    # ---- global ----------------------------------------------------------
+    gbits = _bit(jnp.any(jnp.isnan(st.pool_k.astype(jnp.float32)))
+                 | jnp.any(jnp.isnan(st.pool_v.astype(jnp.float32))), 0)
+    ctr_bad = (st.prefix_hits < 0) | (st.prefix_lookups < 0) \
+        | (st.prefix_hits > st.prefix_lookups) | (st.evictions < 0) \
+        | (st.prefills < 0) | (st.decode_steps < 0)
+    gbits |= _bit(ctr_bad, 1)
+    if ecfg.tinylfu:
+        sk_cfg = admission.for_capacity(kcfg.capacity)
+        gbits |= sketch_bits(sk_cfg, st.sketch) << jnp.uint32(8)
+
+    bits = cache.bits \
+        | jnp.bitwise_or.reduce(sbits) \
+        | jnp.bitwise_or.reduce(pbits) | gbits
+    return ServeReport(cache=cache, slot_bits=sbits, page_bits=pbits,
+                       global_bits=gbits, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# host-side explain
+# ---------------------------------------------------------------------------
+
+def _named(bits: int, catalogue: dict, shift: int = 0) -> list[str]:
+    return [name for i, name in catalogue.items()
+            if bits & (1 << (i + shift))]
+
+
+def explain_cache(report: CacheReport, limit: int = 32) -> list[str]:
+    """Turn a cache report into human-readable strings naming set/way and
+    the violated invariants.  Host-side only (pulls the bitmaps once)."""
+    lane_bits, gbits = jax.device_get((report.lane_bits, report.global_bits))
+    lane_bits = np.asarray(lane_bits)
+    out = [f"cache: {n}" for n in _named(int(gbits), CACHE_GLOBAL_CHECKS)]
+    for s, w in np.argwhere(lane_bits != 0)[:limit]:
+        names = _named(int(lane_bits[s, w]), CACHE_CHECKS)
+        out.append(f"set {int(s)} way {int(w)}: {'|'.join(names)}")
+    n_bad = int((lane_bits != 0).sum())
+    if n_bad > limit:
+        out.append(f"... and {n_bad - limit} more corrupted lanes")
+    return out
+
+
+def explain_serve(report: ServeReport, limit: int = 32) -> list[str]:
+    """Human-readable violations for a ServeReport — slot/page/global plus
+    the embedded cache report."""
+    out = explain_cache(report.cache, limit=limit)
+    slot_bits, page_bits, gbits = jax.device_get(
+        (report.slot_bits, report.page_bits, report.global_bits))
+    for (i,) in np.argwhere(np.asarray(slot_bits) != 0)[:limit]:
+        names = _named(int(slot_bits[i]), SLOT_CHECKS)
+        out.append(f"slot {int(i)}: {'|'.join(names)}")
+    for (p,) in np.argwhere(np.asarray(page_bits) != 0)[:limit]:
+        names = _named(int(page_bits[p]), PAGE_CHECKS)
+        out.append(f"private page {int(p)}: {'|'.join(names)}")
+    g = int(gbits)
+    out.extend(f"serve: {n}" for n in _named(g, SERVE_GLOBAL_CHECKS))
+    out.extend(f"serve: {n}" for n in _named(g, SKETCH_CHECKS, shift=8))
+    return out

@@ -1,0 +1,169 @@
+"""Graceful-degradation backend ladder for trace replay.
+
+Backend selection becomes a supervised fallback chain instead of a silent
+``if``: the replay is attempted on the fastest rung and descends on
+failure, with every descent recorded as a :mod:`repro.robust.events` event
+naming the rung abandoned, the rung taken, and why.
+
+Rungs, fastest first (DESIGN.md §10/§13):
+
+  1. ``pallas-resident`` — the whole-trace megakernel, state pinned in
+     VMEM.  Skipped (``vmem_budget``) when the footprint exceeds
+     ``RESIDENT_VMEM_BUDGET``; abandoned (``kernel_failure``) when the
+     launch raises.
+  2. ``pallas-scan`` — chunked ``lax.scan`` through the Pallas probe
+     kernel.
+  3. ``jnp-scan`` — pure-XLA chunked scan; always available, the floor.
+
+All rungs are pinned bit-identical by the differential suite, so a descent
+costs throughput, never correctness.  After each rung the final state is
+validated (:mod:`repro.robust.invariants`); a dirty state triggers a
+``validator_alarm`` descent — the replay is functional (state in → state
+out), so the next rung re-runs from the same initial state.  A validator
+alarm on the last rung is unrecoverable and raises.
+
+Configurations the Pallas backend refuses outright (sampled policies,
+``ways > LANES``) skip both Pallas rungs with a ``backend_unsupported``
+event rather than erroring.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import kway
+from repro.core.kway import KWayConfig
+from repro.robust import events
+from repro.robust.invariants import check_cache, explain_cache, sketch_bits
+
+__all__ = ["RUNGS", "ReplayOutcome", "resilient_replay"]
+
+#: fallback order, fastest first
+RUNGS = ("pallas-resident", "pallas-scan", "jnp-scan")
+
+_COMPONENT = "ladder.replay"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayOutcome:
+    """Result of a supervised replay: the usual replay outputs plus which
+    rung produced them and what was attempted along the way."""
+
+    hits: jnp.ndarray            # int32 [steps]
+    evs: jnp.ndarray             # int32 [steps]
+    state: kway.KWayState
+    sketch: object               # TinyLFUState | None
+    rung: str                    # the rung that produced the result
+    attempts: tuple              # ((rung, "ok"|reason), ...) in order
+
+
+def _default_validate(cfg: KWayConfig, tinylfu, vals_mode: str):
+    def validate(state, sketch) -> tuple[bool, str]:
+        rep = check_cache(cfg, state, vals_mode=vals_mode)
+        if not rep.clean():
+            return False, "; ".join(explain_cache(rep, limit=4))
+        if tinylfu is not None and sketch is not None:
+            if int(sketch_bits(tinylfu, sketch)) != 0:
+                return False, "tinylfu sketch bounds violated"
+        return True, ""
+    return validate
+
+
+def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
+                     state: kway.KWayState | None = None, *,
+                     validate: bool = True, validate_fn=None,
+                     vals_mode: str = "key") -> ReplayOutcome:
+    """Replay ``chunks``/``enabled`` (the ``router.pad_chunks`` layout,
+    payload ``val == key``) down the degradation ladder.
+
+    ``validate_fn(state, sketch) -> (ok, why)`` overrides the invariant
+    check per rung (the chaos tests use this to force alarms);
+    ``validate=False`` skips post-rung validation entirely.
+    """
+    from repro.core import backend as backend_mod
+
+    if state is None:
+        state = kway.make_cache(cfg)
+    check = None
+    if validate:
+        check = validate_fn or _default_validate(cfg, tinylfu, vals_mode)
+
+    attempts: list = []
+
+    def _attempt(rung: str, run) -> ReplayOutcome | None:
+        try:
+            hits, evs, st, sk = run()
+        except Exception as exc:  # noqa: BLE001 — any kernel fault descends
+            attempts.append((rung, "kernel_failure"))
+            events.record(
+                component=_COMPONENT, reason="kernel_failure",
+                fallback_from=rung, fallback_to=_next(rung),
+                detail=f"{type(exc).__name__}: {exc}")
+            return None
+        if check is not None:
+            ok, why = check(st, sk)
+            if not ok:
+                attempts.append((rung, "validator_alarm"))
+                events.record(
+                    component=_COMPONENT, reason="validator_alarm",
+                    fallback_from=rung, fallback_to=_next(rung), detail=why)
+                if rung == RUNGS[-1]:
+                    raise RuntimeError(
+                        f"replay state invalid on the last ladder rung "
+                        f"{rung!r}: {why}")
+                return None
+        attempts.append((rung, "ok"))
+        return ReplayOutcome(hits=hits, evs=evs, state=st, sketch=sk,
+                             rung=rung, attempts=tuple(attempts))
+
+    # ---- pallas rungs ----------------------------------------------------
+    try:
+        pallas = backend_mod.make_backend("pallas", cfg)
+    except ValueError as exc:
+        pallas = None
+        attempts.append(("pallas-resident", "backend_unsupported"))
+        attempts.append(("pallas-scan", "backend_unsupported"))
+        events.record(
+            component=_COMPONENT, reason="backend_unsupported",
+            fallback_from="pallas-resident", fallback_to="jnp-scan",
+            detail=str(exc))
+
+    if pallas is not None:
+        if pallas.resident_fits():
+            from repro.kernels import ops
+
+            out = _attempt(
+                "pallas-resident",
+                lambda: ops.replay_resident(cfg, state, chunks, enabled,
+                                            tinylfu=tinylfu))
+            if out is not None:
+                return out
+        else:
+            attempts.append(("pallas-resident", "vmem_budget"))
+            events.record(
+                component=_COMPONENT, reason="vmem_budget",
+                fallback_from="pallas-resident", fallback_to="pallas-scan",
+                detail=f"num_sets={cfg.num_sets} exceeds resident budget")
+
+        out = _attempt(
+            "pallas-scan",
+            lambda: pallas.replay_scan(state, chunks, enabled,
+                                       tinylfu=tinylfu))
+        if out is not None:
+            return out
+
+    # ---- floor -----------------------------------------------------------
+    jnp_be = backend_mod.make_backend("jnp", cfg)
+    out = _attempt(
+        "jnp-scan",
+        lambda: jnp_be.replay(state, chunks, enabled, tinylfu=tinylfu))
+    if out is not None:
+        return out
+    raise RuntimeError(
+        f"all ladder rungs failed for replay: {attempts}")
+
+
+def _next(rung: str) -> str:
+    i = RUNGS.index(rung)
+    return RUNGS[i + 1] if i + 1 < len(RUNGS) else "none"

@@ -1,0 +1,270 @@
+"""Recovery paths: scrub-and-invalidate repair and engine checkpoint/restore.
+
+Two ways back from a fault, matched to what the validator can see:
+
+* **Scrub** (:func:`scrub`) — structural corruption inside the cache is
+  repairable *in place* because limited associativity localizes damage: a
+  bad lane can only poison its own set, so the repair resets the damaged
+  sets to ``EMPTY_KEY`` (tallied as *forced evictions*) and the replay
+  continues.  The cost is a bounded hit-ratio dip — re-inserting the
+  scrubbed keys — which the chaos suite pins inside a committed band.
+
+* **Checkpoint/restore** (:func:`save_engine` / :func:`restore_engine` /
+  :class:`CheckpointedEngine`) — faults the validator cannot repair (a
+  crashed tick, NaN KV pools) roll back to the last *committed* checkpoint
+  written through ``ckpt/manager.py``'s atomic-rename protocol.  The
+  device ``ServeState`` rides as the pytree; the host-side queues
+  (waiting/running/finished requests) serialize into the manifest's
+  ``extra`` — together they are the engine's whole replayable state, so a
+  restored engine re-emits bit-identical tokens (greedy argmax, and seeded
+  sampling is keyed on the checkpointed ``decode_steps`` counter).
+
+:func:`validated_replay` fuses the cache validator into the replay scan at
+a configurable cadence — the thing ``benchmarks/robustness.py`` times to
+hold the <5% overhead target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import EMPTY_KEY
+from repro.core.kway import KWayConfig, KWayState
+from repro.robust import events
+from repro.robust.invariants import cache_lane_bits
+
+__all__ = ["scrub", "validated_replay", "save_engine", "restore_engine",
+           "CheckpointedEngine"]
+
+
+# ---------------------------------------------------------------------------
+# scrub-and-invalidate
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=0, static_argnames=("vals_mode",))
+def scrub(cfg: KWayConfig, state: KWayState, *, vals_mode: str = "any"):
+    """Reset every set containing a violating lane to fully-empty.
+
+    Returns ``(state', forced_evictions, lane_bits)`` where
+    ``forced_evictions`` counts the occupied lanes cleared (corruption has
+    set-granular blast radius: a flipped key can shadow probes of its
+    whole set, so the repair invalidates the set, not just the lane) and
+    ``lane_bits`` is the pre-repair violation bitmap.  The clock is
+    untouched — scrubbed lanes look like cold sets, and policy metadata
+    bounds stay valid for subsequent inserts.  A clean state passes
+    through unchanged with a zero tally.
+    """
+    lane_bits = cache_lane_bits(cfg, state, vals_mode)
+    bad_set = jnp.any(lane_bits != 0, axis=1)[:, None]       # [S, 1]
+    occupied = state.keys != EMPTY_KEY
+    forced = jnp.sum((occupied & bad_set).astype(jnp.int32))
+    state = dataclasses.replace(
+        state,
+        keys=jnp.where(bad_set, jnp.uint32(EMPTY_KEY), state.keys),
+        fprint=jnp.where(bad_set, jnp.uint32(0), state.fprint),
+        vals=jnp.where(bad_set, jnp.int32(0), state.vals),
+        meta_a=jnp.where(bad_set, jnp.int32(0), state.meta_a),
+        meta_b=jnp.where(bad_set, jnp.int32(0), state.meta_b),
+    )
+    return state, forced, lane_bits
+
+
+# ---------------------------------------------------------------------------
+# replay with the validator fused into the scan
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _validated_replay_fn(cfg: KWayConfig, backend: str, interval: int,
+                         tinylfu, vals_mode: str):
+    from repro.core import admission
+    from repro.core.backend import make_backend
+
+    be = make_backend(backend, cfg)
+
+    def fn(state, chunks, enabled, sketch):
+        def step(carry, xs):
+            cache, sk, alarm = carry
+            i, keys, en = xs
+            admit = None
+            if tinylfu is not None:
+                sk = admission.record(tinylfu, sk, keys, enabled=en)
+                vk, vv = be.peek_victims(cache, keys)
+                admit = admission.admit(tinylfu, sk, keys, vk, vv)
+            cache, hit, _, _, ev = be.access(
+                cache, keys, keys.astype(jnp.int32), admit, en)
+            bits = jax.lax.cond(
+                i % interval == 0,
+                lambda c: jnp.bitwise_or.reduce(
+                    cache_lane_bits(cfg, c, vals_mode), axis=(0, 1)),
+                lambda c: jnp.uint32(0),
+                cache)
+            return (cache, sk, alarm | bits), (
+                jnp.sum(hit.astype(jnp.int32)), jnp.sum(ev.astype(jnp.int32)))
+
+        steps = chunks.shape[0]
+        idx = jnp.arange(steps, dtype=jnp.int32)
+        (state, sk, alarm), (hits, evs) = jax.lax.scan(
+            step, (state, sketch, jnp.uint32(0)), (idx, chunks, enabled))
+        return hits, evs, state, sk, alarm
+
+    return jax.jit(fn)
+
+
+def validated_replay(cfg: KWayConfig, chunks, enabled, *,
+                     backend: str = "jnp", interval: int = 1, tinylfu=None,
+                     state: KWayState | None = None, vals_mode: str = "key"):
+    """Chunked-scan replay with the invariant check fused in every
+    ``interval`` chunks — the violation word rides the scan carry, so
+    validation adds zero host syncs.
+
+    Returns ``(hits [steps], evs [steps], state', sketch'|None,
+    alarm_bits uint32[])``; ``alarm_bits != 0`` means some checked chunk
+    left the cache structurally invalid.  Jitted once per
+    ``(cfg, backend, interval, tinylfu, vals_mode)``.
+    """
+    from repro.core import admission, kway
+
+    if interval < 1:
+        raise ValueError(f"interval must be >= 1, got {interval}")
+    if state is None:
+        state = kway.make_cache(cfg)
+    sketch = (admission.make_sketch(tinylfu) if tinylfu is not None
+              else jnp.zeros((), jnp.int32))
+    fn = _validated_replay_fn(cfg, backend, interval, tinylfu, vals_mode)
+    hits, evs, state, sk, alarm = fn(
+        state, jnp.asarray(chunks, jnp.uint32),
+        jnp.asarray(enabled, jnp.bool_), sketch)
+    return hits, evs, state, (sk if tinylfu is not None else None), alarm
+
+
+# ---------------------------------------------------------------------------
+# engine checkpoint / restore
+# ---------------------------------------------------------------------------
+
+_REQ_FIELDS = ("rid", "max_new", "generated", "pos", "prefix_hits",
+               "prefix_lookups", "done")
+
+
+def _pack_request(req) -> dict:
+    d = {f: getattr(req, f) for f in _REQ_FIELDS}
+    d["prompt"] = [int(t) for t in np.asarray(req.prompt)]
+    d["generated"] = [int(t) for t in req.generated]
+    return d
+
+
+def _unpack_request(d):
+    from repro.serve.engine import Request
+
+    return Request(
+        rid=int(d["rid"]), prompt=np.asarray(d["prompt"], np.int32),
+        max_new=int(d["max_new"]), generated=list(d["generated"]),
+        pos=int(d["pos"]), prefix_hits=int(d["prefix_hits"]),
+        prefix_lookups=int(d["prefix_lookups"]), done=bool(d["done"]))
+
+
+def _require_jitted(eng, what: str):
+    if not eng.ecfg.jitted:
+        raise ValueError(
+            f"{what} supports the jitted engine only (its whole device "
+            "state is the ServeState pytree); the host-loop engine keeps "
+            "state in Python objects — set EngineConfig(jitted=True)")
+
+
+def save_engine(eng, root: str, step: int, *, keep_last: int = 3,
+                commit: bool = True) -> str:
+    """Checkpoint a jitted engine: ``ServeState`` as the pytree, host
+    queues in the manifest.  ``commit=False`` is the chaos hook — leaves
+    land on disk but the atomic rename is skipped, simulating a crash
+    mid-tick between write and commit."""
+    _require_jitted(eng, "save_engine")
+    from repro.ckpt import manager
+
+    extra = {
+        "kind": "repro.serve.engine",
+        "next_rid": eng._next_rid,
+        "waiting": [_pack_request(r) for r in eng.waiting],
+        "running": [_pack_request(r) for r in eng.running.values()],
+        "finished": [_pack_request(r) for r in eng.finished.values()],
+    }
+    return manager.save(root, step, eng._sstate, extra=extra,
+                        keep_last=keep_last, commit=commit)
+
+
+def restore_engine(eng, root: str, step: int | None = None) -> int:
+    """Restore a jitted engine from the last *committed* checkpoint (or an
+    explicit ``step``).  Uncommitted ``.tmp`` writes are ignored — that is
+    the crash-mid-tick guarantee.  Returns the step restored."""
+    _require_jitted(eng, "restore_engine")
+    from repro.ckpt import manager
+
+    if step is None:
+        step = manager.latest_step(root)
+        if step is None:
+            raise ValueError(
+                f"restore_engine: no committed checkpoint under {root!r} "
+                "(an uncommitted .tmp from a crashed save does not count)")
+    tree, extra = manager.restore(root, step, eng._sstate)
+    if extra.get("kind") != "repro.serve.engine":
+        raise ValueError(
+            f"checkpoint step {step} under {root!r} is not an engine "
+            f"checkpoint (kind={extra.get('kind')!r})")
+    eng._sstate = tree
+    eng._next_rid = int(extra["next_rid"])
+    eng.waiting = [_unpack_request(d) for d in extra["waiting"]]
+    eng.running = {r.rid: r for r in
+                   (_unpack_request(d) for d in extra["running"])}
+    eng.finished = {r.rid: r for r in
+                    (_unpack_request(d) for d in extra["finished"])}
+    return step
+
+
+class CheckpointedEngine:
+    """Checkpoint-cadence wrapper: every ``every`` ticks the engine state
+    is committed under ``root``.  On any tick the process can die; restart
+    with :func:`restore_engine` (or ``.restore()``) and continue — the
+    chaos suite pins the resumed token streams bit-identical.
+
+    Cadence cost is one host→disk serialization of the ServeState pytree
+    per ``every`` ticks (the KV pools dominate; see DESIGN.md §13), so
+    ``every`` trades recovery distance against throughput.
+    """
+
+    def __init__(self, eng, root: str, *, every: int = 1,
+                 keep_last: int = 3):
+        _require_jitted(eng, "CheckpointedEngine")
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.eng = eng
+        self.root = root
+        self.every = every
+        self.keep_last = keep_last
+        self.tick = 0
+        self.last_committed: int | None = None
+
+    def step(self) -> None:
+        self.eng.step()
+        self.tick += 1
+        if self.tick % self.every == 0:
+            save_engine(self.eng, self.root, self.tick,
+                        keep_last=self.keep_last)
+            self.last_committed = self.tick
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while ((self.eng.waiting or self.eng._any_running())
+               and steps < max_steps):
+            self.step()
+            steps += 1
+        return self.eng.finished
+
+    def restore(self, step: int | None = None) -> int:
+        step = restore_engine(self.eng, self.root, step)
+        self.tick = step
+        self.last_committed = step
+        events.record(component="engine.checkpoint", reason="restore",
+                      detail=f"resumed from committed tick {step}")
+        return step

@@ -1,0 +1,76 @@
+"""Bounded retry/backoff around host↔device sync points.
+
+The serving engine and the showdown harness each have exactly one blocking
+host↔device rendezvous per tick (``jax.device_get`` of the emitted-token
+block; worker ``Future.result()`` joins).  A wedged device or a deadlocked
+worker turns that into an unbounded hang — the one failure mode a test
+suite cannot observe from the inside.  ``watch`` puts a timeout on the
+*wait*, not on the work: the function runs once in a daemon thread, and on
+each timeout expiry we record a ``sync_timeout`` degradation event and
+re-wait with exponential backoff.  Only after the retry budget is spent do
+we raise :class:`WatchdogTimeout`.
+
+We deliberately never re-invoke ``fn`` — a device sync is not idempotent
+(re-issuing a ``device_get`` against a wedged runtime just stacks a second
+hang), so the retries extend patience, observably, instead of duplicating
+work.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.robust import events
+
+__all__ = ["WatchdogTimeout", "watch"]
+
+
+class WatchdogTimeout(TimeoutError):
+    """A watched call failed to complete within the retry/backoff budget."""
+
+
+def watch(fn, *, timeout_s: float, retries: int = 2, backoff: float = 2.0,
+          component: str = "watchdog"):
+    """Run ``fn()`` once, waiting at most ``timeout_s`` (then ``timeout_s *
+    backoff``, ... for ``retries`` extra waits).  Returns ``fn``'s result or
+    re-raises its exception.  Each expired wait records a ``sync_timeout``
+    event; exhausting the budget raises :class:`WatchdogTimeout`.
+
+    ``timeout_s <= 0`` disables the watchdog and calls ``fn`` inline.
+    """
+    if timeout_s <= 0:
+        return fn()
+
+    box: dict = {}
+    done = threading.Event()
+
+    def _run() -> None:
+        try:
+            box["result"] = fn()
+        except BaseException as exc:  # propagate to the caller below
+            box["error"] = exc
+        finally:
+            done.set()
+
+    thread = threading.Thread(target=_run, daemon=True,
+                              name=f"watchdog:{component}")
+    thread.start()
+
+    wait = float(timeout_s)
+    total = 0.0
+    for attempt in range(retries + 1):
+        if done.wait(wait):
+            break
+        total += wait
+        events.record(
+            component=component, reason="sync_timeout",
+            detail=(f"wait {attempt + 1}/{retries + 1} expired after "
+                    f"{wait:.3g}s (total {total:.3g}s)"))
+        wait *= backoff
+    else:
+        raise WatchdogTimeout(
+            f"{component}: no completion after {retries + 1} waits "
+            f"({total:.3g}s total); device sync presumed wedged")
+
+    if "error" in box:
+        raise box["error"]
+    return box["result"]

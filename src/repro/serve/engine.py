@@ -126,6 +126,13 @@ class EngineConfig:
     # allocation order, and thus out-of-page retirement, depends on the
     # schedule, so both modes must share it.
     decode_block: int = 1
+    # > 0: watchdog over the tick's one host↔device sync — each expired
+    # wait of ``sync_timeout_s`` (growing by ``sync_backoff``) records a
+    # degradation event; after ``sync_retries`` extra waits the tick raises
+    # WatchdogTimeout instead of hanging.  0 disables (plain device_get).
+    sync_timeout_s: float = 0.0
+    sync_retries: int = 2
+    sync_backoff: float = 2.0
 
 
 @jax.tree_util.register_dataclass
@@ -462,17 +469,33 @@ def _serve_step_fn(cfg: ModelConfig, ecfg: EngineConfig):
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
-        assert cfg.has_attention and cfg.enc_layers == 0, (
-            "paged engine serves decoder-only attention archs; attention-free"
-            " archs bypass it (DESIGN.md §4)"
-        )
-        assert ecfg.max_seq % ecfg.page == 0, "max_seq must align to pages"
-        assert ecfg.decode_block >= 1, "decode_block must be >= 1"
+        # typed input validation, not asserts: these guard user-supplied
+        # configs and must survive ``python -O``
+        if not (cfg.has_attention and cfg.enc_layers == 0):
+            raise ValueError(
+                "paged engine serves decoder-only attention archs; "
+                f"got has_attention={cfg.has_attention}, "
+                f"enc_layers={cfg.enc_layers} — attention-free archs bypass "
+                "it (DESIGN.md §4)")
+        if ecfg.max_seq % ecfg.page != 0:
+            raise ValueError(
+                f"EngineConfig.max_seq ({ecfg.max_seq}) must be a multiple "
+                f"of page ({ecfg.page})")
+        if ecfg.decode_block < 1:
+            raise ValueError(
+                f"EngineConfig.decode_block must be >= 1, "
+                f"got {ecfg.decode_block}")
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.max_prompt = ecfg.max_prompt or ecfg.max_seq
-        assert self.max_prompt % ecfg.page == 0 and \
-            self.max_prompt <= ecfg.max_seq, (
-                "max_prompt must be a page multiple <= max_seq")
+        if self.max_prompt % ecfg.page != 0 or \
+                self.max_prompt > ecfg.max_seq:
+            raise ValueError(
+                f"EngineConfig.max_prompt ({self.max_prompt}) must be a "
+                f"multiple of page ({ecfg.page}) and <= max_seq "
+                f"({ecfg.max_seq})")
+        from repro.robust import events as _rev
+        self._events = _rev
+        self._events_start = _rev.cursor()
         self.kcfg = KWayConfig(
             num_sets=ecfg.num_sets, ways=ecfg.ways, policy=ecfg.policy
         )
@@ -554,9 +577,11 @@ class Engine:
     # ------------------------------------------------------------------ API
     def submit(self, prompt, max_new: int = 16) -> int:
         prompt = np.asarray(prompt, np.int32)
-        assert 1 <= len(prompt) <= self.max_prompt, (
-            f"prompt length {len(prompt)} outside [1, {self.max_prompt}] "
-            "(EngineConfig.max_prompt)")
+        if not 1 <= len(prompt) <= self.max_prompt:
+            raise ValueError(
+                f"prompt length {len(prompt)} outside [1, {self.max_prompt}]"
+                " — raise EngineConfig.max_prompt (a page multiple "
+                "<= max_seq) or truncate the prompt")
         rid = self._next_rid
         self._next_rid += 1
         self.waiting.append(Request(rid, prompt, max_new))
@@ -594,9 +619,13 @@ class Engine:
                  s.decode_steps))
             return {"prefix_hits": int(ph), "prefix_lookups": int(pl),
                     "prefills": int(pf), "decode_steps": int(ds),
-                    "evictions": int(ev)}
+                    "evictions": int(ev),
+                    "degradation_events":
+                        self._events.count(start=self._events_start)}
         d = dict(self._stats)
         d["evictions"] = int(jax.device_get(self._ev_dev))
+        d["degradation_events"] = self._events.count(
+            start=self._events_start)
         return d
 
     def hit_ratio(self) -> float:
@@ -637,7 +666,18 @@ class Engine:
             batch = self._zero_batch
         self._sstate, emitted = self._step_fn(self.params, self._sstate,
                                               batch)
-        em = jax.device_get(emitted)     # the one host sync of the tick
+        if self.ecfg.sync_timeout_s > 0:
+            # watchdog over the one host sync of the tick: bounded
+            # retry/backoff, observable as degradation events, and a
+            # WatchdogTimeout instead of an unbounded hang
+            from repro.robust.watchdog import watch
+            em = watch(lambda: jax.device_get(emitted),
+                       timeout_s=self.ecfg.sync_timeout_s,
+                       retries=self.ecfg.sync_retries,
+                       backoff=self.ecfg.sync_backoff,
+                       component="engine.tick_sync")
+        else:
+            em = jax.device_get(emitted)  # the one host sync of the tick
         # admitted lanes are a PREFIX of the waiting queue (in-order
         # free-lane assignment + break-on-refusal)
         n_adm = int(em["admitted"].sum())

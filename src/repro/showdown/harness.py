@@ -41,13 +41,23 @@ class ThreadedReplay:
     hit count (a Python int — already synced, so the timing helpers'
     ``block_until_ready`` is a no-op).  Use as a context manager or call
     ``close()`` to drop the pool.
+
+    ``timeout_s > 0`` arms a watchdog over the worker joins: each expired
+    wait (growing by ``backoff``) records a degradation event, and after
+    ``retries`` extra waits the replay raises ``WatchdogTimeout`` instead
+    of hanging the harness on a deadlocked contender cache.
     """
 
-    def __init__(self, cache, trace: np.ndarray, threads: int):
+    def __init__(self, cache, trace: np.ndarray, threads: int, *,
+                 timeout_s: float = 0.0, retries: int = 2,
+                 backoff: float = 2.0):
         if threads < 1:
             raise ValueError(f"threads must be >= 1, got {threads}")
         self.cache = cache
         self.threads = threads
+        self.timeout_s = timeout_s
+        self.retries = retries
+        self.backoff = backoff
         # Python-int key lists, pre-split: uint32->int conversion cost is
         # paid once here, not inside the timed region.
         keys = [int(k) for k in np.asarray(trace, np.uint32)]
@@ -59,6 +69,14 @@ class ThreadedReplay:
                       if threads > 1 else None)
 
     def __call__(self) -> int:
+        if self.timeout_s > 0:
+            from repro.robust.watchdog import watch
+            return watch(self._replay_once, timeout_s=self.timeout_s,
+                         retries=self.retries, backoff=self.backoff,
+                         component="showdown.replay")
+        return self._replay_once()
+
+    def _replay_once(self) -> int:
         if self._pool is None:               # no pool round trip at T=1
             return _worker(self.cache, self._slices[0])
         futures = [self._pool.submit(_worker, self.cache, s)

@@ -28,6 +28,75 @@ def test_save_restore_roundtrip(tmp_path, rng):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def _cache_like_tree(rng):
+    """Leaf dtypes the cache/serve pytrees actually use: uint32 lanes,
+    bool masks, bf16 KV pools (the f32-widening save path), int32 meta."""
+    return {
+        "keys": jnp.asarray(rng.integers(0, 2**32, (16, 4),
+                                         dtype=np.uint32)),
+        "active": jnp.asarray(rng.integers(0, 2, (4,)).astype(bool)),
+        "pool_k": jnp.asarray(rng.standard_normal((2, 3, 8, 4)),
+                              jnp.bfloat16),
+        "meta": {"a": jnp.asarray(rng.integers(0, 100, (16, 4)),
+                                  jnp.int32)},
+    }
+
+
+def test_cache_pytree_roundtrip_exact(tmp_path, rng):
+    """uint32/bool/bf16 leaves must round-trip bit-exactly — the bf16 leaf
+    takes the f32-widening save path and must cast back to bf16 with no
+    residue (f32 is a superset of bf16, so the cast is lossless)."""
+    t = _cache_like_tree(rng)
+    ckpt.save(str(tmp_path), 2, t)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    restored, _ = ckpt.restore(str(tmp_path), 2, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(jnp.asarray(a, jnp.float32)),
+            np.asarray(jnp.asarray(b, jnp.float32)))
+
+
+def test_restore_names_missing_and_extra_leaf(tmp_path, rng):
+    t = _cache_like_tree(rng)
+    ckpt.save(str(tmp_path), 0, t)
+    wrong = dict(t)
+    wrong["renamed"] = wrong.pop("keys")
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(str(tmp_path), 0, wrong)
+    msg = str(ei.value)
+    assert "renamed" in msg and "keys" in msg
+    assert "missing from checkpoint" in msg and "extra in checkpoint" in msg
+
+
+def test_restore_names_shape_mismatch(tmp_path, rng):
+    t = _cache_like_tree(rng)
+    ckpt.save(str(tmp_path), 0, t)
+    wrong = dict(t)
+    wrong["keys"] = jnp.zeros((8, 4), jnp.uint32)
+    with pytest.raises(ValueError, match=r"keys.*shape"):
+        ckpt.restore(str(tmp_path), 0, wrong)
+
+
+def test_restore_missing_step_names_latest(tmp_path, rng):
+    t = _cache_like_tree(rng)
+    ckpt.save(str(tmp_path), 7, t)
+    with pytest.raises(ValueError, match="latest committed: 7"):
+        ckpt.restore(str(tmp_path), 8, t)
+
+
+def test_uncommitted_save_invisible(tmp_path, rng):
+    """``commit=False`` (the crash-mid-tick injection point) leaves only a
+    .tmp dir: latest_step must not see it, restore must refuse it."""
+    t = _cache_like_tree(rng)
+    ckpt.save(str(tmp_path), 1, t)
+    tmp = ckpt.save(str(tmp_path), 2, t, commit=False)
+    assert tmp.endswith(".tmp") and os.path.isdir(tmp)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    with pytest.raises(ValueError, match="no committed checkpoint"):
+        ckpt.restore(str(tmp_path), 2, t)
+
+
 def test_atomicity_tmp_ignored(tmp_path, rng):
     t = _tree(rng)
     ckpt.save(str(tmp_path), 1, t)

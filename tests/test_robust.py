@@ -1,0 +1,524 @@
+"""Chaos suite for the robust subsystem (DESIGN.md §13).
+
+Contract under test: every injected fault class is either *detected* by
+the invariant validator (with zero false positives on the clean golden
+trace, all 5 policies x 3 backends) or *survived* by a recovery path —
+scrub-and-invalidate keeps replaying within a banded hit-ratio loss,
+crash-mid-tick restore resumes with bit-identical tokens, and the
+degradation ladder lands on a slower rung with the event observable.
+"""
+import dataclasses
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admission, traces
+from repro.core import backend as backend_mod
+from repro.core.backend import make_backend
+from repro.core.hashing import EMPTY_KEY
+from repro.core.kway import KWayConfig
+from repro.core.policies import Policy
+from repro.core.router import pad_chunks
+from repro.robust import (
+    check_cache,
+    check_serve,
+    events,
+    explain_cache,
+    explain_serve,
+    faults,
+    resilient_replay,
+    restore_engine,
+    save_engine,
+    scrub,
+    validated_replay,
+    watch,
+    WatchdogTimeout,
+)
+from repro.robust.invariants import sketch_bits
+from repro.robust.ladder import RUNGS
+
+CONFIG = dict(num_sets=16, ways=4)
+SEED = 2026
+
+
+def golden_trace():
+    tr = traces.generate("zipf", 512, seed=SEED, catalog=96)
+    tr[::13] = 0
+    return tr
+
+
+def _chunks(batch=8):
+    return pad_chunks(golden_trace(), batch)
+
+
+def _replayed_state(policy=Policy.LRU, backend="jnp", tinylfu=None):
+    cfg = KWayConfig(policy=policy, **CONFIG)
+    be = make_backend(backend, cfg)
+    chunks, enabled = _chunks()
+    hits, evs, st, sk = be.replay(be.init(), chunks, enabled,
+                                  tinylfu=tinylfu)
+    return cfg, st, int(np.asarray(hits).sum()), sk
+
+
+# ---------------------------------------------------------------------------
+# validator: zero false positives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", list(Policy))
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_clean_golden_trace_no_false_positives(policy, backend):
+    cfg, st, _, _ = _replayed_state(policy, backend)
+    rep = check_cache(cfg, st, vals_mode="key")
+    assert rep.clean(), explain_cache(rep)
+
+
+@pytest.mark.parametrize("policy", list(Policy))
+def test_clean_golden_trace_ref_backend(policy):
+    cfg = KWayConfig(policy=policy, **CONFIG)
+    be = make_backend("ref", cfg)
+    chunks, enabled = _chunks()
+    st = be.init()
+    for i in range(chunks.shape[0]):
+        keys = np.asarray(chunks[i], np.uint32)
+        st, _, _, _, _ = be.access(st, keys, keys.astype(np.int32),
+                                   enabled=np.asarray(enabled[i]))
+    rep = check_cache(cfg, st, vals_mode="key")
+    assert rep.clean(), explain_cache(rep)
+
+
+def test_clean_with_tinylfu_sketch():
+    cfg = KWayConfig(**CONFIG)
+    tl = admission.for_capacity(cfg.capacity)
+    cfg, st, _, sk = _replayed_state(tinylfu=tl)
+    assert check_cache(cfg, st, vals_mode="key").clean()
+    assert int(sketch_bits(tl, sk)) == 0
+
+
+# ---------------------------------------------------------------------------
+# fault injection: every lane site detected, reproducibly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("site", faults.LANE_SITES)
+def test_bit_flip_detected_and_localized(site):
+    cfg, st, _, _ = _replayed_state()
+    st2, rep_f = faults.flip_bit(st, site, seed=7)
+    rep = check_cache(cfg, st2, vals_mode="key")
+    assert not rep.clean(), f"undetected {site} flip: {rep_f}"
+    # explain names the corrupted lane's set/way (the flip may shadow its
+    # whole set, but the injected coordinate must be among the named ones)
+    s, w = rep_f.index
+    lane_bits = np.asarray(rep.lane_bits)
+    if int(lane_bits[s, w]) == 0:
+        # a key flipped onto EMPTY_KEY surfaces as empty_lane_dirty on the
+        # same coordinates — either way the lane must be named
+        assert any(f"set {s} way {w}" in line for line in explain_cache(rep))
+    assert any(f"set {s}" in line for line in explain_cache(rep))
+
+
+def test_fault_reproducible_from_seed_site_step():
+    cfg, st, _, _ = _replayed_state()
+    a1, r1 = faults.flip_bit(st, "keys", seed=11, step=3)
+    a2, r2 = faults.flip_bit(st, "keys", seed=11, step=3)
+    assert r1 == r2
+    np.testing.assert_array_equal(np.asarray(a1.keys), np.asarray(a2.keys))
+    _, r3 = faults.flip_bit(st, "keys", seed=11, step=4)
+    assert (r3.index, r3.bit) != (r1.index, r1.bit) or r3.step != r1.step
+
+
+def test_empty_lane_dirty_detected():
+    cfg = KWayConfig(**CONFIG)
+    from repro.core import kway
+    st = kway.make_cache(cfg)
+    meta = np.array(st.meta_a)
+    meta[3, 2] = 99
+    rep = check_cache(cfg, dataclasses.replace(st, meta_a=jnp.asarray(meta)))
+    assert not rep.clean()
+    assert any("set 3 way 2: empty_lane_dirty" in line
+               for line in explain_cache(rep))
+
+
+def test_sketch_bounds_detected():
+    cfg = KWayConfig(**CONFIG)
+    tl = admission.for_capacity(cfg.capacity)
+    sk = admission.make_sketch(tl)
+    bad = dataclasses.replace(sk, additions=jnp.asarray(tl.sample, jnp.int32))
+    assert int(sketch_bits(tl, bad)) & 1
+    bad2 = dataclasses.replace(
+        sk, door=jnp.ones_like(sk.door) * jnp.uint32(0xFF))
+    assert int(sketch_bits(tl, bad2)) & 2
+
+
+# ---------------------------------------------------------------------------
+# recovery: scrub-and-invalidate, banded divergence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("site", ["keys", "fprint", "meta_a", "vals"])
+def test_inject_detect_scrub_replay_band(site):
+    """The full chaos loop: replay half the golden trace, corrupt, detect,
+    scrub (forced evictions tallied), replay on — final state clean and
+    the recovered hit ratio inside the band around the clean run."""
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("jnp", cfg)
+    chunks, enabled = _chunks()
+    hc, _, _, _ = be.replay(be.init(), chunks, enabled)
+    hr_clean = float(np.asarray(hc).sum()) / 512
+
+    half = chunks.shape[0] // 2
+    h1, _, st, _ = be.replay(be.init(), chunks[:half], enabled[:half])
+    st, _ = faults.flip_bit(st, site, seed=SEED, step=half)
+    assert not check_cache(cfg, st, vals_mode="key").clean()
+    st, forced, _ = scrub(cfg, st, vals_mode="key")
+    assert int(forced) > 0
+    assert check_cache(cfg, st, vals_mode="key").clean()
+    h2, _, st, _ = be.replay(st, chunks[half:], enabled[half:])
+    assert check_cache(cfg, st, vals_mode="key").clean()
+    hr = (float(np.asarray(h1).sum()) + float(np.asarray(h2).sum())) / 512
+    # scrubbing resets at most a few sets of a 64-lane cache: the loss
+    # band is re-warming those sets, far below 5 points on this trace
+    assert hr <= hr_clean + 1e-9
+    assert hr_clean - hr < 0.05, (hr, hr_clean, int(forced))
+
+
+def test_scrub_noop_on_clean_state():
+    cfg, st, _, _ = _replayed_state()
+    st2, forced, _ = scrub(cfg, st, vals_mode="key")
+    assert int(forced) == 0
+    for f in ("keys", "fprint", "vals", "meta_a", "meta_b"):
+        np.testing.assert_array_equal(np.asarray(getattr(st, f)),
+                                      np.asarray(getattr(st2, f)))
+
+
+def test_validated_replay_alarms_on_corrupt_start():
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled = _chunks()
+    _, st, _, _ = _replayed_state()
+    st, _ = faults.flip_bit(st, "keys", seed=5)
+    *_, alarm = validated_replay(cfg, chunks[:2], enabled[:2], state=st,
+                                 interval=1, vals_mode="any")
+    assert int(alarm) != 0
+    *_, alarm = validated_replay(cfg, chunks, enabled, interval=4,
+                                 vals_mode="key")
+    assert int(alarm) == 0
+
+
+# ---------------------------------------------------------------------------
+# request-stream faults: survived, not detected
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dup", "poison"])
+def test_trace_faults_survived(kind):
+    tr, rep_f = faults.corrupt_trace(golden_trace(), kind, seed=3)
+    assert rep_f.kind == kind
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("jnp", cfg)
+    chunks, enabled = pad_chunks(tr, 8)
+    _, _, st, _ = be.replay(be.init(), chunks, enabled)
+    rep = check_cache(cfg, st, vals_mode="key")
+    # poison keys include the EMPTY_KEY sentinel: sanitize_keys must fold
+    # it, never store it raw — the state stays structurally clean
+    assert rep.clean(), explain_cache(rep)
+    assert not np.any(np.asarray(st.keys)[np.asarray(st.keys) != EMPTY_KEY]
+                      == np.uint32(0xFFFFFFFF))
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_forced_vmem_breach_takes_scan_rung_with_event(monkeypatch):
+    """Satellite: the silent RESIDENT_VMEM_BUDGET fallback is now an
+    observable degradation event, and the fallback rung still matches the
+    resident path's golden-trace results bit-for-bit."""
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("pallas", cfg)
+    chunks, enabled = _chunks()
+    h_ref, e_ref, st_ref, _ = be.replay(be.init(), chunks, enabled)
+
+    monkeypatch.setattr(backend_mod, "RESIDENT_VMEM_BUDGET", 0)
+    c0 = events.cursor()
+    h, e, st, _ = be.replay(be.init(), chunks, enabled)
+    evs = [ev for ev in events.since(c0) if ev.component == "pallas.replay"]
+    assert len(evs) == 1 and evs[0].reason == "vmem_budget"
+    assert evs[0].fallback_from == "pallas-resident"
+    assert evs[0].fallback_to == "chunked-scan"
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(h_ref))
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(e_ref))
+    np.testing.assert_array_equal(np.asarray(st.keys),
+                                  np.asarray(st_ref.keys))
+
+
+def test_ladder_vmem_breach(monkeypatch):
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled = _chunks()
+    out_fast = resilient_replay(cfg, chunks, enabled)
+    assert out_fast.rung == "pallas-resident"
+
+    monkeypatch.setattr(backend_mod, "RESIDENT_VMEM_BUDGET", 0)
+    c0 = events.cursor()
+    out = resilient_replay(cfg, chunks, enabled)
+    assert out.rung == "pallas-scan"
+    assert ("pallas-resident", "vmem_budget") in out.attempts
+    assert events.count(component="ladder.replay", reason="vmem_budget",
+                        start=c0) == 1
+    np.testing.assert_array_equal(np.asarray(out.hits),
+                                  np.asarray(out_fast.hits))
+
+
+def test_ladder_kernel_failure(monkeypatch):
+    from repro.kernels import ops
+
+    def boom(*a, **k):
+        raise RuntimeError("injected kernel fault")
+
+    monkeypatch.setattr(ops, "replay_resident", boom)
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled = _chunks()
+    c0 = events.cursor()
+    out = resilient_replay(cfg, chunks, enabled)
+    assert out.rung == "pallas-scan"
+    assert ("pallas-resident", "kernel_failure") in out.attempts
+    ev = [e for e in events.since(c0) if e.reason == "kernel_failure"][0]
+    assert "injected kernel fault" in ev.detail
+
+
+def test_ladder_validator_alarm_descends_then_raises():
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled = _chunks()
+    rejected = []
+
+    def reject_pallas(st, sk, _n=[0]):
+        _n[0] += 1
+        rejected.append(_n[0])
+        return (_n[0] > 2), "forced alarm"   # fail the two pallas rungs
+
+    out = resilient_replay(cfg, chunks, enabled, validate_fn=reject_pallas)
+    assert out.rung == "jnp-scan"
+    assert ("pallas-resident", "validator_alarm") in out.attempts
+    assert ("pallas-scan", "validator_alarm") in out.attempts
+
+    with pytest.raises(RuntimeError, match="last ladder rung"):
+        resilient_replay(cfg, chunks, enabled,
+                         validate_fn=lambda st, sk: (False, "always bad"))
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_passthrough_and_slow_recovery():
+    assert watch(lambda: 41 + 1, timeout_s=0) == 42        # disabled
+    c0 = events.cursor()
+    out = watch(lambda: (time.sleep(0.25), "done")[1], timeout_s=0.05,
+                retries=5, backoff=2.0, component="test.slow")
+    assert out == "done"
+    assert events.count(component="test.slow", reason="sync_timeout",
+                        start=c0) >= 1
+
+
+def test_watchdog_gives_up_and_propagates():
+    hang = threading.Event()
+    with pytest.raises(WatchdogTimeout):
+        watch(hang.wait, timeout_s=0.02, retries=1, component="test.hang")
+    hang.set()
+
+    def boom():
+        raise ValueError("inner")
+
+    with pytest.raises(ValueError, match="inner"):
+        watch(boom, timeout_s=1.0)
+
+
+def test_threaded_replay_watchdog():
+    from repro.showdown.harness import ThreadedReplay
+
+    class SleepyCache:
+        def access(self, k):
+            time.sleep(0.05)
+            return False
+
+    tr = np.arange(64, dtype=np.uint32)
+    with ThreadedReplay(SleepyCache(), tr, threads=2, timeout_s=0.03,
+                        retries=0) as rep:
+        with pytest.raises(WatchdogTimeout):
+            rep()
+
+    class FastCache:
+        def access(self, k):
+            return True
+
+    with ThreadedReplay(FastCache(), tr, threads=2, timeout_s=5.0) as rep:
+        assert rep() == 64
+
+
+# ---------------------------------------------------------------------------
+# serving engine: ServeState validation, faults, checkpoint/restore
+# ---------------------------------------------------------------------------
+
+BASE = dict(page=8, num_sets=16, ways=4, max_batch=4, max_seq=128,
+            private_pages=96, max_prompt=80)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro import configs
+    from repro.models import lm
+    cfg = configs.get("deepseek-7b").smoke
+    return cfg, lm.init_params(cfg, jax.random.key(0))
+
+
+def _engine(small_model, **kw):
+    from repro.serve import Engine, EngineConfig
+    cfg, params = small_model
+    e = dict(BASE)
+    e.update(kw)
+    return Engine(cfg, params, EngineConfig(jitted=True, **e))
+
+
+def _submit_mix(eng, vocab, seed=0, n=6, max_new=8):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(2, vocab - 1, 40)
+    for _ in range(n):
+        tail = rng.integers(2, vocab - 1, int(rng.integers(3, 14)))
+        eng.submit(np.concatenate([shared, tail]), max_new=max_new)
+
+
+def test_serve_state_clean_mid_run_and_drained(small_model):
+    eng = _engine(small_model)
+    _submit_mix(eng, small_model[0].vocab_size)
+    for _ in range(3):
+        eng.step()
+    rep = check_serve(eng.ecfg, eng._sstate)
+    assert rep.clean(), explain_serve(rep)
+    assert bool(np.asarray(eng._sstate.active).any())
+    eng.run(max_steps=60)
+    rep = check_serve(eng.ecfg, eng._sstate)
+    assert rep.clean(), explain_serve(rep)
+
+
+def test_serve_faults_detected(small_model):
+    eng = _engine(small_model)
+    _submit_mix(eng, small_model[0].vocab_size)
+    for _ in range(3):
+        eng.step()
+    st = eng._sstate
+
+    st2, _ = faults.double_book_page(eng.ecfg, st, seed=3)
+    rep = check_serve(eng.ecfg, st2)
+    assert not rep.clean()
+    assert any("double_booked" in line or "dup_page_in_row" in line
+               for line in explain_serve(rep))
+
+    st3, rep_f = faults.stale_owner(eng.ecfg, st, seed=5)
+    rep = check_serve(eng.ecfg, st3)
+    assert not rep.clean()
+    assert any(f"private page {rep_f.index[0]}" in line
+               for line in explain_serve(rep))
+
+    pk, _ = faults.inject_nan(st.pool_k, seed=1)
+    rep = check_serve(eng.ecfg, dataclasses.replace(st, pool_k=pk))
+    assert any("nan_in_kv" in line for line in explain_serve(rep))
+
+
+def test_crash_mid_tick_restore_bit_identical(small_model, tmp_path):
+    """Tentpole: commit at tick 3, run tick 4, crash before its checkpoint
+    commits — restore must come back from tick 3 and re-emit exactly the
+    uninterrupted run's tokens."""
+    from repro.ckpt import manager
+
+    ref = _engine(small_model)
+    _submit_mix(ref, small_model[0].vocab_size)
+    ref.run(max_steps=60)
+    gold = {rid: list(r.generated) for rid, r in ref.finished.items()}
+
+    eng = _engine(small_model)
+    _submit_mix(eng, small_model[0].vocab_size)
+    root = str(tmp_path / "ckpt")
+    for _ in range(3):
+        eng.step()
+    save_engine(eng, root, 3)
+    eng.step()                                    # tick 4 runs...
+    faults.crashed_save(eng._sstate, root, 4)     # ...its commit never lands
+    assert manager.latest_step(root) == 3
+
+    eng2 = _engine(small_model)
+    assert restore_engine(eng2, root) == 3
+    eng2.run(max_steps=60)
+    got = {rid: list(r.generated) for rid, r in eng2.finished.items()}
+    assert got == gold
+    assert check_serve(eng2.ecfg, eng2._sstate).clean()
+
+
+def test_checkpointed_engine_cadence(small_model, tmp_path):
+    from repro.ckpt import manager
+    from repro.robust import CheckpointedEngine
+
+    eng = _engine(small_model)
+    _submit_mix(eng, small_model[0].vocab_size, n=4, max_new=4)
+    ck = CheckpointedEngine(eng, str(tmp_path), every=2, keep_last=2)
+    fin = ck.run(max_steps=40)
+    assert len(fin) == 4
+    assert ck.last_committed is not None
+    assert manager.latest_step(str(tmp_path)) == ck.last_committed
+
+
+def test_engine_duplicate_and_reordered_submits(small_model):
+    """Request-stream faults: duplicate submits are distinct requests (new
+    rid each) and complete exactly once each."""
+    eng = _engine(small_model)
+    prompt = np.arange(2, 44, dtype=np.int32)
+    r1 = eng.submit(prompt, max_new=4)
+    r2 = eng.submit(prompt, max_new=4)   # duplicate submit
+    assert r1 != r2
+    fin = eng.run(max_steps=40)
+    assert set(fin) == {r1, r2}
+    assert list(fin[r1].generated) == list(fin[r2].generated)
+    assert check_serve(eng.ecfg, eng._sstate).clean()
+
+
+def test_engine_degradation_events_in_stats(small_model):
+    eng = _engine(small_model)
+    assert eng.stats["degradation_events"] == 0
+    events.record(component="test.engine", reason="synthetic")
+    assert eng.stats["degradation_events"] == 1
+
+
+def test_engine_sync_watchdog_normal_path(small_model):
+    """With the watchdog armed, a healthy tick behaves identically."""
+    eng = _engine(small_model, sync_timeout_s=30.0)
+    _submit_mix(eng, small_model[0].vocab_size, n=2, max_new=3)
+    fin = eng.run(max_steps=30)
+    assert len(fin) == 2
+    assert check_serve(eng.ecfg, eng._sstate).clean()
+
+
+# ---------------------------------------------------------------------------
+# satellite: typed ValueErrors for user-facing guards
+# ---------------------------------------------------------------------------
+
+def test_submit_prompt_length_valueerror(small_model):
+    eng = _engine(small_model)
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit(np.arange(BASE["max_prompt"] + 1, dtype=np.int32))
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit(np.zeros(0, np.int32))
+
+
+def test_engine_config_valueerrors(small_model):
+    from repro.serve import Engine, EngineConfig
+    cfg, params = small_model
+    bad = dict(BASE)
+    bad["max_seq"] = 130                      # not a page multiple
+    with pytest.raises(ValueError, match="max_seq"):
+        Engine(cfg, params, EngineConfig(**bad))
+    bad = dict(BASE)
+    bad["decode_block"] = 0
+    with pytest.raises(ValueError, match="decode_block"):
+        Engine(cfg, params, EngineConfig(**bad))
+    bad = dict(BASE)
+    bad["max_prompt"] = 81                    # not a page multiple
+    with pytest.raises(ValueError, match="max_prompt"):
+        Engine(cfg, params, EngineConfig(**bad))

@@ -190,5 +190,5 @@ def test_probe_prefix_first_miss_vectorized(small_model):
 def test_engine_rejects_ssm():
     cfg = configs.get("mamba2-130m").smoke
     params = lm.init_params(cfg, jax.random.key(0))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="decoder-only"):
         _engine(cfg, params)
