@@ -5,8 +5,9 @@
 Sections: hit_ratio (Figs 4-13), throughput (Figs 14-26),
 synthetic_mix (Figs 27-30), showdown (Fig. 1 analogue: production caches
 vs our paths), theorem41 (§4), kernels, serving, robustness (validator /
-recovery / degradation ladder, DESIGN.md §13), roofline (reads
-dryrun_results.json when present).
+recovery / degradation ladder, DESIGN.md §13), hierarchy (L1-over-L2
+replay, DESIGN.md §14), roofline (reads dryrun_results.json when
+present).
 
 The figure sections are thin shims over ``repro.eval`` (DESIGN.md §7) — for
 machine-readable, baseline-gated artifacts use
@@ -70,6 +71,7 @@ def main():
         "kernels": kernels_bench.run,
         "serving": serving.run,
         "robustness": lambda: robustness.run(quick=args.quick),
+        "hierarchy": lambda: throughput.run_hierarchy(quick=args.quick),
         "roofline": _roofline_section,
     }
     for name, fn in sections.items():

@@ -22,8 +22,15 @@ steady-state timing).  Four surfaces:
     resident-vs-scan hit-ratio EQUALITY (the megakernel is bit-identical
     by construction; exit 3 on any divergence).  The CI resident
     perf-smoke entry point.
+  * ``--hierarchy-compare``: the two-level L1-over-L2 replay hierarchy vs
+    the flat replay (``figures.hierarchy`` — req/s at an in-budget and an
+    over-budget L2 capacity, plus hit ratio vs the L1-size knob) — writes
+    its BENCH artifact and (with ``--hit-ratio-gate``) gates the ``l1-0``
+    parity records exactly, the enabled-knob hit ratios within the 0.02
+    band, and the over-budget speedup >= 2x (the capacity-cliff headline;
+    exit 3 on breach).  The CI hierarchy perf-smoke entry point.
 
-All three gates share one helper pair (``_baseline_gate`` / ``_run_gate``):
+All the gates share one helper pair (``_baseline_gate`` / ``_run_gate``):
 a single baseline-diff implementation and a single exit-code contract
 (0 = pass, 3 = divergence, and a gate whose ids match nothing is *dead* —
 reported as a breach, never as a silent pass).
@@ -43,6 +50,14 @@ def run(quick=False, backends=("jnp", "pallas", "ref"), shards=(1, 4)):
         if r["metric"] != "mops_per_s":
             continue        # ratio rows (speedup_x) don't fit the CSV unit
         emit("throughput", r["id"], f"{r['value']:.3f}")
+
+
+def run_hierarchy(quick=False):
+    """CSV section for benchmarks/run.py (L1-over-L2 hierarchy figure)."""
+    print("table,config,value")
+    _, records, _ = figures.hierarchy(quick=quick)
+    for r in records:
+        emit("hierarchy", r["id"], f"{r['value']:.6g}")
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +227,65 @@ def resident_equality_gate(records):
     return checked, breaches
 
 
+def hierarchy_gate(baseline_path: str, records):
+    """Gate a fresh ``figures.hierarchy`` run against the checked-in
+    baseline (three contracts in one gate):
+
+      * ``hier-hr/.../l1-0`` parity records: exact (tol 0.0) vs the
+        baseline AND vs their own fresh ``scan_value`` — the disabled
+        hierarchy IS the flat path, bit-for-bit;
+      * enabled ``hier-hr/...`` records: within the 0.02 band of the
+        baseline — a promotion/demotion bug moves hit ratios by far more;
+      * the over-budget ``hier-tp/speedup/...`` record: >= 2x fresh — the
+        capacity-cliff headline must hold on every run, not just the one
+        that minted the baseline.
+
+    Returns (checked, breaches).
+    """
+    fresh = {r["id"]: r for r in records}
+
+    def mk(rid, exact):
+        def eval_fn(rec):
+            fr = fresh.get(rid)
+            if fr is None:
+                return []
+            out = [(rid, fr["value"], rec["value"])]
+            if exact:
+                out.append((f"{rid} (flat-scan parity)",
+                            fr["value"], fr["scan_value"]))
+            return out
+        return eval_fn
+
+    parity_pts, band_pts = [], []
+    for rid, fr in fresh.items():
+        if not rid.startswith("hier-hr/"):
+            continue
+        exact = fr.get("tol") == 0.0
+        (parity_pts if exact else band_pts).append((rid, mk(rid, exact)))
+    c1, b1 = _baseline_gate(baseline_path, parity_pts, tol=0.0)
+    c2, b2 = _baseline_gate(baseline_path, band_pts, tol=0.02)
+    checked, breaches = c1 + c2, b1 + b2
+
+    # the capacity-cliff headline rides in the fresh records, not the
+    # baseline: past the VMEM budget the hierarchical kernel must beat the
+    # flat path's chunked-scan fallback by >= 2x
+    headline = 0
+    for r in records:
+        if r["id"].startswith("hier-tp/speedup/") and r.get("over_budget"):
+            headline += 1
+            checked += 1
+            if r["value"] < 2.0:
+                breaches.append(
+                    f"{r['id']}: over-budget speedup {r['value']:.2f}x "
+                    "< 2x — the hierarchy no longer breaks the capacity "
+                    "cliff")
+    if headline == 0:
+        breaches.append(
+            "no over-budget hier-tp/speedup record in the hierarchy run — "
+            "the capacity-cliff check is a no-op")
+    return checked, breaches
+
+
 # ---------------------------------------------------------------------------
 # CLI modes
 # ---------------------------------------------------------------------------
@@ -325,6 +399,50 @@ def _resident_compare(args) -> int:
                      checked, breaches)
 
 
+def _hierarchy_compare(args) -> int:
+    from repro.eval import artifacts
+
+    spec, records, skipped = figures.hierarchy(
+        quick=args.quick,
+        progress=None if args.quiet else
+        (lambda m: print(f"  [hierarchy] {m}", flush=True)))
+    art = artifacts.make_artifact("hierarchy", spec, records, skipped)
+    out = args.out or "BENCH_throughput_hierarchy.json"
+    artifacts.write_artifact(out, art)
+
+    by_id = {r["id"]: r for r in records}
+    print("\nL1-over-L2 hierarchy vs flat replay (whole-trace, "
+          f"n={spec['n']}, batch={spec['batch']}, "
+          f"L1 {spec['l1_sets']}x{spec['l1_ways']}; p50 steady-state):")
+    print(f"{'L2 sets':>8} {'flat path':>16} {'flat req/s':>12} "
+          f"{'l1l2 req/s':>12} {'speedup':>8}")
+    b = spec["batch"]
+    for s in spec["l2_sets"]:
+        flat = by_id[f"hier-tp/flat/s{s}/batch{b}"]
+        l1l2 = by_id[f"hier-tp/l1l2/s{s}/batch{b}"]
+        speed = by_id[f"hier-tp/speedup/s{s}/batch{b}"]
+        print(f"{s:>8} {flat['path']:>16} {flat['p50_req_s']:>12.0f} "
+              f"{l1l2['p50_req_s']:>12.0f} {speed['value']:>7.2f}x")
+    print("\nhit ratio vs total capacity (L2 fixed at "
+          f"{by_id['hier-hr/zipf/l1-0']['l2_capacity']} entries):")
+    print(f"{'family':<16} {'L1 sets':>8} {'total cap':>10} "
+          f"{'hier':>8} {'flat oracle':>12}")
+    for r in records:
+        if not r["id"].startswith("hier-hr/"):
+            continue
+        oracle = r.get("flat_value", r.get("scan_value"))
+        print(f"{r['family']:<16} {r['l1_sets']:>8} "
+              f"{r['total_capacity']:>10} {r['value']:>8.4f} "
+              f"{oracle:>12.4f}")
+    print(f"\n{len(records)} records -> {out}")
+
+    if args.hit_ratio_gate:
+        checked, breaches = hierarchy_gate(args.hit_ratio_gate, records)
+        return _run_gate("hierarchy", args.hit_ratio_gate,
+                         checked, breaches)
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m benchmarks.throughput",
@@ -341,18 +459,26 @@ def main(argv=None) -> int:
                          "+ BENCH artifact; gates resident-vs-scan "
                          "hit-ratio equality (the CI resident perf-smoke "
                          "mode)")
+    ap.add_argument("--hierarchy-compare", action="store_true",
+                    help="two-level L1-over-L2 hierarchy vs flat replay + "
+                         "BENCH artifact; with --hit-ratio-gate, gates "
+                         "l1-0 parity exactly, enabled hit ratios within "
+                         "0.02, and the over-budget speedup >= 2x (the CI "
+                         "hierarchy perf-smoke mode)")
     ap.add_argument("--out", default=None,
                     help="artifact path for the --*-compare modes "
                          "(default BENCH_<figure>.json)")
     ap.add_argument("--hit-ratio-gate", default=None, metavar="BASELINE",
-                    help="with --fused-compare (or --shards-compare): "
-                         "replay a slice of this baseline grid through the "
-                         "fused (or sharded) path; exit 3 on divergence")
+                    help="with --fused-compare, --shards-compare or "
+                         "--hierarchy-compare: diff this checked-in "
+                         "baseline against the fused / sharded / "
+                         "hierarchical replay; exit 3 on divergence")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
     modes = [m for m, on in (("--fused-compare", args.fused_compare),
                              ("--shards-compare", args.shards_compare),
-                             ("--resident-compare", args.resident_compare))
+                             ("--resident-compare", args.resident_compare),
+                             ("--hierarchy-compare", args.hierarchy_compare))
              if on]
     if len(modes) > 1:
         ap.error(f"{' and '.join(modes)} are separate modes")
@@ -361,6 +487,8 @@ def main(argv=None) -> int:
         # the always-on resident-vs-scan equality check, not a baseline file
         ap.error("--resident-compare gates resident-vs-scan equality "
                  "unconditionally and takes no --hit-ratio-gate baseline")
+    if args.hierarchy_compare:
+        return _hierarchy_compare(args)
     if args.resident_compare:
         return _resident_compare(args)
     if args.shards_compare:

@@ -33,6 +33,8 @@ Semantics:
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -45,9 +47,28 @@ from repro.core.refimpl import RefKWay
 #: VMEM budget for the trace-resident replay megakernel (DESIGN.md §10):
 #: the resident footprint — input + working copies of the 5 state lanes at
 #: the 128-lane padded width, plus streams and sketch — must fit the ~16 MiB
-#: of a TPU core with headroom for the compiler.  Past this the chunked-scan
-#: replay path is required.
+#: of a TPU core with headroom for the compiler.  Past this the flat
+#: resident path is unavailable; the hierarchical kernel (DESIGN.md §14)
+#: or the chunked-scan replay take over.
 RESIDENT_VMEM_BUDGET = 12 << 20
+
+
+@contextlib.contextmanager
+def vmem_budget(nbytes: int):
+    """Temporarily override ``RESIDENT_VMEM_BUDGET`` (try/finally restore).
+
+    The chaos figures and tests force VMEM breaches by shrinking the
+    budget; doing that with an inline set/restore leaks the override when
+    the timed call raises mid-measurement.  This is the one sanctioned way
+    to patch the budget.
+    """
+    global RESIDENT_VMEM_BUDGET
+    prev = RESIDENT_VMEM_BUDGET
+    RESIDENT_VMEM_BUDGET = nbytes
+    try:
+        yield
+    finally:
+        RESIDENT_VMEM_BUDGET = prev
 
 _REGISTRY: dict[str, type] = {}
 
@@ -140,7 +161,23 @@ class CacheBackend:
                                      admit_on_miss=admit_on_miss,
                                      enabled=enabled, slot_value=slot_value)
 
-    def replay(self, state, chunks, enabled, tinylfu=None, sketch=None):
+    def _replay_hier(self, state, chunks, enabled, tinylfu, hierarchy):
+        """Hierarchical replay through the pure-XLA twin
+        (core/hierarchy.replay_l1_over_l2).  ``state`` may be a
+        ``HierState`` (resumed hierarchy) or a plain ``KWayState`` (the L2;
+        a fresh empty L1 is attached).  Returns (hits, evs, HierState',
+        None)."""
+        from repro.core import hierarchy as hier_mod
+        if tinylfu is not None:
+            raise ValueError(
+                "hierarchical replay does not support TinyLFU admission "
+                "(the sketch has no per-tier semantics yet)")
+        hst = hier_mod.as_hier_state(self.cfg, hierarchy, state)
+        return hier_mod.replay_l1_over_l2(self.cfg, hierarchy, hst,
+                                          chunks, enabled)
+
+    def replay(self, state, chunks, enabled, tinylfu=None, sketch=None,
+               hierarchy=None):
         """Replay a whole chunked trace: ``chunks`` uint32 [steps, B] and
         ``enabled`` bool [steps, B] in the ``router.pad_chunks`` layout,
         payload convention ``val == key`` (as int32).
@@ -148,6 +185,12 @@ class CacheBackend:
         -> (hits int32 [steps], evs int32 [steps], state', sketch'|None):
         per-chunk hit and eviction counts, the final cache state, and the
         updated TinyLFU sketch when ``tinylfu`` is given.
+
+        ``hierarchy`` (a :class:`repro.core.hierarchy.HierarchyConfig`
+        with ``l1_sets > 0``) selects the L1-over-L2 replay mode: ``state``
+        may then be a ``HierState`` or a bare L2 ``KWayState``, and the
+        returned state is a ``HierState``.  ``l1_sets == 0`` (or None)
+        falls through to the flat paths unchanged.
 
         Default implementation: one jitted ``lax.scan`` over the chunks
         through the fused ``access`` with the TinyLFU record → peek → admit
@@ -158,6 +201,9 @@ class CacheBackend:
             raise ValueError(
                 f"backend {self.name!r} is host Python and has no scanned "
                 "replay; drive it through simulate.replay_batched")
+        if hierarchy is not None and hierarchy.enabled:
+            return self._replay_hier(state, chunks, enabled, tinylfu,
+                                     hierarchy)
         if tinylfu is not None and sketch is None:
             sketch = admission.make_sketch(tinylfu)
         if tinylfu is None and sketch is None:
@@ -288,6 +334,14 @@ class PallasBackend(CacheBackend):
         lane_bytes = self.cfg.num_sets * _kp.LANES * 4
         return 2 * 5 * lane_bytes <= RESIDENT_VMEM_BUDGET
 
+    def hier_fits(self, hierarchy) -> bool:
+        """True when the HIERARCHICAL megakernel's VMEM-resident footprint
+        (the five L1 lanes, padded and double-buffered — same accounting as
+        ``resident_fits`` with ``l1_sets`` in place of ``num_sets``) fits
+        the budget.  The L2 stays in slow memory and does not count."""
+        from repro.core.hierarchy import hier_footprint_bytes
+        return hier_footprint_bytes(hierarchy) <= RESIDENT_VMEM_BUDGET
+
     def replay_scan(self, state, chunks, enabled, tinylfu=None, sketch=None):
         """The chunked-scan replay (the CacheBackend default), kept callable
         on this backend as the megakernel's differential oracle and as the
@@ -295,16 +349,45 @@ class PallasBackend(CacheBackend):
         return CacheBackend.replay(self, state, chunks, enabled,
                                    tinylfu=tinylfu, sketch=sketch)
 
-    def replay(self, state, chunks, enabled, tinylfu=None, sketch=None):
-        """Trace-resident replay: the WHOLE chunked trace in one pallas
-        launch (kernels/replay.py) — state lanes pinned in VMEM, per-chunk
-        transitions applied in-kernel, per-chunk hit/eviction counters the
-        only per-step output.  Bit-identical to ``replay_scan``.
+    def replay(self, state, chunks, enabled, tinylfu=None, sketch=None,
+               hierarchy=None):
+        """Trace-resident replay with a three-way dispatch (DESIGN.md §14):
 
-        Falls back to the chunked scan when the state is too large to stay
-        VMEM-resident (see ``resident_fits``).
+          1. ``hierarchy`` configured (``l1_sets > 0``) → the hierarchical
+             megakernel: L1 pinned in VMEM, L2 behind per-set row DMAs —
+             near-resident throughput at capacities far past the flat
+             budget.  If even the L1 exceeds the budget, the L1 tier is
+             abandoned (``l1_demotion`` event) and the jnp twin runs.
+          2. no hierarchy, flat state fits (``resident_fits``) → the flat
+             megakernel: ALL lanes pinned in VMEM, bit-identical to
+             ``replay_scan``.
+          3. otherwise → the chunked-scan replay (``vmem_budget`` event;
+             the hierarchical mode is named in the event detail as the
+             faster opt-in).
         """
         from repro.kernels import ops
+        if hierarchy is not None and hierarchy.enabled:
+            if tinylfu is not None:
+                raise ValueError(
+                    "hierarchical replay does not support TinyLFU admission "
+                    "(the sketch has no per-tier semantics yet)")
+            from repro.core import hierarchy as hier_mod
+            hst = hier_mod.as_hier_state(self.cfg, hierarchy, state)
+            if self.hier_fits(hierarchy):
+                return ops.replay_hierarchical(self.cfg, hierarchy, hst,
+                                               chunks, enabled)
+            from repro.robust import events
+            events.record(
+                component="pallas.replay", reason="l1_demotion",
+                fallback_from="pallas-resident-l1l2",
+                fallback_to="jnp-l1l2-scan",
+                detail=(f"L1 footprint "
+                        f"{hier_mod.hier_footprint_bytes(hierarchy)} B "
+                        f"exceeds budget {RESIDENT_VMEM_BUDGET} B "
+                        f"(l1_sets={hierarchy.l1_sets}); hierarchy "
+                        f"demoted to the jnp l1_over_l2 twin"))
+            return hier_mod.replay_l1_over_l2(self.cfg, hierarchy, hst,
+                                              chunks, enabled)
         if not self.resident_fits():
             from repro.robust import events
             lane_bytes = self.cfg.num_sets * 128 * 4
@@ -313,7 +396,10 @@ class PallasBackend(CacheBackend):
                 fallback_from="pallas-resident", fallback_to="chunked-scan",
                 detail=(f"resident footprint {2 * 5 * lane_bytes} B exceeds "
                         f"budget {RESIDENT_VMEM_BUDGET} B "
-                        f"(num_sets={self.cfg.num_sets})"))
+                        f"(num_sets={self.cfg.num_sets}); falling back to "
+                        f"chunked-scan — the hierarchical resident mode "
+                        f"(HierarchyConfig(l1_sets>0)) keeps a VMEM L1 over "
+                        f"the HBM L2 at this capacity"))
             return self.replay_scan(state, chunks, enabled,
                                     tinylfu=tinylfu, sketch=sketch)
         return ops.replay_resident(self.cfg, state, chunks, enabled,

@@ -1,0 +1,590 @@
+"""Two-level replay hierarchy: a small VMEM-pinned L1 over the HBM L2.
+
+PR 5's trace-resident megakernel keeps ALL five state lanes in VMEM and
+wins 7×+ over the chunked scan — but only below ``RESIDENT_VMEM_BUDGET``
+(12 MiB).  One set past the budget the backend silently falls off a cliff
+back to the per-chunk scan.  *Limited Associativity Caching in the Data
+Plane* (PAPERS.md) shows the classic fix transplants cleanly to limited
+associativity: a small fast-memory set-associative front tier backed by a
+large slow-memory tier, with victim *demotion* instead of eviction.
+
+This module is the single source of truth for the hierarchy's semantics:
+
+  * ``HierarchyConfig`` — the L1 knob (``l1_sets`` × ``l1_ways``) plus the
+    ``promote`` / ``demote`` movement switches;
+  * ``HierState`` — an (L1, L2) pair of ordinary ``KWayState`` pytrees;
+  * the pure per-row phase transitions (``_l1_hit_row`` /
+    ``_l2_hit_row`` / ``_l1_fill_row`` / ``_l2_demote_row``) shared
+    verbatim by the jnp twin below AND the Pallas kernel
+    (kernels/replay.py) — both callers only differ in how a set row is
+    fetched/stored (dynamic_slice vs ref/DMA), so the arithmetic —
+    scores, tie-breaks, metadata transitions — is bit-identical by
+    construction;
+  * ``replay_l1_over_l2`` — the jitted chunked-scan twin, the hierarchy's
+    differential oracle (tests/test_hierarchy.py pins kernel == twin
+    bit-for-bit on states, hit counts and eviction counts).
+
+Row layout: each tier travels as ONE int32 ``[sets, ROW_W]`` array of six
+128-column sections — ``keys | fprint | vals | meta_a | meta_b | scalars``.
+The sixth section is an in-row scalar mailbox: every phase WRITES the
+scalars later phases need (hit flags, the promoted entry, the displaced
+victim, the eviction flag) into the row it stores, and consumers read them
+back from the row AFTER the store.  That discipline — a fetched row's
+values flow only into that row's writeback; cross-phase scalars travel
+through the post-store row; and each loop iteration performs AT MOST ONE
+fetch->store round-trip per tier (hence the even/odd phase interleave in
+the replay loops: A+B on even steps, C+D on odd) — is what lets XLA keep
+every row update in-place inside the replay loop.  Breaking any leg of it
+(a pre-store value escaping to another buffer, or a second round-trip on
+the same array in one iteration) makes copy-insertion clone the whole
+tier per lane, turning the O(row) update into O(sets).  The packed layout
+also means one L2 set row is ONE DMA on the kernel path.
+
+Semantics (exclusive hierarchy, DESIGN.md §14):
+
+  Each lane of a chunk is processed sequentially (lane i sees lane i-1's
+  inserts — the hierarchy's transfer ops are RMW on two tiers, so the
+  flat path's buffered-insert reordering does not apply).  Per lane:
+
+    1. probe L1 (fingerprint pre-filter + full-key confirm).  Hit →
+       ``on_hit`` on the L1 metadata at t_get.  Done.
+    2. probe L2.  Hit → ``on_hit`` on the L2 metadata at t_get; with
+       ``promote`` the slot is MOVED into L1 (L2 slot cleared — the tiers
+       stay exclusive, no key is ever resident twice), else updated in
+       place.
+    3. full miss → insert (val == key payload) into L1 with ``on_insert``
+       metadata at t_put.
+    4. any L1 insert displaces that set's policy victim; with ``demote``
+       the displaced entry is inserted into ITS OWN L2 set (metadata
+       carried — recency/frequency survives the demotion), else dropped.
+       An eviction is counted when an entry leaves the hierarchy: a
+       demotion landing on an occupied L2 victim, or a displaced entry
+       dropped with ``demote=False``.
+
+  The L1 uses a salted set hash (``seed ^ L1_SEED_SALT``) so the two
+  tiers' set mappings are independent — a pathological L2 set does not
+  collapse onto one L1 set.
+
+``l1_sets == 0`` disables the hierarchy entirely: every caller dispatches
+to the existing flat paths, so the disabled mode is bit-exact with them
+by construction (pinned by the differential suite).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.kway import KWayConfig, KWayState, make_cache
+from repro.core.policies import Policy
+from repro.kernels.kway_probe import (LANES, NEG_INF, POS_INF,
+                                      _fingerprint_i32, _hash_u32,
+                                      _scores_for_policy)
+
+__all__ = [
+    "L1_SEED_SALT", "ROW_W", "HierarchyConfig", "HierState", "l1_config",
+    "make_hier", "as_hier_state", "hier_footprint_bytes",
+    "replay_l1_over_l2",
+]
+
+#: XOR salt for the L1 set hash — decorrelates the two tiers' set mappings.
+L1_SEED_SALT = 0x7A11
+
+_EMPTY = -1  # EMPTY_KEY (0xFFFFFFFF) in the kernels' int32 bit-cast domain
+
+#: packed-row width: five state sections + the scalar-mailbox section,
+#: each LANES columns wide
+ROW_SECS = 6
+ROW_W = ROW_SECS * LANES
+
+# scalar-mailbox slots.  Each phase overwrites the WHOLE scalar section of
+# the row it stores, so slots only need to be unique within one phase:
+#   L1 hit phase   -> SC_HIT1
+#   L2 hit phase   -> SC_L2HIT, SC_PVAL, SC_PA, SC_PB
+#   L1 fill phase  -> SC_DVALID, SC_DK..SC_DB (the displaced victim)
+#   L2 demote      -> SC_EV
+SC_HIT1 = 0
+SC_L2HIT = 0
+SC_PVAL = 1
+SC_PA = 2
+SC_PB = 3
+SC_DVALID = 0
+SC_DK = 1
+SC_DF = 2
+SC_DV = 3
+SC_DA = 4
+SC_DB = 5
+SC_EV = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyConfig:
+    """Static L1-over-L2 configuration (hashable; safe as a jit static).
+
+    ``l1_sets == 0`` means "no hierarchy" — callers fall through to the
+    flat replay paths unchanged.  ``promote`` moves L2 hits into L1
+    (exclusive move, the L2 slot is cleared); ``demote`` re-inserts L1
+    victims into their own L2 set instead of dropping them.
+    """
+
+    l1_sets: int
+    l1_ways: int = 16
+    promote: bool = True
+    demote: bool = True
+
+    def __post_init__(self):
+        assert self.l1_sets >= 0
+        assert self.l1_sets == 0 or self.l1_sets & (self.l1_sets - 1) == 0, \
+            "l1_sets must be 0 or a power of two"
+        assert 1 <= self.l1_ways <= LANES
+
+    @property
+    def enabled(self) -> bool:
+        return self.l1_sets > 0
+
+    @property
+    def l1_capacity(self) -> int:
+        return self.l1_sets * self.l1_ways
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HierState:
+    """The hierarchy's contents: two ordinary k-way states.
+
+    The logical clock is shared (both tiers' ``clock`` fields hold the
+    same value after every replay); ``l2.clock`` is authoritative on
+    entry.
+    """
+
+    l1: KWayState
+    l2: KWayState
+
+    def occupancy(self) -> jnp.ndarray:
+        return self.l1.occupancy() + self.l2.occupancy()
+
+
+def l1_config(cfg: KWayConfig, hier: HierarchyConfig) -> KWayConfig:
+    """The L1 tier as a plain KWayConfig (same policy, salted set seed)."""
+    return KWayConfig(num_sets=hier.l1_sets, ways=hier.l1_ways,
+                      policy=cfg.policy, layout=cfg.layout,
+                      seed=cfg.seed ^ L1_SEED_SALT)
+
+
+def make_hier(cfg: KWayConfig, hier: HierarchyConfig) -> HierState:
+    """Fresh empty hierarchy over an empty L2 of ``cfg``'s geometry."""
+    return HierState(l1=make_cache(l1_config(cfg, hier)), l2=make_cache(cfg))
+
+
+def as_hier_state(cfg: KWayConfig, hier: HierarchyConfig,
+                  state) -> HierState:
+    """Coerce a replay input state: a ``HierState`` passes through, a bare
+    L2 ``KWayState`` gets a fresh empty L1 attached."""
+    if isinstance(state, HierState):
+        return state
+    return HierState(l1=make_cache(l1_config(cfg, hier)), l2=state)
+
+
+def hier_footprint_bytes(hier: HierarchyConfig) -> int:
+    """VMEM bytes the hierarchical megakernel pins: the packed L1 rows
+    (five state sections plus the scalar mailbox, ways padded to the
+    128-lane register width), double-buffered (input copy + resident
+    output) — the analogue of the flat kernel's ``resident_fits``
+    accounting with ``l1_sets`` in place of ``num_sets``.  The two DMA
+    staging rows (2 × ROW_W·4 B) are noise against any real budget.
+    """
+    return 2 * hier.l1_sets * ROW_W * 4
+
+
+# ---------------------------------------------------------------------------
+# packed-row helpers (pure [1, *]-row arithmetic)
+#
+# Everything below operates on int32 rows and python-literal constants
+# only, so the SAME functions trace inside a pallas_call body and inside
+# the jnp twin.  Any drift between the two paths is a drift in the
+# fetch/store glue, which the differential suite catches.
+# ---------------------------------------------------------------------------
+
+def _iota_lane():
+    return jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+
+
+def _row_sel(row, lane, idx):
+    """Scalar read of column ``idx`` from an in-register [1, LANES] row."""
+    return jnp.sum(jnp.where(lane == idx, row, 0))
+
+
+def _row_put(row, lane, idx, val):
+    """Column ``idx`` of ``row`` replaced by scalar ``val``."""
+    return jnp.where(lane == idx, val, row)
+
+
+def _sec(row, j):
+    """Section ``j`` (static) of a packed [1, ROW_W] row -> [1, LANES]."""
+    return jax.lax.slice(row, (0, j * LANES), (1, (j + 1) * LANES))
+
+def _secs(row):
+    """The five state sections of a packed row."""
+    return tuple(_sec(row, j) for j in range(5))
+
+
+def _sc_section(slots):
+    """Build a fresh scalar-mailbox section from (slot, int32 value)
+    pairs; unnamed slots are zero (deterministic — the kernel and the
+    twin must store bit-identical rows)."""
+    lane = _iota_lane()
+    out = jnp.zeros((1, LANES), jnp.int32)
+    for slot, val in slots:
+        out = jnp.where(lane == slot, val, out)
+    return out
+
+
+def _sc_get(row, slot):
+    """Read mailbox slot ``slot`` from a packed [1, ROW_W] row."""
+    return _row_sel(_sec(row, 5), _iota_lane(), slot)
+
+
+def _pack_row(k, f, v, a, b, sc):
+    return jnp.concatenate([k, f, v, a, b, sc], axis=1)
+
+
+def _probe_row(row_keys, row_fpr, qk, fp, ways, lane):
+    """Fingerprint-prefiltered set probe (KW-WFSC Algorithm 5): a 16-bit
+    fingerprint match is confirmed on the full key, so the result is
+    bit-identical to a plain full-key compare.  Returns (hit bool scalar,
+    way int32 scalar; ``LANES`` when no hit)."""
+    occupied = (row_keys != _EMPTY) & (lane < ways)
+    eq = (row_fpr == fp) & (row_keys == qk) & occupied
+    hit = jnp.any(eq)
+    way = jnp.min(jnp.where(eq, lane, LANES))
+    return hit, way
+
+
+def _victim_way(policy, row_keys, row_a, row_b, now, ways, lane):
+    """Policy victim of one set row at time ``now`` (empty ways first,
+    padding lanes never, ties toward the lowest lane — the flat kernel's
+    exact masking and tie-break)."""
+    occupied = (row_keys != _EMPTY) & (lane < ways)
+    sc = _scores_for_policy(policy, row_keys, row_a, row_b, now)
+    sc = jnp.where(occupied, sc, NEG_INF)
+    sc = jnp.where(lane < ways, sc, POS_INF)
+    return jnp.min(jnp.where(sc == jnp.min(sc), lane, LANES))
+
+
+def _hit_meta(policy, ma, mb, now):
+    """policies.on_hit on one scalar (specialized statically)."""
+    if policy == Policy.LRU:
+        return now, mb
+    if policy in (Policy.LFU, Policy.HYPERBOLIC):
+        return ma + 1, mb
+    return ma, mb                       # FIFO / RANDOM: identity
+
+
+def _insert_meta(policy, now):
+    """policies.on_insert on one scalar (specialized statically)."""
+    if policy in (Policy.LRU, Policy.FIFO):
+        return now, jnp.int32(0)
+    if policy == Policy.LFU:
+        return jnp.int32(1), jnp.int32(0)
+    if policy == Policy.RANDOM:
+        return jnp.int32(0), jnp.int32(0)
+    return jnp.int32(1), now            # HYPERBOLIC: (n=1, t0=now)
+
+
+def _set_index_i32(key_i32, num_sets: int, seed: int):
+    """hashing.set_index on one int32-domain scalar (bit-identical)."""
+    h = _hash_u32(key_i32.astype(jnp.uint32), seed)
+    return (h & jnp.uint32(num_sets - 1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the four per-lane phases.  One lane = A (L1 hit) -> B (L2 hit/promote)
+# -> C (L1 fill) -> D (L2 demote), each phase one row fetch + one row
+# store; scalars cross phases through the stored row's mailbox only.
+# ---------------------------------------------------------------------------
+
+def _l1_hit_row(policy: int, row, qk, fp, t_get, en, l1_ways: int):
+    """Phase A: probe L1, apply ``on_hit`` at t_get.  Mailbox: SC_HIT1."""
+    lane = _iota_lane()
+    k, f, v, a, b = _secs(row)
+    hit1, w1 = _probe_row(k, f, qk, fp, l1_ways, lane)
+    ha, hb = _hit_meta(policy, _row_sel(a, lane, w1),
+                       _row_sel(b, lane, w1), t_get)
+    do1 = hit1 & en
+    a = jnp.where(do1, _row_put(a, lane, w1, ha), a)
+    b = jnp.where(do1, _row_put(b, lane, w1, hb), b)
+    sc = _sc_section([(SC_HIT1, hit1.astype(jnp.int32))])
+    return _pack_row(k, f, v, a, b, sc)
+
+
+def _l2_hit_row(policy: int, promote: bool, row, qk, fp, hit1, t_get, en,
+                l2_ways: int):
+    """Phase B: probe L2; on an L2 hit apply ``on_hit`` — carried by the
+    promoted copy (slot cleared, the tiers stay exclusive) or in place
+    when promotion is off.  Mailbox: SC_L2HIT, SC_PVAL, SC_PA, SC_PB."""
+    lane = _iota_lane()
+    k, f, v, a, b = _secs(row)
+    hit2, w2 = _probe_row(k, f, qk, fp, l2_ways, lane)
+    l2_hit = (~hit1) & hit2
+    pa, pb = _hit_meta(policy, _row_sel(a, lane, w2),
+                       _row_sel(b, lane, w2), t_get)
+    pval = _row_sel(v, lane, w2)
+    do2 = l2_hit & en
+    if promote:
+        # exclusive move: the L2 slot is cleared, the entry lives on in L1
+        k = jnp.where(do2, _row_put(k, lane, w2, jnp.int32(_EMPTY)), k)
+        f = jnp.where(do2, _row_put(f, lane, w2, jnp.int32(0)), f)
+        v = jnp.where(do2, _row_put(v, lane, w2, jnp.int32(0)), v)
+        a = jnp.where(do2, _row_put(a, lane, w2, jnp.int32(0)), a)
+        b = jnp.where(do2, _row_put(b, lane, w2, jnp.int32(0)), b)
+    else:
+        a = jnp.where(do2, _row_put(a, lane, w2, pa), a)
+        b = jnp.where(do2, _row_put(b, lane, w2, pb), b)
+    sc = _sc_section([(SC_L2HIT, l2_hit.astype(jnp.int32)),
+                      (SC_PVAL, pval), (SC_PA, pa), (SC_PB, pb)])
+    return _pack_row(k, f, v, a, b, sc)
+
+
+def _l1_fill_row(policy: int, promote: bool, row, qk, fp, hit1, l2_hit,
+                 pval, pa, pb, t_put, en, l1_ways: int):
+    """Phase C: insert into L1 — the promoted L2 entry (metadata carried)
+    or, on a full miss, a fresh ``on_insert`` entry at t_put.  Victim
+    scoring sees the post-hit row (phase A already ran on this set).
+    Mailbox: SC_DVALID + the displaced victim SC_DK..SC_DB."""
+    lane = _iota_lane()
+    k, f, v, a, b = _secs(row)
+    miss = (~hit1) & (~l2_hit)
+    ia, ib = _insert_meta(policy, t_put)
+    if promote:
+        ins = en & (miss | l2_hit)
+        ins_v = jnp.where(l2_hit, pval, qk)   # payload convention val == key
+        ins_a = jnp.where(l2_hit, pa, ia)
+        ins_b = jnp.where(l2_hit, pb, ib)
+    else:
+        ins = en & miss
+        ins_v, ins_a, ins_b = qk, ia, ib
+    vw = _victim_way(policy, k, a, b, t_put, l1_ways, lane)
+    dk = _row_sel(k, lane, vw)
+    df = _row_sel(f, lane, vw)
+    dv = _row_sel(v, lane, vw)
+    da = _row_sel(a, lane, vw)
+    db = _row_sel(b, lane, vw)
+    dvalid = ins & (dk != _EMPTY)
+    k = jnp.where(ins, _row_put(k, lane, vw, qk), k)
+    f = jnp.where(ins, _row_put(f, lane, vw, fp), f)
+    v = jnp.where(ins, _row_put(v, lane, vw, ins_v), v)
+    a = jnp.where(ins, _row_put(a, lane, vw, ins_a), a)
+    b = jnp.where(ins, _row_put(b, lane, vw, ins_b), b)
+    sc = _sc_section([(SC_DVALID, dvalid.astype(jnp.int32)),
+                      (SC_DK, dk), (SC_DF, df), (SC_DV, dv),
+                      (SC_DA, da), (SC_DB, db)])
+    return _pack_row(k, f, v, a, b, sc)
+
+
+def _l2_demote_row(policy: int, row, dk, df, dv, da, db, dvalid, t_put,
+                   l2_ways: int):
+    """Phase D: insert the displaced L1 entry into ITS OWN L2 set's row
+    (victim selection at t_put, metadata carried verbatim).  Mailbox:
+    SC_EV — 1 when the demotion lands on an occupied L2 victim, i.e. an
+    entry leaves the hierarchy."""
+    lane = _iota_lane()
+    k, f, v, a, b = _secs(row)
+    vw = _victim_way(policy, k, a, b, t_put, l2_ways, lane)
+    ev = (dvalid & (_row_sel(k, lane, vw) != _EMPTY)).astype(jnp.int32)
+    k = jnp.where(dvalid, _row_put(k, lane, vw, dk), k)
+    f = jnp.where(dvalid, _row_put(f, lane, vw, df), f)
+    v = jnp.where(dvalid, _row_put(v, lane, vw, dv), v)
+    a = jnp.where(dvalid, _row_put(a, lane, vw, da), a)
+    b = jnp.where(dvalid, _row_put(b, lane, vw, db), b)
+    sc = _sc_section([(SC_EV, ev)])
+    return _pack_row(k, f, v, a, b, sc)
+
+
+# ---------------------------------------------------------------------------
+# packed-state conversion
+# ---------------------------------------------------------------------------
+
+def _pad_ways_i32(arr, fill):
+    s, k = arr.shape
+    if k == LANES:
+        return arr.astype(jnp.int32)
+    return jnp.concatenate(
+        [arr.astype(jnp.int32),
+         jnp.full((s, LANES - k), fill, jnp.int32)], axis=1)
+
+
+def _pack_lanes(keys, fpr, vals, ma, mb):
+    """Five [S, ways] lanes -> one packed int32 [S, ROW_W] array (ways
+    padded per section; mailbox section zeroed)."""
+    sc = jnp.zeros((keys.shape[0], LANES), jnp.int32)
+    return jnp.concatenate(
+        [_pad_ways_i32(keys, -1), _pad_ways_i32(fpr, 0),
+         _pad_ways_i32(vals, 0), _pad_ways_i32(ma, 0),
+         _pad_ways_i32(mb, 0), sc], axis=1)
+
+
+def _unpack_lanes(packed, ways: int):
+    """Packed [S, ROW_W] -> five int32 [S, ways] lanes (mailbox junk and
+    way padding dropped)."""
+    s = packed.shape[0]
+    return tuple(
+        jax.lax.slice(packed, (0, j * LANES), (s, j * LANES + ways))
+        for j in range(5))
+
+
+# ---------------------------------------------------------------------------
+# jitted chunked-scan twin — the hierarchy's differential oracle
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "l1_ways", "l2_ways", "seed",
+                     "promote", "demote"))
+def _replay_hier_scan(
+    l1p, l2p, clock,                     # packed int32 [S, ROW_W] tiers
+    qk, s1, s2, en,                      # int32 [T, B] streams
+    *,
+    policy: int,
+    l1_ways: int,
+    l2_ways: int,
+    seed: int,
+    promote: bool,
+    demote: bool,
+):
+    steps, batch = qk.shape
+    l2_sets = l2p.shape[0]
+
+    def chunk_step(carry, xs):
+        l1p, l2p, base = carry
+        qk_r, s1_r, s2_r, en_r = xs
+
+        # Lane i runs as loop steps 2i (phases A+B) and 2i+1 (phases C+D)
+        # so every step performs exactly ONE fetch->store round-trip per
+        # tier — a second round-trip on the same buffer within one step
+        # re-introduces the defensive full-array copy (see module
+        # docstring).  The even step's scalars (hit1, the promoted entry)
+        # ride the loop carry into the odd step; the phase order per tier
+        # is unchanged, so the interleave is bit-exact with the
+        # straight-line A->B->C->D formulation.
+        def lane_body(step, st):
+            l1p, l2p, hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c = st
+            i = step >> 1
+            is_even = (step & jnp.int32(1)) == 0
+            qk_i = qk_r[i]
+            fp_i = _fingerprint_i32(qk_i.astype(jnp.uint32))
+            en_i = en_r[i] != 0
+            t_get = base + i
+            t_put = base + jnp.int32(batch) + i
+            s1_i, s2_i = s1_r[i], s2_r[i]
+
+            # L1 round-trip: phase A (even) / phase C (odd), both on s1
+            r1 = jax.lax.dynamic_slice(l1p, (s1_i, 0), (1, ROW_W))
+            row_a = _l1_hit_row(policy, r1, qk_i, fp_i, t_get, en_i,
+                                l1_ways)
+            row_c = _l1_fill_row(policy, promote, r1, qk_i, fp_i,
+                                 hit1_c != 0, l2_c != 0, pval_c, pa_c,
+                                 pb_c, t_put, en_i, l1_ways)
+            l1p = jax.lax.dynamic_update_slice(
+                l1p, jnp.where(is_even, row_a, row_c), (s1_i, 0))
+            r1p = jax.lax.dynamic_slice(l1p, (s1_i, 0), (1, ROW_W))
+            hit1 = _sc_get(r1p, SC_HIT1) != 0       # even-step mailbox
+            dvalid = _sc_get(r1p, SC_DVALID) != 0   # odd-step mailbox
+            dk = _sc_get(r1p, SC_DK)
+
+            # L2 round-trip: phase B (even, set s2) / phase D (odd, the
+            # displaced victim's own set).  The even store lands before
+            # the odd fetch, so the s2v == s2 aliasing case reads the
+            # post-promote row.
+            if demote:
+                s2v = _set_index_i32(dk, l2_sets, seed)
+                sl2 = jnp.where(is_even, s2_i, s2v)
+            else:
+                sl2 = s2_i
+            r2 = jax.lax.dynamic_slice(l2p, (sl2, 0), (1, ROW_W))
+            row_b = _l2_hit_row(policy, promote, r2, qk_i, fp_i, hit1,
+                                t_get, en_i, l2_ways)
+            if demote:
+                df = _sc_get(r1p, SC_DF)
+                dv = _sc_get(r1p, SC_DV)
+                da = _sc_get(r1p, SC_DA)
+                db = _sc_get(r1p, SC_DB)
+                row_d = _l2_demote_row(policy, r2, dk, df, dv, da, db,
+                                       dvalid, t_put, l2_ways)
+            else:
+                row_d = r2                          # odd step: no-op store
+            l2p = jax.lax.dynamic_update_slice(
+                l2p, jnp.where(is_even, row_b, row_d), (sl2, 0))
+            r2p = jax.lax.dynamic_slice(l2p, (sl2, 0), (1, ROW_W))
+            l2_hit = _sc_get(r2p, SC_L2HIT) != 0
+            pval = _sc_get(r2p, SC_PVAL)
+            pa = _sc_get(r2p, SC_PA)
+            pb = _sc_get(r2p, SC_PB)
+            if demote:
+                ev = _sc_get(r2p, SC_EV)
+            else:
+                ev = dvalid.astype(jnp.int32)
+
+            hit = (en_i & (hit1 | l2_hit)).astype(jnp.int32)
+            hits = hits + jnp.where(is_even, hit, 0)
+            evs = evs + jnp.where(is_even, jnp.int32(0), ev)
+            hit1_c = jnp.where(is_even, hit1.astype(jnp.int32), hit1_c)
+            l2_c = jnp.where(is_even, l2_hit.astype(jnp.int32), l2_c)
+            pval_c = jnp.where(is_even, pval, pval_c)
+            pa_c = jnp.where(is_even, pa, pa_c)
+            pb_c = jnp.where(is_even, pb, pb_c)
+            return (l1p, l2p, hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c)
+
+        z = jnp.int32(0)
+        l1p, l2p, hits, evs, *_ = jax.lax.fori_loop(
+            0, 2 * batch, lane_body, (l1p, l2p, z, z, z, z, z, z, z))
+        return (l1p, l2p, base + jnp.int32(2 * batch)), (hits, evs)
+
+    (l1p, l2p, _), (hits, evs) = jax.lax.scan(
+        chunk_step, (l1p, l2p, clock.astype(jnp.int32)), (qk, s1, s2, en))
+    return hits, evs, l1p, l2p
+
+
+def replay_l1_over_l2(cfg: KWayConfig, hier: HierarchyConfig,
+                      state: HierState, chunks, enabled):
+    """Replay routed chunks through the L1-over-L2 hierarchy, pure XLA.
+
+    ``chunks`` uint32 [steps, B] / ``enabled`` bool [steps, B] — the
+    ``router.pad_chunks`` layout, payload ``val == key``.  This is the
+    hierarchy's bit-exact oracle: the Pallas kernel
+    (kernels/replay.replay_hierarchical) must reproduce its per-chunk hit
+    and eviction counts and final tier states exactly.
+
+    Returns (hits int32 [steps], evs int32 [steps], HierState', None).
+    """
+    assert hier.enabled, "replay_l1_over_l2 needs l1_sets > 0"
+    steps, batch = chunks.shape
+    qk = hashing.sanitize_keys(jnp.asarray(chunks, jnp.uint32).reshape(-1))
+    s1 = hashing.set_index(qk, hier.l1_sets,
+                           cfg.seed ^ L1_SEED_SALT).reshape(steps, batch)
+    s2 = hashing.set_index(qk, cfg.num_sets, cfg.seed).reshape(steps, batch)
+    qk = qk.astype(jnp.int32).reshape(steps, batch)
+    en = jnp.asarray(enabled).astype(jnp.int32)
+
+    l1, l2 = state.l1, state.l2
+    l1p = _pack_lanes(l1.keys, l1.fprint, l1.vals, l1.meta_a, l1.meta_b)
+    l2p = _pack_lanes(l2.keys, l2.fprint, l2.vals, l2.meta_a, l2.meta_b)
+
+    hits, evs, l1p_f, l2p_f = _replay_hier_scan(
+        l1p, l2p, state.l2.clock, qk, s1, s2, en,
+        policy=int(cfg.policy), l1_ways=hier.l1_ways, l2_ways=cfg.ways,
+        seed=cfg.seed, promote=hier.promote, demote=hier.demote)
+
+    clock_f = state.l2.clock + jnp.int32(2 * batch * steps)
+
+    def unpack(packed, ways):
+        k, f, v, a, b = _unpack_lanes(packed, ways)
+        return KWayState(keys=k.astype(jnp.uint32),
+                         fprint=f.astype(jnp.uint32),
+                         vals=v, meta_a=a, meta_b=b, clock=clock_f)
+
+    out = HierState(l1=unpack(l1p_f, hier.l1_ways),
+                    l2=unpack(l2p_f, cfg.ways))
+    return hits, evs, out, None

@@ -308,7 +308,8 @@ class ShardedCache:
             self._fns[fkey] = jax.jit(fn)
         return self._fns[fkey](chunks, en)
 
-    def _replay_resident(self, chunks, en, capacity, tinylfu, state):
+    def _replay_resident(self, chunks, en, capacity, tinylfu, state,
+                         hierarchy=None):
         """Resident replay: route all chunks once, then ONE megakernel (or
         scanned replay, for the jnp backend) per shard — D launches for the
         whole trace instead of D×steps, with each shard's five state lanes
@@ -317,6 +318,12 @@ class ShardedCache:
         Bit-identical to the scanned path: the per-chunk bucket streams are
         routed by the same ``router.route``, and ``CacheBackend.replay``
         applies the same fused access + admission phases per chunk.
+
+        ``hierarchy`` threads the L1-over-L2 mode (DESIGN.md §14) through
+        each shard's replay: every shard gets its OWN private L1 (attached
+        fresh by ``CacheBackend.replay`` when the shard state is a bare
+        ``KWayState``) while the L2 remains the sharded global state — the
+        returned stacked state is a ``HierState`` of per-shard tiers.
         """
         d = self.cfg.num_shards
         kb, eb, defers = self._bucket_all(chunks, en, capacity)
@@ -329,7 +336,8 @@ class ShardedCache:
             sk_i = (jax.tree_util.tree_map(lambda l: l[i], sketches)
                     if tinylfu is not None else None)
             h, _, st_i, _ = self.backend.replay(
-                st_i, kb[i], eb[i], tinylfu=tinylfu, sketch=sk_i)
+                st_i, kb[i], eb[i], tinylfu=tinylfu, sketch=sk_i,
+                hierarchy=hierarchy)
             hits += int(jnp.sum(h))
             shard_states.append(st_i)
         stacked = jax.tree_util.tree_map(
@@ -337,7 +345,8 @@ class ShardedCache:
         return hits, int(defers), stacked
 
     def replay(self, trace, batch: int, *, tinylfu=None, two_phase=False,
-               state: Optional[KWayState] = None, resident: bool = False):
+               state: Optional[KWayState] = None, resident: bool = False,
+               hierarchy=None):
         """Replay a whole trace in ONE jitted ``lax.scan`` — route, shard
         access and hit accounting all on device; the only host transfers are
         the trace in and three scalars out.
@@ -364,6 +373,10 @@ class ShardedCache:
         en = jnp.asarray(en)
         capacity = self.cfg.capacity_for(batch)
 
+        if hierarchy is not None and hierarchy.enabled and not resident:
+            raise ValueError(
+                "sharded hierarchical replay runs per-shard megakernels; "
+                "pass resident=True")
         if resident:
             if two_phase:
                 raise ValueError(
@@ -373,9 +386,14 @@ class ShardedCache:
                 raise ValueError(
                     "resident replay drives one megakernel per shard from "
                     "the host; run mesh execution through the scanned path")
+            if hierarchy is not None and hierarchy.enabled and \
+                    tinylfu is not None:
+                raise ValueError(
+                    "hierarchical replay does not support TinyLFU admission")
             return self._replay_resident(
                 chunks, en, capacity, tinylfu,
-                state if state is not None else self.init())
+                state if state is not None else self.init(),
+                hierarchy=hierarchy)
 
         fkey = ("replay", tinylfu, two_phase, capacity, batch)
         if fkey not in self._fns:

@@ -149,7 +149,7 @@ def _replay_batched_scan(sim: SimConfig, chunks: jnp.ndarray,
 
 def replay_batched(
     sim: SimConfig, trace: np.ndarray, batch: int = 64, shards: int = 1,
-    resident: bool = False,
+    resident: bool = False, hierarchy=None,
 ) -> float:
     """Batched replay -> hit ratio over the WHOLE trace (the tail chunk is
     padded with disabled lanes on every path).
@@ -164,11 +164,32 @@ def replay_batched(
     whole trace in ONE launch with the cache state pinned in VMEM,
     bit-identical to the chunked scan.  Sharded resident replay runs one
     megakernel per shard (D launches total).  The resident path IS the
-    fused access composition, so it excludes ``two_phase``."""
+    fused access composition, so it excludes ``two_phase``.
+
+    ``hierarchy`` (a ``HierarchyConfig`` with ``l1_sets > 0``) selects the
+    L1-over-L2 replay mode (DESIGN.md §14): on the pallas backend the
+    hierarchical megakernel (VMEM L1, HBM L2), on the jnp backend the
+    bit-exact chunked-scan twin.  ``l1_sets == 0`` is the flat path
+    unchanged.  The hierarchy has sequential per-lane semantics and no
+    TinyLFU/two_phase composition yet."""
     trace = np.asarray(trace, np.uint32)
     n = trace.shape[0]
     if sim.tinylfu is not None and sim.backend == "ref":
         raise ValueError("TinyLFU replay is not wired for the ref backend")
+    if hierarchy is not None and not hierarchy.enabled:
+        hierarchy = None          # l1_sets == 0: the flat path, verbatim
+    if hierarchy is not None:
+        if sim.backend == "ref":
+            raise ValueError(
+                "hierarchical replay needs a traceable backend "
+                "('jnp' or 'pallas'); the ref oracle is flat-only")
+        if sim.two_phase:
+            raise ValueError(
+                "hierarchical replay is the fused sequential-lane path; "
+                "two_phase does not compose with it")
+        if sim.tinylfu is not None:
+            raise ValueError(
+                "hierarchical replay does not support TinyLFU admission")
     if resident:
         if sim.backend == "ref":
             raise ValueError(
@@ -187,9 +208,22 @@ def replay_batched(
 
         sc = ShardedCache(ShardedConfig(
             cache=sim.cache, num_shards=shards, backend=sim.backend))
+        if hierarchy is not None:
+            hits, _, _ = sc.replay(trace, batch, resident=True,
+                                   hierarchy=hierarchy)
+            return hits / n
         hits, _, _ = sc.replay(trace, batch, tinylfu=sim.tinylfu,
                                two_phase=sim.two_phase, resident=resident)
         return hits / n
+    if hierarchy is not None:
+        # hierarchical mode always runs the routed-chunk replay: the kernel
+        # on pallas (with its own budget/fallback ladder inside
+        # PallasBackend.replay), the jitted jnp twin otherwise.
+        be = _cached_backend(sim.backend, sim.cache)
+        chunks, enabled = router.pad_chunks(trace, batch)
+        hits, _, _, _ = be.replay(be.init(), chunks, enabled,
+                                  hierarchy=hierarchy)
+        return float(jnp.sum(hits)) / n
     if resident:
         be = _cached_backend(sim.backend, sim.cache)
         chunks, enabled = router.pad_chunks(trace, batch)

@@ -43,7 +43,8 @@ from repro.core import traces
 
 __all__ = ["load_trace", "iter_trace_chunks", "fingerprint_keys",
            "trace_fingerprint", "register_trace", "unregister_trace",
-           "detect_format"]
+           "detect_format", "register_fixture_traces", "fixture_dir",
+           "FIXTURE_TRACES"]
 
 #: murmur3 fmix32 constants — the same avalanche mixer as core/hashing.py.
 _C1 = 0x85EBCA6B
@@ -259,3 +260,35 @@ def register_trace(name: str, path: str, fmt: str | None = None,
 def unregister_trace(name: str) -> None:
     """Remove a ``register_trace`` entry from the family registry."""
     traces.unregister_family(name)
+
+
+#: committed fixture traces (tests/fixtures/*.trace) registered by
+#: ``register_fixture_traces`` — name -> filename.  ``lirs_two_pools`` is
+#: the deterministic LIRS-style loop workload the hierarchy and showdown
+#: sweeps use as their "real trace" family (see
+#: tests/fixtures/make_lirs_two_pools.py for provenance).
+FIXTURE_TRACES = {"lirs_two_pools": "lirs_two_pools.trace"}
+
+
+def fixture_dir() -> str:
+    """Path of the repo's committed ``tests/fixtures`` directory."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    # src/repro/core -> repo root is three levels up
+    return os.path.join(os.path.dirname(os.path.dirname(
+        os.path.dirname(here))), "tests", "fixtures")
+
+
+def register_fixture_traces() -> list[str]:
+    """Register every committed fixture trace as a ``generate()`` family.
+
+    Idempotent (``register_trace`` overwrites in place); returns the list
+    of family names registered.  Benchmarks call this so sweeps can name
+    ``lirs_two_pools`` alongside the synthetic families.
+    """
+    root = fixture_dir()
+    names = []
+    for name, fname in FIXTURE_TRACES.items():
+        path = os.path.join(root, fname)
+        if os.path.exists(path):
+            names.append(register_trace(name, path, fmt="arc"))
+    return names

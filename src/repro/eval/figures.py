@@ -474,7 +474,8 @@ def throughput_vs_shards(quick: bool = False, progress=None,
 
 
 def showdown(quick: bool = False, progress=None, threads=(1, 2, 4, 8),
-             families=("zipf", "oltp_mix"), policies=("lru", "lfu")):
+             families=("zipf", "oltp_mix", "lirs_two_pools"),
+             policies=("lru", "lfu")):
     """The paper's Fig. 1 analogue: req/s vs thread count, production caches
     next to our batched/resident paths (DESIGN.md §12).
 
@@ -511,6 +512,7 @@ def showdown(quick: bool = False, progress=None, threads=(1, 2, 4, 8),
     capacity, ways, batch, seed = THROUGHPUT_CAPACITY, 8, 256, 7
     n = 8_192 if quick else 65_536
     iters = 2 if quick else 5
+    trace_io.register_fixture_traces()   # lirs_two_pools rides as a family
     pol_enum = {"lru": Policy.LRU, "lfu": Policy.LFU}
     records = []
     trace_fp = {}
@@ -902,12 +904,8 @@ def robustness(quick: bool = False, progress=None):
     if progress:
         progress("ladder vmem-breach")
     c0 = events.cursor()
-    budget = backend_mod.RESIDENT_VMEM_BUDGET
-    try:
-        backend_mod.RESIDENT_VMEM_BUDGET = 0
+    with backend_mod.vmem_budget(0):
         out = resilient_replay(cfg, chunks, enabled)
-    finally:
-        backend_mod.RESIDENT_VMEM_BUDGET = budget
     n_events = len(events.since(c0))
     records.append({
         "id": "robust-ladder/vmem-breach/rung", "metric": "ladder_rung",
@@ -966,6 +964,114 @@ def robustness(quick: bool = False, progress=None):
     return spec, records, []
 
 
+def hierarchy(quick: bool = False, progress=None):
+    """Two-level replay hierarchy (DESIGN.md §14): throughput and hit ratio
+    vs total capacity across the L1-size knob.
+
+    Timing rows (``hier-tp/...``, not comparable): whole-trace replay req/s
+    at two L2 capacities — one where the flat megakernel still fits its
+    VMEM budget (the hierarchy must not cost much) and one past the
+    capacity cliff where the flat path has demoted to the chunked scan
+    (the hierarchy must win big, because its VMEM footprint is set by
+    ``l1_sets`` alone).  ``hier-tp/speedup/s{S}`` is flat-p50 over
+    l1l2-p50; past the cliff the CI gate pins it >= 2x.
+
+    Hit-ratio rows (``hier-hr/{family}/l1-{K}``, comparable): a fixed
+    64x8 L2 with the L1-size knob swept over {0, 16, 64} sets x 16 ways.
+    ``l1-0`` records carry ``scan_value`` (the flat replay on the same
+    config) and tol 0.0 — the disabled hierarchy IS the flat path,
+    bit-exact.  Enabled records carry ``flat_value`` — a flat cache of
+    the same TOTAL capacity (64x12 / 64x24) — as the oracle reference,
+    and gate against the checked-in baseline with tol 0.02.
+    """
+    from repro.core import backend as backend_mod
+    from repro.core import trace_io, traces
+    from repro.core.hierarchy import HierarchyConfig, hier_footprint_bytes
+    from repro.core.kway import KWayConfig
+    from repro.core.simulate import SimConfig, replay_batched
+
+    policy = Policy.LRU
+    batch = 256
+    n = 16_384 if quick else 65_536
+    hier = HierarchyConfig(l1_sets=64, l1_ways=16)
+    l2_sets_sweep = (512, 4096)
+    tr = traces.generate("zipf", n, seed=7, catalog=1 << 17)
+    records = []
+
+    for l2_sets in l2_sets_sweep:
+        cfg = KWayConfig(num_sets=l2_sets, ways=8, policy=policy)
+        pb = backend_mod.make_backend("pallas", cfg)
+        flat_fits = pb.resident_fits()
+        sim = SimConfig(cache=cfg, backend="pallas")
+        p50 = {}
+        for mode, hcfg, path in (
+                ("flat", None,
+                 "pallas-resident" if flat_fits else "pallas-scan"),
+                ("l1l2", hier, "pallas-resident-l1l2")):
+            if progress:
+                progress(f"hier timing {mode} s{l2_sets}")
+            st = time_replay_percentiles(
+                lambda _h=hcfg: replay_batched(sim, tr, batch=batch,
+                                               hierarchy=_h),
+                iters=3 if quick else 5)
+            p50[mode] = st["p50"]
+            records.append(_tp_record(
+                f"hier-tp/{mode}/s{l2_sets}", batch, n / st["p50"] / 1e6,
+                n=n, mode=mode, path=path, l2_sets=l2_sets,
+                l2_capacity=cfg.capacity, over_budget=not flat_fits,
+                p50_req_s=round(n / st["p50"], 1),
+                p90_req_s=round(n / st["p90"], 1),
+                reps_discarded=st["reps_discarded"]))
+        records.append(_tp_record(
+            f"hier-tp/speedup/s{l2_sets}", batch,
+            p50["flat"] / p50["l1l2"],
+            metric="speedup_x", l2_sets=l2_sets,
+            over_budget=not flat_fits))
+
+    # hit ratio vs total capacity across the L1-size knob
+    trace_io.register_fixture_traces()
+    n_hr = QUICK_N if quick else 16_384
+    hr_batch = 64
+    l2_hr = KWayConfig(num_sets=64, ways=8, policy=policy)
+    for family in ("zipf", "lirs_two_pools"):
+        kwargs = {"catalog": 4096} if family == "zipf" else {}
+        trh = traces.generate(family, n_hr, seed=7, **kwargs)
+        sim = SimConfig(cache=l2_hr, backend="pallas")
+        for l1_sets in (0, 16, 64):
+            if progress:
+                progress(f"hier-hr {family} l1-{l1_sets}")
+            hcfg = HierarchyConfig(l1_sets=l1_sets, l1_ways=16)
+            hr = replay_batched(sim, trh, batch=hr_batch, hierarchy=hcfg)
+            total = l2_hr.capacity + hcfg.l1_capacity
+            rec = {
+                "id": f"hier-hr/{family}/l1-{l1_sets}",
+                "family": family, "policy": policy.name,
+                "l1_sets": l1_sets, "l1_ways": hcfg.l1_ways,
+                "l2_capacity": l2_hr.capacity, "total_capacity": total,
+                "batch": hr_batch, "n": n_hr,
+                "metric": "hit_ratio", "value": hr, "comparable": True,
+            }
+            if l1_sets == 0:
+                rec["scan_value"] = replay_batched(sim, trh, batch=hr_batch)
+                rec["tol"] = 0.0
+            else:
+                flat = KWayConfig(num_sets=64, ways=total // 64,
+                                  policy=policy)
+                rec["flat_value"] = replay_batched(
+                    SimConfig(cache=flat, backend="pallas"), trh,
+                    batch=hr_batch)
+                rec["tol"] = 0.02
+            records.append(rec)
+
+    spec = {"quick": quick, "batch": batch, "n": n, "n_hr": n_hr,
+            "hr_batch": hr_batch, "policy": policy.name,
+            "l2_sets": list(l2_sets_sweep), "l2_ways": 8,
+            "l1_sets": hier.l1_sets, "l1_ways": hier.l1_ways,
+            "l1_footprint_bytes": hier_footprint_bytes(hier),
+            "vmem_budget": backend_mod.RESIDENT_VMEM_BUDGET}
+    return spec, records, []
+
+
 #: CLI name -> (function, canonical figure name)
 FIGURES = {
     "hit_ratio": (hit_ratio_vs_associativity, "hit_ratio_vs_associativity"),
@@ -979,4 +1085,5 @@ FIGURES = {
     "serving": (serving, "serving"),
     "serving_engine": (serving_engine, "serving_engine"),
     "robustness": (robustness, "robustness"),
+    "hierarchy": (hierarchy, "hierarchy"),
 }

@@ -221,6 +221,41 @@ def replay_resident(cfg: KWayConfig, state: KWayState, chunks, enabled,
     return hits, evs, state_out, sketch_out
 
 
+def replay_hierarchical(cfg: KWayConfig, hier, state, chunks, enabled):
+    """Whole-trace replay through the L1-over-L2 hierarchy in ONE pallas
+    launch (kernels/replay.py, hierarchical megakernel).
+
+    ``state`` is a :class:`repro.core.hierarchy.HierState`; ``chunks`` /
+    ``enabled`` the ``router.pad_chunks`` layout.  Bit-identical to the
+    jnp twin ``core/hierarchy.replay_l1_over_l2`` (the differential
+    oracle) — same per-chunk hit/eviction counts and final tier states.
+
+    Returns (hits int32 [steps], evs int32 [steps], HierState', None).
+    """
+    from repro.core.hierarchy import HierState
+    from repro.core.kway import KWayState as _KWS
+    from repro.kernels import replay as _rp
+
+    l1, l2 = state.l1, state.l2
+    hits, evs, l1_f, l2_f, clock_f = _rp.replay_hierarchical(
+        l1.keys, l1.fprint, l1.vals, l1.meta_a, l1.meta_b,
+        l2.keys, l2.fprint, l2.vals, l2.meta_a, l2.meta_b,
+        l2.clock,
+        jnp.asarray(chunks, jnp.uint32), jnp.asarray(enabled, jnp.bool_),
+        policy=int(cfg.policy), l1_ways=hier.l1_ways, l2_ways=cfg.ways,
+        l1_sets=hier.l1_sets, l2_sets=cfg.num_sets, seed=cfg.seed,
+        promote=hier.promote, demote=hier.demote,
+        interpret=not _on_tpu(),
+    )
+
+    def unpack(lanes):
+        k, f, v, a, b = lanes
+        return _KWS(keys=k.astype(jnp.uint32), fprint=f.astype(jnp.uint32),
+                    vals=v, meta_a=a, meta_b=b, clock=clock_f)
+
+    return hits, evs, HierState(l1=unpack(l1_f), l2=unpack(l2_f)), None
+
+
 def attend_paged(
     q: jnp.ndarray,
     k_pages: jnp.ndarray,

@@ -543,3 +543,301 @@ def replay_resident(
             packed=pk_f[:, :tinylfu.width // 8],
             door=dr_f[0, :dw], additions=adds_f)
     return hits, evs, state_out, sketch_out
+
+
+# ===========================================================================
+# hierarchical megakernel: VMEM-resident L1 over HBM-resident L2
+# ===========================================================================
+#
+# Past RESIDENT_VMEM_BUDGET the flat kernel above cannot run — its five
+# state lanes no longer fit in VMEM.  The hierarchical variant keeps only a
+# small high-associativity L1 resident as ONE packed int32 [l1_sets, ROW_W]
+# array (five state sections + the scalar mailbox, see core/hierarchy.py)
+# and leaves the full L2 in slow memory (``memory_space=ANY``) in the same
+# packed layout, so a set's whole row moves in a single DMA.  Per lane the
+# kernel runs the SAME four phase transitions as the jnp twin — L1 hit,
+# L2 hit/promote, L1 fill, L2 demote — fetching one row, storing its
+# replacement, and reading cross-phase scalars back from the stored row's
+# mailbox (the in-place-update discipline core/hierarchy.py documents).
+# The hot path (L1 hits) touches HBM only for the row round-trips of
+# misses — the paper's "short continuous region of memory" argument
+# applied to the HBM→VMEM hierarchy itself.
+#
+# Equivalence contract: bit-identical per-chunk hit/eviction counts and
+# final tier states vs ``core/hierarchy.replay_l1_over_l2`` (the jitted
+# chunked-scan twin) — pinned by tests/test_hierarchy.py.
+
+def _hier_replay_kernel(
+    # scalar prefetch
+    scal_ref,            # int32 [1]  initial clock
+    # VMEM inputs
+    qk_ref,              # int32 [1, Bp]  sanitized query keys (chunk t)
+    s1_ref,              # int32 [1, Bp]  L1 set index per query
+    s2_ref,              # int32 [1, Bp]  L2 set index per query
+    en_ref,              # int32 [1, Bp]  1 = live lane
+    l1in_ref,            # int32 [S1, ROW_W]  packed L1 rows (initial)
+    l2in_ref,            # ANY   [S2, ROW_W]  packed L2 rows (initial)
+    # outputs
+    hits_ref,            # int32 [1]  per-chunk hits
+    evs_ref,             # int32 [1]  per-chunk evictions
+    l1_ref,              # int32 [S1, ROW_W]  packed L1 rows (resident)
+    l2out_ref,           # ANY   [S2, ROW_W]  packed L2 rows (resident)
+    # scratch
+    rowA,                # VMEM [1, ROW_W]  DMA staging row
+    sem,                 # DMA semaphore
+    *,
+    policy: int,
+    l1_ways: int,
+    l2_ways: int,
+    l2_sets: int,
+    seed: int,
+    batch: int,
+    promote: bool,
+    demote: bool,
+    interpret: bool,
+):
+    from repro.core.hierarchy import (SC_DA, SC_DB, SC_DF, SC_DK, SC_DV,
+                                      SC_DVALID, SC_EV, SC_HIT1, SC_L2HIT,
+                                      SC_PA, SC_PB, SC_PVAL, _l1_fill_row,
+                                      _l1_hit_row, _l2_demote_row,
+                                      _l2_hit_row, _sc_get, _set_index_i32)
+
+    t = pl.program_id(0)
+    base = scal_ref[0] + jnp.int32(2 * batch) * t
+    bp = qk_ref.shape[1]
+    blane = jax.lax.broadcasted_iota(jnp.int32, (1, bp), 1)
+
+    # ---- first grid step: L1 into VMEM, L2 packed rows into the resident
+    # slow-memory buffer (one whole-array DMA)
+    @pl.when(t == 0)
+    def _init():
+        l1_ref[...] = l1in_ref[...]
+        cp = pltpu.make_async_copy(l2in_ref, l2out_ref, sem)
+        cp.start()
+        cp.wait()
+
+    # ---- L2 row glue.  The interpret path indexes the resident ref
+    # directly (the emulator charges ~30 µs per DMA op, which would
+    # dominate the lane loop); the TPU path stages the row through VMEM
+    # scratch with real DMAs.  ``store`` returns the POST-store row —
+    # the lane loop is sequential, so on the DMA path the value just
+    # written IS the post-store row and no read-back is needed.
+    if interpret:
+        def fetch_l2(s, scratch):
+            return l2out_ref[pl.ds(s, 1), :]
+
+        def store_l2(s, scratch, row):
+            l2out_ref[pl.ds(s, 1), :] = row
+            return l2out_ref[pl.ds(s, 1), :]
+    else:
+        def fetch_l2(s, scratch):
+            cp = pltpu.make_async_copy(l2out_ref.at[pl.ds(s, 1), :],
+                                       scratch.at[pl.ds(0, 1), :], sem)
+            cp.start()
+            cp.wait()
+            return scratch[...]
+
+        def store_l2(s, scratch, row):
+            scratch[...] = row
+            cp = pltpu.make_async_copy(scratch.at[pl.ds(0, 1), :],
+                                       l2out_ref.at[pl.ds(s, 1), :], sem)
+            cp.start()
+            cp.wait()
+            return row
+
+    # ---- sequential lane loop (hierarchy semantics: lane i sees lane
+    # i-1's inserts; see core/hierarchy.py).  Lane i runs as steps 2i
+    # (phases A+B) and 2i+1 (phases C+D) — the twin's even/odd interleave
+    # verbatim, so each step does ONE row round-trip per tier (on the
+    # interpret path a second round-trip on the same buffer would
+    # re-introduce the defensive full-array copy) and cross-phase scalars
+    # ride the loop carry / the stored row's mailbox.
+    def body(step, carry):
+        hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c = carry
+        i = step >> 1
+        is_even = (step & jnp.int32(1)) == 0
+        qk = _lane_read(qk_ref, blane, i)
+        s1 = _lane_read(s1_ref, blane, i)
+        s2 = _lane_read(s2_ref, blane, i)
+        en = _lane_read(en_ref, blane, i) != 0
+        fp = _fingerprint_i32(qk.astype(jnp.uint32))
+        t_get = base + i
+        t_put = base + jnp.int32(batch) + i
+
+        # L1 round-trip: phase A (even) / phase C (odd), both on s1
+        r1 = l1_ref[pl.ds(s1, 1), :]
+        row_a = _l1_hit_row(policy, r1, qk, fp, t_get, en, l1_ways)
+        row_c = _l1_fill_row(policy, promote, r1, qk, fp, hit1_c != 0,
+                             l2_c != 0, pval_c, pa_c, pb_c, t_put, en,
+                             l1_ways)
+        l1_ref[pl.ds(s1, 1), :] = jnp.where(is_even, row_a, row_c)
+        r1p = l1_ref[pl.ds(s1, 1), :]
+        hit1 = _sc_get(r1p, SC_HIT1) != 0       # even-step mailbox
+        dvalid = _sc_get(r1p, SC_DVALID) != 0   # odd-step mailbox
+        dk = _sc_get(r1p, SC_DK)
+
+        # L2 round-trip: phase B (even, set s2) / phase D (odd, the
+        # displaced victim's own set; the even store lands before the odd
+        # fetch, so s2v == s2 aliasing reads the post-promote row)
+        if demote:
+            s2v = _set_index_i32(dk, l2_sets, seed)
+            sl2 = jnp.where(is_even, s2, s2v)
+        else:
+            sl2 = s2
+        r2 = fetch_l2(sl2, rowA)
+        row_b = _l2_hit_row(policy, promote, r2, qk, fp, hit1, t_get, en,
+                            l2_ways)
+        if demote:
+            df = _sc_get(r1p, SC_DF)
+            dv = _sc_get(r1p, SC_DV)
+            da = _sc_get(r1p, SC_DA)
+            db = _sc_get(r1p, SC_DB)
+            row_d = _l2_demote_row(policy, r2, dk, df, dv, da, db,
+                                   dvalid, t_put, l2_ways)
+        else:
+            row_d = r2                          # odd step: no-op store
+        r2p = store_l2(sl2, rowA, jnp.where(is_even, row_b, row_d))
+        l2_hit = _sc_get(r2p, SC_L2HIT) != 0
+        pval = _sc_get(r2p, SC_PVAL)
+        pa = _sc_get(r2p, SC_PA)
+        pb = _sc_get(r2p, SC_PB)
+        if demote:
+            ev = _sc_get(r2p, SC_EV)
+        else:
+            ev = dvalid.astype(jnp.int32)
+
+        hit = (en & (hit1 | l2_hit)).astype(jnp.int32)
+        hits = hits + jnp.where(is_even, hit, 0)
+        evs = evs + jnp.where(is_even, jnp.int32(0), ev)
+        hit1_c = jnp.where(is_even, hit1.astype(jnp.int32), hit1_c)
+        l2_c = jnp.where(is_even, l2_hit.astype(jnp.int32), l2_c)
+        pval_c = jnp.where(is_even, pval, pval_c)
+        pa_c = jnp.where(is_even, pa, pa_c)
+        pb_c = jnp.where(is_even, pb, pb_c)
+        return hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c
+
+    z = jnp.int32(0)
+    hits, evs, *_ = jax.lax.fori_loop(0, 2 * batch, body,
+                                      (z, z, z, z, z, z, z))
+    hits_ref[0] = hits
+    evs_ref[0] = evs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "l1_ways", "l2_ways", "l1_sets", "l2_sets",
+                     "seed", "promote", "demote", "interpret"))
+def _replay_hier_jit(
+    l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb,        # [S1, l1_ways] lanes
+    l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb,        # [S2, l2_ways] lanes
+    clock,
+    chunks, enabled,                               # uint32/bool [T, B]
+    *,
+    policy: int,
+    l1_ways: int,
+    l2_ways: int,
+    l1_sets: int,
+    l2_sets: int,
+    seed: int,
+    promote: bool,
+    demote: bool,
+    interpret: bool,
+):
+    from repro.core import hashing
+    from repro.core.hierarchy import (ROW_W, L1_SEED_SALT, _pack_lanes,
+                                      _unpack_lanes)
+
+    steps, batch = chunks.shape
+    _TRACE_COUNTS[("trace-hier", int(policy), l1_sets, l1_ways, l2_sets,
+                   l2_ways, steps, batch, promote, demote)] += 1
+
+    # ---- streams: sanitize + route BOTH tiers once, pad to lane width
+    qk = hashing.sanitize_keys(chunks.reshape(-1))
+    s1 = hashing.set_index(qk, l1_sets,
+                           seed ^ L1_SEED_SALT).reshape(steps, batch)
+    s2 = hashing.set_index(qk, l2_sets, seed).reshape(steps, batch)
+    qk = qk.astype(jnp.int32).reshape(steps, batch)
+    en = enabled.astype(jnp.int32)
+    bp = -(-batch // LANES) * LANES
+    if bp != batch:
+        pad = jnp.zeros((steps, bp - batch), jnp.int32)
+        qk = jnp.concatenate([qk, pad], axis=1)
+        s1 = jnp.concatenate([s1, pad], axis=1)
+        s2 = jnp.concatenate([s2, pad], axis=1)
+        en = jnp.concatenate([en, pad], axis=1)
+
+    # ---- both tiers packed [S, ROW_W]: L1 VMEM-resident, L2 row-per-DMA
+    l1p = _pack_lanes(l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb)
+    l2p = _pack_lanes(l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb)
+
+    scal = clock.astype(jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _hier_replay_kernel, policy=int(policy), l1_ways=l1_ways,
+        l2_ways=l2_ways, l2_sets=l2_sets, seed=seed, batch=batch,
+        promote=promote, demote=demote, interpret=interpret)
+
+    chunk_row = lambda: pl.BlockSpec((1, bp), lambda t, *_: (t, 0))  # noqa: E731
+    full = lambda a: pl.BlockSpec(a.shape, lambda t, *_: (0,) * a.ndim)  # noqa: E731
+    cnt = lambda: pl.BlockSpec((1,), lambda t, *_: (t,))  # noqa: E731
+    anyspace = lambda: pl.BlockSpec(memory_space=pltpu.ANY)  # noqa: E731
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(steps,),
+            in_specs=[chunk_row(), chunk_row(), chunk_row(), chunk_row(),
+                      full(l1p), anyspace()],
+            out_specs=[cnt(), cnt(), full(l1p), anyspace()],
+            scratch_shapes=[pltpu.VMEM((1, ROW_W), jnp.int32),
+                            pltpu.SemaphoreType.DMA],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((steps,), jnp.int32),
+                   jax.ShapeDtypeStruct((steps,), jnp.int32),
+                   jax.ShapeDtypeStruct((l1_sets, ROW_W), jnp.int32),
+                   jax.ShapeDtypeStruct((l2_sets, ROW_W), jnp.int32)],
+        interpret=interpret,
+    )(scal, qk, s1, s2, en, l1p, l2p)
+
+    hits, evs = outs[0], outs[1]
+    clock_f = clock + jnp.int32(2 * batch * steps)
+    l1_out = _unpack_lanes(outs[2], l1_ways)
+    l2_out = _unpack_lanes(outs[3], l2_ways)
+    return hits, evs, l1_out, l2_out, clock_f
+
+
+def replay_hierarchical(
+    l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb,
+    l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb,
+    clock,
+    chunks, enabled,
+    *,
+    policy: int,
+    l1_ways: int,
+    l2_ways: int,
+    l1_sets: int,
+    l2_sets: int,
+    seed: int,
+    promote: bool = True,
+    demote: bool = True,
+    interpret: bool = True,
+):
+    """Run the hierarchical replay megakernel: ONE launch, L1 pinned in
+    VMEM, L2 in slow memory behind per-set row DMAs.
+
+    Returns (hits int32 [steps], evs int32 [steps],
+    (keys, fprint, vals, meta_a, meta_b) L1 lanes,
+    (keys, fprint, vals, meta_a, meta_b) L2 lanes, clock') — key/fprint
+    lanes in the int32 bit-cast domain (callers re-cast to uint32).
+    """
+    steps, batch = chunks.shape
+    _TRACE_COUNTS[("launch-hier", int(policy), l1_sets, l1_ways, l2_sets,
+                   l2_ways, steps, batch, promote, demote)] += 1
+    return _replay_hier_jit(
+        l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb,
+        l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb, clock,
+        jnp.asarray(chunks, jnp.uint32), jnp.asarray(enabled, jnp.bool_),
+        policy=int(policy), l1_ways=l1_ways, l2_ways=l2_ways,
+        l1_sets=l1_sets, l2_sets=l2_sets, seed=seed,
+        promote=promote, demote=demote, interpret=interpret)

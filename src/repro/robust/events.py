@@ -31,7 +31,9 @@ __all__ = ["DegradationEvent", "record", "log", "cursor", "since", "count",
 class DegradationEvent:
     component: str          # e.g. "pallas.replay", "engine.tick_sync"
     reason: str             # "vmem_budget" | "kernel_failure" |
-    #                         "validator_alarm" | "sync_timeout" | ...
+    #                         "validator_alarm" | "sync_timeout" |
+    #                         "l1_demotion" (hierarchical L1 exceeds the
+    #                         VMEM budget; L1L2 falls to the jnp twin) | ...
     fallback_from: str = ""  # rung/path abandoned ("" for non-ladder events)
     fallback_to: str = ""    # rung/path taken instead
     detail: str = ""

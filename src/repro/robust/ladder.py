@@ -5,22 +5,32 @@ Backend selection becomes a supervised fallback chain instead of a silent
 failure, with every descent recorded as a :mod:`repro.robust.events` event
 naming the rung abandoned, the rung taken, and why.
 
-Rungs, fastest first (DESIGN.md §10/§13):
+Rungs, fastest first (DESIGN.md §10/§13/§14):
 
-  1. ``pallas-resident`` — the whole-trace megakernel, state pinned in
-     VMEM.  Skipped (``vmem_budget``) when the footprint exceeds
-     ``RESIDENT_VMEM_BUDGET``; abandoned (``kernel_failure``) when the
-     launch raises.
-  2. ``pallas-scan`` — chunked ``lax.scan`` through the Pallas probe
+  1. ``pallas-resident-l1l2`` — the hierarchical megakernel (VMEM L1 over
+     HBM L2).  Opt-in: attempted only when a ``hierarchy`` with
+     ``l1_sets > 0`` is passed; skipped (``vmem_budget``) when even the L1
+     exceeds the budget, and (``backend_unsupported``) with TinyLFU —
+     admission has no per-tier semantics yet.
+  2. ``pallas-resident`` — the flat whole-trace megakernel, ALL state
+     lanes pinned in VMEM.  Skipped (``vmem_budget``) when the footprint
+     exceeds ``RESIDENT_VMEM_BUDGET``; abandoned (``kernel_failure``)
+     when the launch raises.
+  3. ``pallas-scan`` — chunked ``lax.scan`` through the Pallas probe
      kernel.
-  3. ``jnp-scan`` — pure-XLA chunked scan; always available, the floor.
+  4. ``jnp-scan`` — pure-XLA chunked scan; always available, the floor.
 
-All rungs are pinned bit-identical by the differential suite, so a descent
-costs throughput, never correctness.  After each rung the final state is
-validated (:mod:`repro.robust.invariants`); a dirty state triggers a
-``validator_alarm`` descent — the replay is functional (state in → state
-out), so the next rung re-runs from the same initial state.  A validator
-alarm on the last rung is unrecoverable and raises.
+The three FLAT rungs are pinned bit-identical by the differential suite,
+so a descent among them costs throughput, never correctness.  The L1L2
+rung runs different (hierarchical, sequential-lane) semantics: it is
+pinned bit-identical to its OWN jnp twin
+(``core/hierarchy.replay_l1_over_l2``) and band-equivalent to the flat
+rungs on hit ratio — a descent from it trades capacity-scaling throughput
+for the flat semantics.  After each rung the final state is validated
+(:mod:`repro.robust.invariants`; both tiers for the L1L2 rung); a dirty
+state triggers a ``validator_alarm`` descent — the replay is functional
+(state in → state out), so the next rung re-runs from the same initial
+state.  A validator alarm on the last rung is unrecoverable and raises.
 
 Configurations the Pallas backend refuses outright (sampled policies,
 ``ways > LANES``) skip both Pallas rungs with a ``backend_unsupported``
@@ -39,8 +49,10 @@ from repro.robust.invariants import check_cache, explain_cache, sketch_bits
 
 __all__ = ["RUNGS", "ReplayOutcome", "resilient_replay"]
 
-#: fallback order, fastest first
-RUNGS = ("pallas-resident", "pallas-scan", "jnp-scan")
+#: fallback order, fastest first (the L1L2 rung is opt-in via
+#: ``hierarchy``; without it the ladder starts at ``pallas-resident``)
+RUNGS = ("pallas-resident-l1l2", "pallas-resident", "pallas-scan",
+         "jnp-scan")
 
 _COMPONENT = "ladder.replay"
 
@@ -52,14 +64,27 @@ class ReplayOutcome:
 
     hits: jnp.ndarray            # int32 [steps]
     evs: jnp.ndarray             # int32 [steps]
-    state: kway.KWayState
+    state: object                # KWayState (flat rungs) | HierState (l1l2)
     sketch: object               # TinyLFUState | None
     rung: str                    # the rung that produced the result
     attempts: tuple              # ((rung, "ok"|reason), ...) in order
 
 
-def _default_validate(cfg: KWayConfig, tinylfu, vals_mode: str):
+def _default_validate(cfg: KWayConfig, tinylfu, vals_mode: str,
+                      hierarchy=None):
     def validate(state, sketch) -> tuple[bool, str]:
+        from repro.core import hierarchy as hier_mod
+        if hierarchy is not None and isinstance(state, hier_mod.HierState):
+            # L1L2 rung: both tiers must be clean (the L1 config carries
+            # the salted set seed, so set-mapping checks see the right hash)
+            for tier_cfg, tier, name in (
+                    (hier_mod.l1_config(cfg, hierarchy), state.l1, "l1"),
+                    (cfg, state.l2, "l2")):
+                rep = check_cache(tier_cfg, tier, vals_mode=vals_mode)
+                if not rep.clean():
+                    return False, f"{name}: " + "; ".join(
+                        explain_cache(rep, limit=4))
+            return True, ""
         rep = check_cache(cfg, state, vals_mode=vals_mode)
         if not rep.clean():
             return False, "; ".join(explain_cache(rep, limit=4))
@@ -72,10 +97,15 @@ def _default_validate(cfg: KWayConfig, tinylfu, vals_mode: str):
 
 def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
                      state: kway.KWayState | None = None, *,
-                     validate: bool = True, validate_fn=None,
+                     hierarchy=None, validate: bool = True,
+                     validate_fn=None,
                      vals_mode: str = "key") -> ReplayOutcome:
     """Replay ``chunks``/``enabled`` (the ``router.pad_chunks`` layout,
     payload ``val == key``) down the degradation ladder.
+
+    ``hierarchy`` (a ``HierarchyConfig`` with ``l1_sets > 0``) opts into
+    the ``pallas-resident-l1l2`` top rung; its descent target is the flat
+    ``pallas-resident`` rung (same trace, flat semantics).
 
     ``validate_fn(state, sketch) -> (ok, why)`` overrides the invariant
     check per rung (the chaos tests use this to force alarms);
@@ -83,11 +113,14 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
     """
     from repro.core import backend as backend_mod
 
+    if hierarchy is not None and not hierarchy.enabled:
+        hierarchy = None
     if state is None:
         state = kway.make_cache(cfg)
     check = None
     if validate:
-        check = validate_fn or _default_validate(cfg, tinylfu, vals_mode)
+        check = validate_fn or _default_validate(cfg, tinylfu, vals_mode,
+                                                 hierarchy=hierarchy)
 
     attempts: list = []
 
@@ -122,12 +155,44 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
         pallas = backend_mod.make_backend("pallas", cfg)
     except ValueError as exc:
         pallas = None
+        if hierarchy is not None:
+            attempts.append(("pallas-resident-l1l2", "backend_unsupported"))
         attempts.append(("pallas-resident", "backend_unsupported"))
         attempts.append(("pallas-scan", "backend_unsupported"))
         events.record(
             component=_COMPONENT, reason="backend_unsupported",
             fallback_from="pallas-resident", fallback_to="jnp-scan",
             detail=str(exc))
+
+    if pallas is not None and hierarchy is not None:
+        if tinylfu is not None:
+            attempts.append(("pallas-resident-l1l2", "backend_unsupported"))
+            events.record(
+                component=_COMPONENT, reason="backend_unsupported",
+                fallback_from="pallas-resident-l1l2",
+                fallback_to="pallas-resident",
+                detail="hierarchical replay does not support TinyLFU "
+                       "admission")
+        elif pallas.hier_fits(hierarchy):
+            from repro.core import hierarchy as hier_mod
+            from repro.kernels import ops
+
+            hst = hier_mod.as_hier_state(cfg, hierarchy, state)
+            out = _attempt(
+                "pallas-resident-l1l2",
+                lambda: ops.replay_hierarchical(cfg, hierarchy, hst,
+                                                chunks, enabled))
+            if out is not None:
+                return out
+        else:
+            attempts.append(("pallas-resident-l1l2", "vmem_budget"))
+            events.record(
+                component=_COMPONENT, reason="vmem_budget",
+                fallback_from="pallas-resident-l1l2",
+                fallback_to="pallas-resident",
+                detail=(f"l1_sets={hierarchy.l1_sets} exceeds the resident "
+                        f"budget even for the L1 tier; descending to the "
+                        f"flat ladder"))
 
     if pallas is not None:
         if pallas.resident_fits():
@@ -144,7 +209,11 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
             events.record(
                 component=_COMPONENT, reason="vmem_budget",
                 fallback_from="pallas-resident", fallback_to="pallas-scan",
-                detail=f"num_sets={cfg.num_sets} exceeds resident budget")
+                detail=(f"num_sets={cfg.num_sets} exceeds resident budget; "
+                        f"falling back to pallas-scan (the "
+                        f"pallas-resident-l1l2 rung via "
+                        f"HierarchyConfig(l1_sets>0) keeps a VMEM L1 over "
+                        f"the HBM L2 at this capacity)"))
 
         out = _attempt(
             "pallas-scan",

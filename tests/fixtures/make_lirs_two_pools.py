@@ -1,0 +1,60 @@
+"""Regenerate ``lirs_two_pools.trace`` — run from the repo root:
+
+    python tests/fixtures/make_lirs_two_pools.py
+
+Deterministic stand-in for the public ARC/LIRS loop traces the paper's
+hit-ratio studies use (the container has no network, so the fixture is
+regenerated from the published workload *shape* rather than downloaded):
+a small hot pool of re-referenced blocks interleaved with long sequential
+cold scans that sweep a region ~40x the hot pool.  This is the classic
+LIRS "two pools" stress: recency-only policies let each scan flush the
+hot pool; frequency-aware and hierarchical (small-L1) configurations
+hold it.  One decimal block id per line, no header (``trace_io``'s ARC
+parser rejects non-decimal lines), 10_000 requests.
+
+All randomness is the 32-bit LCG below (Numerical Recipes constants), so
+the file is bit-reproducible everywhere.
+"""
+from __future__ import annotations
+
+import os
+
+N_REQUESTS = 10_000
+HOT_KEYS = 512           # hot pool: ids [1, 512]
+COLD_BASE = 100_000      # cold scans sweep ids [COLD_BASE, COLD_BASE+COLD_SPAN)
+COLD_SPAN = 20_000
+SCAN_LEN = 96            # each cold scan touches this many sequential blocks
+HOT_RUN = 160            # hot re-reference burst length between scans
+SEED = 0xB10C
+
+
+def _lcg(x: int) -> int:
+    return (x * 1664525 + 1013904223) & 0xFFFFFFFF
+
+
+def generate() -> list[int]:
+    keys: list[int] = []
+    x = SEED
+    cold_ptr = 0
+    while len(keys) < N_REQUESTS:
+        for _ in range(HOT_RUN):            # hot burst: LCG-picked hot ids
+            x = _lcg(x)
+            keys.append(1 + (x >> 16) % HOT_KEYS)
+        for _ in range(SCAN_LEN):           # cold scan: sequential sweep
+            keys.append(COLD_BASE + cold_ptr)
+            cold_ptr = (cold_ptr + 1) % COLD_SPAN
+    return keys[:N_REQUESTS]
+
+
+def main() -> None:
+    out = os.path.join(os.path.dirname(__file__), "lirs_two_pools.trace")
+    keys = generate()
+    with open(out, "w") as f:
+        f.write("\n".join(str(k) for k in keys))
+        f.write("\n")
+    print(f"wrote {out}: {len(keys)} requests, "
+          f"{len(set(keys))} distinct keys")
+
+
+if __name__ == "__main__":
+    main()

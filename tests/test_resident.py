@@ -185,19 +185,21 @@ def test_resident_sharded_tinylfu_parity():
         _assert_state_equal(st1, st2, f"sharded tinylfu D={d}")
 
 
-def test_resident_vmem_fallback(monkeypatch):
-    """A state too large for the VMEM budget silently falls back to the
-    chunked-scan path — same results, no crash."""
+def test_resident_vmem_fallback():
+    """A state too large for the VMEM budget falls back to the chunked-scan
+    path — same results, no crash.  Uses the ``vmem_budget`` context
+    manager (the budget knob every figure and chaos harness shares)."""
     from repro.core import backend as backend_mod
 
     cfg = KWayConfig(policy=Policy.LRU, **CONFIG)
     chunks, en = _golden_chunks()
     pb = make_backend("pallas", cfg)
-    monkeypatch.setattr(backend_mod, "RESIDENT_VMEM_BUDGET", 1024)
-    assert not pb.resident_fits()
-    kreplay.reset_trace_counts()
-    h1, e1, st1, _ = pb.replay(pb.init(), chunks, en)
-    assert sum(kreplay.trace_counts().values()) == 0   # no megakernel ran
+    with backend_mod.vmem_budget(1024):
+        assert not pb.resident_fits()
+        kreplay.reset_trace_counts()
+        h1, e1, st1, _ = pb.replay(pb.init(), chunks, en)
+        assert sum(kreplay.trace_counts().values()) == 0  # no megakernel ran
+    assert pb.resident_fits()          # budget restored on exit
     jb = make_backend("jnp", cfg)
     h2, e2, st2, _ = jb.replay(jb.init(), chunks, en)
     np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))

@@ -229,7 +229,7 @@ def test_trace_faults_survived(kind):
 # degradation ladder
 # ---------------------------------------------------------------------------
 
-def test_forced_vmem_breach_takes_scan_rung_with_event(monkeypatch):
+def test_forced_vmem_breach_takes_scan_rung_with_event():
     """Satellite: the silent RESIDENT_VMEM_BUDGET fallback is now an
     observable degradation event, and the fallback rung still matches the
     resident path's golden-trace results bit-for-bit."""
@@ -238,9 +238,9 @@ def test_forced_vmem_breach_takes_scan_rung_with_event(monkeypatch):
     chunks, enabled = _chunks()
     h_ref, e_ref, st_ref, _ = be.replay(be.init(), chunks, enabled)
 
-    monkeypatch.setattr(backend_mod, "RESIDENT_VMEM_BUDGET", 0)
     c0 = events.cursor()
-    h, e, st, _ = be.replay(be.init(), chunks, enabled)
+    with backend_mod.vmem_budget(0):
+        h, e, st, _ = be.replay(be.init(), chunks, enabled)
     evs = [ev for ev in events.since(c0) if ev.component == "pallas.replay"]
     assert len(evs) == 1 and evs[0].reason == "vmem_budget"
     assert evs[0].fallback_from == "pallas-resident"
@@ -251,15 +251,15 @@ def test_forced_vmem_breach_takes_scan_rung_with_event(monkeypatch):
                                   np.asarray(st_ref.keys))
 
 
-def test_ladder_vmem_breach(monkeypatch):
+def test_ladder_vmem_breach():
     cfg = KWayConfig(**CONFIG)
     chunks, enabled = _chunks()
     out_fast = resilient_replay(cfg, chunks, enabled)
     assert out_fast.rung == "pallas-resident"
 
-    monkeypatch.setattr(backend_mod, "RESIDENT_VMEM_BUDGET", 0)
     c0 = events.cursor()
-    out = resilient_replay(cfg, chunks, enabled)
+    with backend_mod.vmem_budget(0):
+        out = resilient_replay(cfg, chunks, enabled)
     assert out.rung == "pallas-scan"
     assert ("pallas-resident", "vmem_budget") in out.attempts
     assert events.count(component="ladder.replay", reason="vmem_budget",
