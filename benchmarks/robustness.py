@@ -7,7 +7,7 @@ recovery hit ratios, the degradation ladder under a forced VMEM breach,
 and the wall-clock overhead of fusing the invariant validator into the
 replay scan.
 
-    PYTHONPATH=src python -m benchmarks.robustness --quick \
+    PYTHONPATH=src python -m benchmarks.robustness --quick [--ttl] \
         [--out BENCH_robustness.json] \
         [--gate benchmarks/baselines/BENCH_robustness_quick.json] \
         [--overhead-gate 5.0]
@@ -20,9 +20,12 @@ the shared ``_baseline_gate``/``_run_gate`` contract from
 ``benchmarks.throughput`` — exit 3 on divergence, dead gate = breach.
 ``--overhead-gate`` additionally enforces the absolute validator-overhead
 ceiling (<5% by default) on ``robust-overhead/validated-replay/pct``; a
-missing overhead record is a breach, never a silent pass.  This is the CI
-chaos-smoke entry point; ``run()`` is the CSV section for
-``benchmarks/run.py``.
+missing overhead record is a breach, never a silent pass.  ``--ttl`` adds
+the expiry-lane group (DESIGN.md §15): TTL replay pinned clean and
+backend-identical, plus the ``clock_skew``/``stale_entry`` expiry-scrub
+chaos loop as a deterministic cost band — the ``robust-ttl/*`` records
+ride the same ``--gate`` diff.  This is the CI chaos-smoke entry point;
+``run()`` is the CSV section for ``benchmarks/run.py``.
 """
 import argparse
 import sys
@@ -72,7 +75,7 @@ def _compare(args) -> int:
     from repro.eval import artifacts
 
     spec, records, skipped = figures.robustness(
-        quick=args.quick,
+        quick=args.quick, ttl=args.ttl,
         progress=None if args.quiet else
         (lambda m: print(f"  [robustness] {m}", flush=True)))
     art = artifacts.make_artifact("robustness", spec, records, skipped)
@@ -117,6 +120,10 @@ def main(argv=None) -> int:
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ttl", action="store_true",
+                    help="add the expiry-lane record group (TTL replay "
+                         "pinned clean + expiry-scrub chaos cost band); "
+                         "the robust-ttl/* records ride the --gate diff")
     ap.add_argument("--out", default=None,
                     help="artifact path (default BENCH_robustness.json)")
     ap.add_argument("--gate", default=None, metavar="BASELINE",

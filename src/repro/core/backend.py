@@ -34,6 +34,7 @@ Semantics:
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -105,10 +106,11 @@ class CacheBackend:
 
     def __init__(self, cfg: KWayConfig):
         self.cfg = cfg
-        self._replay_fns: dict = {}   # tinylfu -> jitted chunked-scan replay
+        # (tinylfu, has_ttl) -> jitted chunked-scan replay
+        self._replay_fns: dict = {}
 
-    def init(self) -> KWayState:
-        return kway.make_cache(self.cfg)
+    def init(self, *, ttl: bool = False) -> KWayState:
+        return kway.make_cache(self.cfg, ttl=ttl)
 
     # -- required ----------------------------------------------------------
     def get(self, state, qkeys, enabled=None):
@@ -150,18 +152,25 @@ class CacheBackend:
         return state, hit, vals, ek, ev
 
     def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None,
-               *, slot_value: bool = False):
+               ttls=None, *, slot_value: bool = False):
         """-> (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B])
 
         Backends with a fused single-probe path override this; the default
         is the two-phase composition (the ref oracle replays sequentially
-        either way).
+        either way).  ``ttls`` (int32 [B], optional) gives each request a
+        time-to-live on the logical clock (DESIGN.md §15); the two-phase
+        composition has no expiry semantics, so the default rejects it.
         """
+        if ttls is not None:
+            raise ValueError(
+                f"backend {self.name!r} access has no fused TTL path; "
+                "per-request TTLs require the jnp, pallas or ref backend")
         return self.access_two_phase(state, qkeys, qvals,
                                      admit_on_miss=admit_on_miss,
                                      enabled=enabled, slot_value=slot_value)
 
-    def _replay_hier(self, state, chunks, enabled, tinylfu, hierarchy):
+    def _replay_hier(self, state, chunks, enabled, tinylfu, hierarchy,
+                     ttls=None):
         """Hierarchical replay through the pure-XLA twin
         (core/hierarchy.replay_l1_over_l2).  ``state`` may be a
         ``HierState`` (resumed hierarchy) or a plain ``KWayState`` (the L2;
@@ -174,10 +183,10 @@ class CacheBackend:
                 "(the sketch has no per-tier semantics yet)")
         hst = hier_mod.as_hier_state(self.cfg, hierarchy, state)
         return hier_mod.replay_l1_over_l2(self.cfg, hierarchy, hst,
-                                          chunks, enabled)
+                                          chunks, enabled, ttls=ttls)
 
     def replay(self, state, chunks, enabled, tinylfu=None, sketch=None,
-               hierarchy=None):
+               hierarchy=None, ttls=None):
         """Replay a whole chunked trace: ``chunks`` uint32 [steps, B] and
         ``enabled`` bool [steps, B] in the ``router.pad_chunks`` layout,
         payload convention ``val == key`` (as int32).
@@ -192,6 +201,12 @@ class CacheBackend:
         returned state is a ``HierState``.  ``l1_sets == 0`` (or None)
         falls through to the flat paths unchanged.
 
+        ``ttls`` (int32 [steps, B], chunked like the trace) enables expiry
+        semantics: each request's insert carries a deadline, expired
+        entries are scrubbed at every batch entry and never count as hits
+        (DESIGN.md §15).  Mutually exclusive with ``tinylfu`` (admission
+        has no expiry-aware victim semantics yet).
+
         Default implementation: one jitted ``lax.scan`` over the chunks
         through the fused ``access`` with the TinyLFU record → peek → admit
         phase order of the batched replay — the chunked-scan oracle the
@@ -201,9 +216,15 @@ class CacheBackend:
             raise ValueError(
                 f"backend {self.name!r} is host Python and has no scanned "
                 "replay; drive it through simulate.replay_batched")
+        if ttls is not None and tinylfu is not None:
+            raise ValueError(
+                "per-request TTLs and TinyLFU admission are mutually "
+                "exclusive (the sketch has no expiry-aware semantics)")
         if hierarchy is not None and hierarchy.enabled:
             return self._replay_hier(state, chunks, enabled, tinylfu,
-                                     hierarchy)
+                                     hierarchy, ttls=ttls)
+        if ttls is not None:
+            return self._replay_ttl(state, chunks, enabled, ttls)
         if tinylfu is not None and sketch is None:
             sketch = admission.make_sketch(tinylfu)
         if tinylfu is None and sketch is None:
@@ -233,6 +254,32 @@ class CacheBackend:
             sketch)
         return hits, evs, state, (sk if tinylfu is not None else None)
 
+    def _replay_ttl(self, state, chunks, enabled, ttls):
+        """TTL-enabled chunked-scan replay: a separate scan whose xs carry
+        the per-request TTL stream.  Kept apart from the TTL-less scan so
+        the ``ttls=None`` replay traces the exact pre-TTL program."""
+        state = kway.ensure_expiry(state)
+        key = ("ttl",)
+        if key not in self._replay_fns:
+            def fn(state, chunks, enabled, tchunks):
+                def step(cache, xs):
+                    keys, en, tt = xs
+                    cache, hit, _, _, ev = self.access(
+                        cache, keys, keys.astype(jnp.int32), None, en,
+                        ttls=tt)
+                    return cache, (jnp.sum(hit.astype(jnp.int32)),
+                                   jnp.sum(ev.astype(jnp.int32)))
+
+                state, (hits, evs) = jax.lax.scan(
+                    step, state, (chunks, enabled, tchunks))
+                return hits, evs, state
+            self._replay_fns[key] = jax.jit(fn)
+        hits, evs, state = self._replay_fns[key](
+            jax.tree_util.tree_map(jnp.asarray, state),
+            jnp.asarray(chunks, jnp.uint32), jnp.asarray(enabled, jnp.bool_),
+            jnp.asarray(ttls, jnp.int32))
+        return hits, evs, state, None
+
 
 @register_backend("jnp")
 class JnpBackend(CacheBackend):
@@ -247,12 +294,12 @@ class JnpBackend(CacheBackend):
                         enabled=enabled, slot_value=slot_value)
 
     def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None,
-               *, slot_value: bool = False):
+               ttls=None, *, slot_value: bool = False):
         # fused single-probe path (kway.apply_access); bit-identical to
         # access_two_phase
         return kway.access(self.cfg, state, qkeys, qvals,
                            admit_on_miss=admit_on_miss, enabled=enabled,
-                           slot_value=slot_value)
+                           ttls=ttls, slot_value=slot_value)
 
     def access_donated(self, state, qkeys, qvals, admit_on_miss=None,
                        enabled=None, *, slot_value: bool = False):
@@ -296,16 +343,23 @@ class PallasBackend(CacheBackend):
         return kway.apply_get(self.cfg, state, sets, hit, way)
 
     def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None,
-               *, slot_value: bool = False):
+               ttls=None, *, slot_value: bool = False):
         # ONE kernel launch (fused probe + victim order on hit-updated
         # metadata) + the shared fused apply — bit-identical to the
-        # two-launch access_two_phase path
+        # two-launch access_two_phase path.  The expiry scrub runs before
+        # the probe launch (exactly where the jnp path scrubs), so the
+        # kernel itself needs no expiry awareness.
         from repro.kernels import ops
+        if state.expiry is not None:
+            b = jnp.asarray(qkeys).shape[0]
+            state = kway.scrub_expired(state,
+                                       state.clock + jnp.int32(2 * b))
         qk, sets, hit_raw, way, order = ops.fused_probe(
             self.cfg, state, jnp.asarray(qkeys, jnp.uint32), enabled)
         return kway.apply_access(
             self.cfg, state, qk, qvals, sets, hit_raw, way,
-            admit_on_miss, enabled, order=order, slot_value=slot_value)
+            admit_on_miss, enabled, order=order, ttls=ttls,
+            slot_value=slot_value)
 
     def put(self, state, qkeys, qvals, admit=None, enabled=None, *,
             slot_value: bool = False):
@@ -342,15 +396,16 @@ class PallasBackend(CacheBackend):
         from repro.core.hierarchy import hier_footprint_bytes
         return hier_footprint_bytes(hierarchy) <= RESIDENT_VMEM_BUDGET
 
-    def replay_scan(self, state, chunks, enabled, tinylfu=None, sketch=None):
+    def replay_scan(self, state, chunks, enabled, tinylfu=None, sketch=None,
+                    ttls=None):
         """The chunked-scan replay (the CacheBackend default), kept callable
         on this backend as the megakernel's differential oracle and as the
         fallback when the cache state exceeds the VMEM budget."""
         return CacheBackend.replay(self, state, chunks, enabled,
-                                   tinylfu=tinylfu, sketch=sketch)
+                                   tinylfu=tinylfu, sketch=sketch, ttls=ttls)
 
     def replay(self, state, chunks, enabled, tinylfu=None, sketch=None,
-               hierarchy=None):
+               hierarchy=None, ttls=None):
         """Trace-resident replay with a three-way dispatch (DESIGN.md §14):
 
           1. ``hierarchy`` configured (``l1_sets > 0``) → the hierarchical
@@ -366,16 +421,21 @@ class PallasBackend(CacheBackend):
              faster opt-in).
         """
         from repro.kernels import ops
+        if ttls is not None and tinylfu is not None:
+            raise ValueError(
+                "per-request TTLs and TinyLFU admission are mutually "
+                "exclusive (the sketch has no expiry-aware semantics)")
         if hierarchy is not None and hierarchy.enabled:
             if tinylfu is not None:
                 raise ValueError(
                     "hierarchical replay does not support TinyLFU admission "
                     "(the sketch has no per-tier semantics yet)")
             from repro.core import hierarchy as hier_mod
-            hst = hier_mod.as_hier_state(self.cfg, hierarchy, state)
+            hst = hier_mod.as_hier_state(self.cfg, hierarchy, state,
+                                         ttl=ttls is not None)
             if self.hier_fits(hierarchy):
                 return ops.replay_hierarchical(self.cfg, hierarchy, hst,
-                                               chunks, enabled)
+                                               chunks, enabled, ttls=ttls)
             from repro.robust import events
             events.record(
                 component="pallas.replay", reason="l1_demotion",
@@ -387,7 +447,7 @@ class PallasBackend(CacheBackend):
                         f"(l1_sets={hierarchy.l1_sets}); hierarchy "
                         f"demoted to the jnp l1_over_l2 twin"))
             return hier_mod.replay_l1_over_l2(self.cfg, hierarchy, hst,
-                                              chunks, enabled)
+                                              chunks, enabled, ttls=ttls)
         if not self.resident_fits():
             from repro.robust import events
             lane_bytes = self.cfg.num_sets * 128 * 4
@@ -401,9 +461,10 @@ class PallasBackend(CacheBackend):
                         f"(HierarchyConfig(l1_sets>0)) keeps a VMEM L1 over "
                         f"the HBM L2 at this capacity"))
             return self.replay_scan(state, chunks, enabled,
-                                    tinylfu=tinylfu, sketch=sketch)
+                                    tinylfu=tinylfu, sketch=sketch,
+                                    ttls=ttls)
         return ops.replay_resident(self.cfg, state, chunks, enabled,
-                                   tinylfu=tinylfu, sketch=sketch)
+                                   tinylfu=tinylfu, sketch=sketch, ttls=ttls)
 
 
 @register_backend("ref")
@@ -426,15 +487,22 @@ class RefBackend(CacheBackend):
         vals = np.asarray(state.vals)
         ma = np.asarray(state.meta_a)
         mb = np.asarray(state.meta_b)
+        exp = None if state.expiry is None else np.asarray(state.expiry)
         empty = int(EMPTY_KEY)
         for s in range(cfg.num_sets):
             for w in range(cfg.ways):
                 if int(keys[s, w]) != empty:
-                    ref.sets[s][w] = {
+                    node = {
                         "key": int(keys[s, w]), "val": int(vals[s, w]),
                         "a": int(ma[s, w]), "b": int(mb[s, w]),
                     }
+                    if exp is not None:
+                        node["exp"] = int(exp[s, w])
+                    ref.sets[s][w] = node
         ref.clock = int(state.clock)
+        # _export mirrors the lane back out only when the incoming state
+        # carried one — TTL-disabled states round-trip without it.
+        ref.expiry_enabled = exp is not None
         return ref
 
     def _export(self, ref: RefKWay) -> KWayState:
@@ -443,6 +511,9 @@ class RefBackend(CacheBackend):
         vals = np.zeros((cfg.num_sets, cfg.ways), np.int32)
         ma = np.zeros((cfg.num_sets, cfg.ways), np.int32)
         mb = np.zeros((cfg.num_sets, cfg.ways), np.int32)
+        has_exp = getattr(ref, "expiry_enabled", False)
+        exp = (np.full((cfg.num_sets, cfg.ways), kway.NO_EXPIRY, np.int32)
+               if has_exp else None)
         for s in range(cfg.num_sets):
             for w, node in enumerate(ref.sets[s]):
                 if node is not None:
@@ -450,6 +521,8 @@ class RefBackend(CacheBackend):
                     vals[s, w] = node["val"]
                     ma[s, w] = node["a"]
                     mb[s, w] = node["b"]
+                    if exp is not None:
+                        exp[s, w] = node.get("exp", kway.NO_EXPIRY)
         keys_j = jnp.asarray(keys)
         fpr = jnp.where(keys_j == EMPTY_KEY, jnp.uint32(0),
                         hashing.fingerprint(keys_j))
@@ -457,6 +530,7 @@ class RefBackend(CacheBackend):
             keys=keys_j, fprint=fpr, vals=jnp.asarray(vals),
             meta_a=jnp.asarray(ma), meta_b=jnp.asarray(mb),
             clock=jnp.asarray(ref.clock, jnp.int32),
+            expiry=None if exp is None else jnp.asarray(exp),
         )
 
     @staticmethod
@@ -503,6 +577,10 @@ class RefBackend(CacheBackend):
                 slot_sets[i], slot_ways[i] = s, w
                 if slot_value:
                     ref.sets[s][w]["val"] = s * self.cfg.ways + w
+                if getattr(ref, "expiry_enabled", False):
+                    # parity with kway.apply_put: a bare put has no TTL
+                    # argument, so the landing lane is marked never-expiring
+                    ref.sets[s][w]["exp"] = int(kway.NO_EXPIRY)
             if evicted is not None:
                 ek[i], ev[i] = evicted, True
         return (self._export(ref), jnp.asarray(ek), jnp.asarray(ev),
@@ -521,3 +599,47 @@ class RefBackend(CacheBackend):
                 vk[i], vv[i] = victim, True
         ref.clock = clock0
         return jnp.asarray(vk), jnp.asarray(vv)
+
+    def access(self, state, qkeys, qvals, admit_on_miss=None, enabled=None,
+               ttls=None, *, slot_value: bool = False):
+        """Oracle access with the same expiry discipline as the batched
+        paths (DESIGN.md §15): scrub lanes whose deadline falls at or before
+        the batch-exit clock BEFORE probing (so an expired key can never be
+        served), then two-phase get/put, then stamp landed lanes with
+        ``clock0 + 2B + ttl`` (``ttl <= 0`` = never expires)."""
+        if state.expiry is not None:
+            b = int(np.asarray(qkeys).shape[0])
+            state = kway.scrub_expired(state, state.clock + jnp.int32(2 * b))
+        if ttls is None:
+            return self.access_two_phase(
+                state, qkeys, qvals, admit_on_miss=admit_on_miss,
+                enabled=enabled, slot_value=slot_value)
+        if state.expiry is None:
+            raise ValueError(
+                "ref access: ttls given but the state has no expiry lane — "
+                "build it with make_cache(cfg, ttl=True) or ensure_expiry()")
+        clock0 = int(state.clock)
+        b = int(np.asarray(qkeys).shape[0])
+        state, hit, vals = self.get(state, qkeys, enabled=enabled)
+        en = (~hit) if enabled is None else (jnp.asarray(enabled) & ~hit)
+        state, ek, ev, ss, sw = self.put(
+            state, qkeys, qvals, admit=admit_on_miss, enabled=en,
+            slot_value=slot_value)
+        # deadline-stamp the lanes the put phase landed (ss/sw == -1 where
+        # the key did not land); matches kway.insert_deadlines bit-for-bit
+        tt = np.asarray(ttls, np.int32)
+        exp = np.asarray(state.expiry).copy()
+        ssn = np.asarray(ss)
+        swn = np.asarray(sw)
+        for i in range(b):
+            if ssn[i] >= 0:
+                exp[ssn[i], swn[i]] = (
+                    clock0 + 2 * b + int(tt[i]) if tt[i] > 0
+                    else int(kway.NO_EXPIRY))
+        state = dataclasses.replace(state, expiry=jnp.asarray(exp))
+        if slot_value:
+            slot_id = ss * jnp.int32(self.cfg.ways) + sw
+            vals = jnp.where(hit, vals, jnp.where(ss >= 0, slot_id, -1))
+        else:
+            vals = jnp.where(hit, vals, qvals)
+        return state, hit, vals, ek, ev

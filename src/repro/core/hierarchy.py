@@ -24,9 +24,9 @@ This module is the single source of truth for the hierarchy's semantics:
     differential oracle (tests/test_hierarchy.py pins kernel == twin
     bit-for-bit on states, hit counts and eviction counts).
 
-Row layout: each tier travels as ONE int32 ``[sets, ROW_W]`` array of six
-128-column sections — ``keys | fprint | vals | meta_a | meta_b | scalars``.
-The sixth section is an in-row scalar mailbox: every phase WRITES the
+Row layout: each tier travels as ONE int32 ``[sets, ROW_W]`` array of seven
+128-column sections — ``keys | fprint | vals | meta_a | meta_b | scalars |
+expiry``.  The sixth section is an in-row scalar mailbox: every phase WRITES the
 scalars later phases need (hit flags, the promoted entry, the displaced
 victim, the eviction flag) into the row it stores, and consumers read them
 back from the row AFTER the store.  That discipline — a fetched row's
@@ -68,6 +68,20 @@ Semantics (exclusive hierarchy, DESIGN.md §14):
 ``l1_sets == 0`` disables the hierarchy entirely: every caller dispatches
 to the existing flat paths, so the disabled mode is bit-exact with them
 by construction (pinned by the differential suite).
+
+Expiry (DESIGN.md §15): the seventh row section carries the per-lane
+deadline on the shared logical clock.  Replay with ``ttls`` scrubs each
+FETCHED row lazily — lanes whose deadline falls at or before the chunk's
+exit clock (``base + 2B``) are reclaimed before any probe or victim
+scoring, so an expired entry is never served from either tier and its
+lane scores as empty (the preferred victim).  Lazy scrub at the same
+horizon as the flat path's eager batch-entry ``kway.scrub_expired`` is
+bit-equivalent for every touched row: entries inserted, promoted or
+demoted within the chunk always carry deadlines past the horizon, so a
+re-fetch never reclaims them.  Promotion and demotion carry the deadline
+with the entry (mailbox slots ``SC_PEXP`` / ``SC_DE``).  With TTLs
+disabled the section is all ``NO_EXPIRY``, the scrub is compiled out,
+and every output is bit-identical to the pre-expiry code.
 """
 from __future__ import annotations
 
@@ -78,7 +92,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashing
-from repro.core.kway import KWayConfig, KWayState, make_cache
+from repro.core.kway import (NO_EXPIRY, KWayConfig, KWayState, ensure_expiry,
+                             make_cache)
 from repro.core.policies import Policy
 from repro.kernels.kway_probe import (LANES, NEG_INF, POS_INF,
                                       _fingerprint_i32, _hash_u32,
@@ -95,28 +110,30 @@ L1_SEED_SALT = 0x7A11
 
 _EMPTY = -1  # EMPTY_KEY (0xFFFFFFFF) in the kernels' int32 bit-cast domain
 
-#: packed-row width: five state sections + the scalar-mailbox section,
-#: each LANES columns wide
-ROW_SECS = 6
+#: packed-row width: five state sections + the scalar-mailbox section +
+#: the expiry section (DESIGN.md §15), each LANES columns wide
+ROW_SECS = 7
 ROW_W = ROW_SECS * LANES
 
 # scalar-mailbox slots.  Each phase overwrites the WHOLE scalar section of
 # the row it stores, so slots only need to be unique within one phase:
 #   L1 hit phase   -> SC_HIT1
-#   L2 hit phase   -> SC_L2HIT, SC_PVAL, SC_PA, SC_PB
-#   L1 fill phase  -> SC_DVALID, SC_DK..SC_DB (the displaced victim)
+#   L2 hit phase   -> SC_L2HIT, SC_PVAL, SC_PA, SC_PB, SC_PEXP
+#   L1 fill phase  -> SC_DVALID, SC_DK..SC_DB, SC_DE (the displaced victim)
 #   L2 demote      -> SC_EV
 SC_HIT1 = 0
 SC_L2HIT = 0
 SC_PVAL = 1
 SC_PA = 2
 SC_PB = 3
+SC_PEXP = 4
 SC_DVALID = 0
 SC_DK = 1
 SC_DF = 2
 SC_DV = 3
 SC_DA = 4
 SC_DB = 5
+SC_DE = 6
 SC_EV = 0
 
 
@@ -174,24 +191,34 @@ def l1_config(cfg: KWayConfig, hier: HierarchyConfig) -> KWayConfig:
                       seed=cfg.seed ^ L1_SEED_SALT)
 
 
-def make_hier(cfg: KWayConfig, hier: HierarchyConfig) -> HierState:
-    """Fresh empty hierarchy over an empty L2 of ``cfg``'s geometry."""
-    return HierState(l1=make_cache(l1_config(cfg, hier)), l2=make_cache(cfg))
+def make_hier(cfg: KWayConfig, hier: HierarchyConfig, *,
+              ttl: bool = False) -> HierState:
+    """Fresh empty hierarchy over an empty L2 of ``cfg``'s geometry.
+    ``ttl=True`` attaches the expiry lane to both tiers (all NO_EXPIRY)."""
+    return HierState(l1=make_cache(l1_config(cfg, hier), ttl=ttl),
+                     l2=make_cache(cfg, ttl=ttl))
 
 
 def as_hier_state(cfg: KWayConfig, hier: HierarchyConfig,
-                  state) -> HierState:
+                  state, *, ttl: bool = False) -> HierState:
     """Coerce a replay input state: a ``HierState`` passes through, a bare
-    L2 ``KWayState`` gets a fresh empty L1 attached."""
+    L2 ``KWayState`` gets a fresh empty L1 attached.  ``ttl=True`` ensures
+    both tiers carry the expiry lane (TTL replay needs it)."""
     if isinstance(state, HierState):
+        if ttl:
+            return HierState(l1=ensure_expiry(state.l1),
+                             l2=ensure_expiry(state.l2))
         return state
-    return HierState(l1=make_cache(l1_config(cfg, hier)), l2=state)
+    ttl = ttl or state.expiry is not None
+    return HierState(
+        l1=make_cache(l1_config(cfg, hier), ttl=ttl),
+        l2=ensure_expiry(state) if ttl else state)
 
 
 def hier_footprint_bytes(hier: HierarchyConfig) -> int:
     """VMEM bytes the hierarchical megakernel pins: the packed L1 rows
-    (five state sections plus the scalar mailbox, ways padded to the
-    128-lane register width), double-buffered (input copy + resident
+    (five state sections plus the scalar mailbox and the expiry section,
+    ways padded to the 128-lane register width), double-buffered (input copy + resident
     output) — the analogue of the flat kernel's ``resident_fits``
     accounting with ``l1_sets`` in place of ``num_sets``.  The two DMA
     staging rows (2 × ROW_W·4 B) are noise against any real budget.
@@ -231,6 +258,28 @@ def _secs(row):
     return tuple(_sec(row, j) for j in range(5))
 
 
+def _sec_exp(row):
+    """The expiry section (section 6) of a packed row -> [1, LANES]."""
+    return _sec(row, 6)
+
+
+def _scrub_secs(k, f, v, a, b, e, ways, lane, horizon):
+    """Reclaim expired lanes of a fetched row BEFORE any probe or victim
+    scoring — the hierarchy's lazy analogue of ``kway.scrub_expired`` at
+    the same horizon (the chunk-exit clock ``base + 2B``), so an expired
+    entry is never served and its lane scores as empty, i.e. the
+    preferred victim.  Reclaim is not an eviction (no demotion, no
+    eviction count), exactly like the flat path's batch-entry scrub."""
+    dead = (k != _EMPTY) & (lane < ways) & (e <= horizon)
+    k = jnp.where(dead, jnp.int32(_EMPTY), k)
+    f = jnp.where(dead, jnp.int32(0), f)
+    v = jnp.where(dead, jnp.int32(0), v)
+    a = jnp.where(dead, jnp.int32(0), a)
+    b = jnp.where(dead, jnp.int32(0), b)
+    e = jnp.where(dead, jnp.int32(NO_EXPIRY), e)
+    return k, f, v, a, b, e
+
+
 def _sc_section(slots):
     """Build a fresh scalar-mailbox section from (slot, int32 value)
     pairs; unnamed slots are zero (deterministic — the kernel and the
@@ -247,8 +296,8 @@ def _sc_get(row, slot):
     return _row_sel(_sec(row, 5), _iota_lane(), slot)
 
 
-def _pack_row(k, f, v, a, b, sc):
-    return jnp.concatenate([k, f, v, a, b, sc], axis=1)
+def _pack_row(k, f, v, a, b, sc, e):
+    return jnp.concatenate([k, f, v, a, b, sc, e], axis=1)
 
 
 def _probe_row(row_keys, row_fpr, qk, fp, ways, lane):
@@ -306,10 +355,17 @@ def _set_index_i32(key_i32, num_sets: int, seed: int):
 # store; scalars cross phases through the stored row's mailbox only.
 # ---------------------------------------------------------------------------
 
-def _l1_hit_row(policy: int, row, qk, fp, t_get, en, l1_ways: int):
-    """Phase A: probe L1, apply ``on_hit`` at t_get.  Mailbox: SC_HIT1."""
+def _l1_hit_row(policy: int, row, qk, fp, t_get, en, l1_ways: int,
+                ttl: bool = False, horizon=None):
+    """Phase A: probe L1, apply ``on_hit`` at t_get.  Mailbox: SC_HIT1.
+    With ``ttl`` the row is scrubbed at ``horizon`` before the probe, so
+    an expired L1 entry can never register a hit."""
     lane = _iota_lane()
     k, f, v, a, b = _secs(row)
+    e = _sec_exp(row)
+    if ttl:
+        k, f, v, a, b, e = _scrub_secs(k, f, v, a, b, e, l1_ways, lane,
+                                       horizon)
     hit1, w1 = _probe_row(k, f, qk, fp, l1_ways, lane)
     ha, hb = _hit_meta(policy, _row_sel(a, lane, w1),
                        _row_sel(b, lane, w1), t_get)
@@ -317,21 +373,27 @@ def _l1_hit_row(policy: int, row, qk, fp, t_get, en, l1_ways: int):
     a = jnp.where(do1, _row_put(a, lane, w1, ha), a)
     b = jnp.where(do1, _row_put(b, lane, w1, hb), b)
     sc = _sc_section([(SC_HIT1, hit1.astype(jnp.int32))])
-    return _pack_row(k, f, v, a, b, sc)
+    return _pack_row(k, f, v, a, b, sc, e)
 
 
 def _l2_hit_row(policy: int, promote: bool, row, qk, fp, hit1, t_get, en,
-                l2_ways: int):
+                l2_ways: int, ttl: bool = False, horizon=None):
     """Phase B: probe L2; on an L2 hit apply ``on_hit`` — carried by the
     promoted copy (slot cleared, the tiers stay exclusive) or in place
-    when promotion is off.  Mailbox: SC_L2HIT, SC_PVAL, SC_PA, SC_PB."""
+    when promotion is off.  Mailbox: SC_L2HIT, SC_PVAL, SC_PA, SC_PB,
+    SC_PEXP (the promoted entry's deadline, carried into phase C)."""
     lane = _iota_lane()
     k, f, v, a, b = _secs(row)
+    e = _sec_exp(row)
+    if ttl:
+        k, f, v, a, b, e = _scrub_secs(k, f, v, a, b, e, l2_ways, lane,
+                                       horizon)
     hit2, w2 = _probe_row(k, f, qk, fp, l2_ways, lane)
     l2_hit = (~hit1) & hit2
     pa, pb = _hit_meta(policy, _row_sel(a, lane, w2),
                        _row_sel(b, lane, w2), t_get)
     pval = _row_sel(v, lane, w2)
+    pexp = _row_sel(e, lane, w2)
     do2 = l2_hit & en
     if promote:
         # exclusive move: the L2 slot is cleared, the entry lives on in L1
@@ -340,22 +402,38 @@ def _l2_hit_row(policy: int, promote: bool, row, qk, fp, hit1, t_get, en,
         v = jnp.where(do2, _row_put(v, lane, w2, jnp.int32(0)), v)
         a = jnp.where(do2, _row_put(a, lane, w2, jnp.int32(0)), a)
         b = jnp.where(do2, _row_put(b, lane, w2, jnp.int32(0)), b)
+        e = jnp.where(do2,
+                      _row_put(e, lane, w2, jnp.int32(NO_EXPIRY)), e)
     else:
         a = jnp.where(do2, _row_put(a, lane, w2, pa), a)
         b = jnp.where(do2, _row_put(b, lane, w2, pb), b)
     sc = _sc_section([(SC_L2HIT, l2_hit.astype(jnp.int32)),
-                      (SC_PVAL, pval), (SC_PA, pa), (SC_PB, pb)])
-    return _pack_row(k, f, v, a, b, sc)
+                      (SC_PVAL, pval), (SC_PA, pa), (SC_PB, pb),
+                      (SC_PEXP, pexp)])
+    return _pack_row(k, f, v, a, b, sc, e)
 
 
 def _l1_fill_row(policy: int, promote: bool, row, qk, fp, hit1, l2_hit,
-                 pval, pa, pb, t_put, en, l1_ways: int):
+                 pval, pa, pb, t_put, en, l1_ways: int,
+                 ttl: bool = False, horizon=None, pexp=None, dl=None):
     """Phase C: insert into L1 — the promoted L2 entry (metadata carried)
     or, on a full miss, a fresh ``on_insert`` entry at t_put.  Victim
-    scoring sees the post-hit row (phase A already ran on this set).
-    Mailbox: SC_DVALID + the displaced victim SC_DK..SC_DB."""
+    scoring sees the post-hit row (phase A already ran on this set);
+    with ``ttl`` the row is re-scrubbed first (idempotent — phase A
+    already stored the scrubbed row), so an expired lane is the
+    preferred victim.  The insert's deadline is the promoted entry's
+    carried ``pexp`` or the fresh ``dl`` (``base + 2B + ttl``).
+    Mailbox: SC_DVALID + the displaced victim SC_DK..SC_DB, SC_DE."""
     lane = _iota_lane()
     k, f, v, a, b = _secs(row)
+    e = _sec_exp(row)
+    if ttl:
+        k, f, v, a, b, e = _scrub_secs(k, f, v, a, b, e, l1_ways, lane,
+                                       horizon)
+    if pexp is None:
+        pexp = jnp.int32(NO_EXPIRY)
+    if dl is None:
+        dl = jnp.int32(NO_EXPIRY)
     miss = (~hit1) & (~l2_hit)
     ia, ib = _insert_meta(policy, t_put)
     if promote:
@@ -363,35 +441,46 @@ def _l1_fill_row(policy: int, promote: bool, row, qk, fp, hit1, l2_hit,
         ins_v = jnp.where(l2_hit, pval, qk)   # payload convention val == key
         ins_a = jnp.where(l2_hit, pa, ia)
         ins_b = jnp.where(l2_hit, pb, ib)
+        ins_e = jnp.where(l2_hit, pexp, dl)
     else:
         ins = en & miss
-        ins_v, ins_a, ins_b = qk, ia, ib
+        ins_v, ins_a, ins_b, ins_e = qk, ia, ib, dl
     vw = _victim_way(policy, k, a, b, t_put, l1_ways, lane)
     dk = _row_sel(k, lane, vw)
     df = _row_sel(f, lane, vw)
     dv = _row_sel(v, lane, vw)
     da = _row_sel(a, lane, vw)
     db = _row_sel(b, lane, vw)
+    de = _row_sel(e, lane, vw)
     dvalid = ins & (dk != _EMPTY)
     k = jnp.where(ins, _row_put(k, lane, vw, qk), k)
     f = jnp.where(ins, _row_put(f, lane, vw, fp), f)
     v = jnp.where(ins, _row_put(v, lane, vw, ins_v), v)
     a = jnp.where(ins, _row_put(a, lane, vw, ins_a), a)
     b = jnp.where(ins, _row_put(b, lane, vw, ins_b), b)
+    e = jnp.where(ins, _row_put(e, lane, vw, ins_e), e)
     sc = _sc_section([(SC_DVALID, dvalid.astype(jnp.int32)),
                       (SC_DK, dk), (SC_DF, df), (SC_DV, dv),
-                      (SC_DA, da), (SC_DB, db)])
-    return _pack_row(k, f, v, a, b, sc)
+                      (SC_DA, da), (SC_DB, db), (SC_DE, de)])
+    return _pack_row(k, f, v, a, b, sc, e)
 
 
 def _l2_demote_row(policy: int, row, dk, df, dv, da, db, dvalid, t_put,
-                   l2_ways: int):
+                   l2_ways: int, ttl: bool = False, horizon=None, de=None):
     """Phase D: insert the displaced L1 entry into ITS OWN L2 set's row
-    (victim selection at t_put, metadata carried verbatim).  Mailbox:
-    SC_EV — 1 when the demotion lands on an occupied L2 victim, i.e. an
-    entry leaves the hierarchy."""
+    (victim selection at t_put, metadata AND deadline ``de`` carried
+    verbatim; the row is scrubbed first with ``ttl``, so an expired L2
+    lane absorbs the demotion without an eviction).  Mailbox: SC_EV — 1
+    when the demotion lands on an occupied L2 victim, i.e. an entry
+    leaves the hierarchy."""
     lane = _iota_lane()
     k, f, v, a, b = _secs(row)
+    e = _sec_exp(row)
+    if ttl:
+        k, f, v, a, b, e = _scrub_secs(k, f, v, a, b, e, l2_ways, lane,
+                                       horizon)
+    if de is None:
+        de = jnp.int32(NO_EXPIRY)
     vw = _victim_way(policy, k, a, b, t_put, l2_ways, lane)
     ev = (dvalid & (_row_sel(k, lane, vw) != _EMPTY)).astype(jnp.int32)
     k = jnp.where(dvalid, _row_put(k, lane, vw, dk), k)
@@ -399,8 +488,9 @@ def _l2_demote_row(policy: int, row, dk, df, dv, da, db, dvalid, t_put,
     v = jnp.where(dvalid, _row_put(v, lane, vw, dv), v)
     a = jnp.where(dvalid, _row_put(a, lane, vw, da), a)
     b = jnp.where(dvalid, _row_put(b, lane, vw, db), b)
+    e = jnp.where(dvalid, _row_put(e, lane, vw, de), e)
     sc = _sc_section([(SC_EV, ev)])
-    return _pack_row(k, f, v, a, b, sc)
+    return _pack_row(k, f, v, a, b, sc, e)
 
 
 # ---------------------------------------------------------------------------
@@ -416,14 +506,17 @@ def _pad_ways_i32(arr, fill):
          jnp.full((s, LANES - k), fill, jnp.int32)], axis=1)
 
 
-def _pack_lanes(keys, fpr, vals, ma, mb):
-    """Five [S, ways] lanes -> one packed int32 [S, ROW_W] array (ways
-    padded per section; mailbox section zeroed)."""
+def _pack_lanes(keys, fpr, vals, ma, mb, exp=None):
+    """Five [S, ways] lanes (+ optional expiry) -> one packed int32
+    [S, ROW_W] array (ways padded per section; mailbox section zeroed;
+    expiry section NO_EXPIRY-filled when absent)."""
     sc = jnp.zeros((keys.shape[0], LANES), jnp.int32)
+    ex = (jnp.full((keys.shape[0], LANES), NO_EXPIRY, jnp.int32)
+          if exp is None else _pad_ways_i32(exp, NO_EXPIRY))
     return jnp.concatenate(
         [_pad_ways_i32(keys, -1), _pad_ways_i32(fpr, 0),
          _pad_ways_i32(vals, 0), _pad_ways_i32(ma, 0),
-         _pad_ways_i32(mb, 0), sc], axis=1)
+         _pad_ways_i32(mb, 0), sc, ex], axis=1)
 
 
 def _unpack_lanes(packed, ways: int):
@@ -435,6 +528,12 @@ def _unpack_lanes(packed, ways: int):
         for j in range(5))
 
 
+def _unpack_expiry(packed, ways: int):
+    """Packed [S, ROW_W] -> the int32 [S, ways] expiry lane."""
+    s = packed.shape[0]
+    return jax.lax.slice(packed, (0, 6 * LANES), (s, 6 * LANES + ways))
+
+
 # ---------------------------------------------------------------------------
 # jitted chunked-scan twin — the hierarchy's differential oracle
 # ---------------------------------------------------------------------------
@@ -442,10 +541,10 @@ def _unpack_lanes(packed, ways: int):
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "l1_ways", "l2_ways", "seed",
-                     "promote", "demote"))
+                     "promote", "demote", "ttl"))
 def _replay_hier_scan(
     l1p, l2p, clock,                     # packed int32 [S, ROW_W] tiers
-    qk, s1, s2, en,                      # int32 [T, B] streams
+    qk, s1, s2, en, tt,                  # int32 [T, B] streams
     *,
     policy: int,
     l1_ways: int,
@@ -453,13 +552,14 @@ def _replay_hier_scan(
     seed: int,
     promote: bool,
     demote: bool,
+    ttl: bool,
 ):
     steps, batch = qk.shape
     l2_sets = l2p.shape[0]
 
     def chunk_step(carry, xs):
         l1p, l2p, base = carry
-        qk_r, s1_r, s2_r, en_r = xs
+        qk_r, s1_r, s2_r, en_r, tt_r = xs
 
         # Lane i runs as loop steps 2i (phases A+B) and 2i+1 (phases C+D)
         # so every step performs exactly ONE fetch->store round-trip per
@@ -469,8 +569,13 @@ def _replay_hier_scan(
         # ride the loop carry into the odd step; the phase order per tier
         # is unchanged, so the interleave is bit-exact with the
         # straight-line A->B->C->D formulation.
+        # chunk-exit clock == the flat path's batch-entry scrub horizon,
+        # and the base of every deadline minted this chunk
+        hz = base + jnp.int32(2 * batch) if ttl else None
+
         def lane_body(step, st):
-            l1p, l2p, hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c = st
+            (l1p, l2p, hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c,
+             pexp_c) = st
             i = step >> 1
             is_even = (step & jnp.int32(1)) == 0
             qk_i = qk_r[i]
@@ -479,14 +584,21 @@ def _replay_hier_scan(
             t_get = base + i
             t_put = base + jnp.int32(batch) + i
             s1_i, s2_i = s1_r[i], s2_r[i]
+            if ttl:
+                tt_i = tt_r[i]
+                dl_i = jnp.where(tt_i > 0, hz + tt_i, jnp.int32(NO_EXPIRY))
+            else:
+                dl_i = None
 
             # L1 round-trip: phase A (even) / phase C (odd), both on s1
             r1 = jax.lax.dynamic_slice(l1p, (s1_i, 0), (1, ROW_W))
             row_a = _l1_hit_row(policy, r1, qk_i, fp_i, t_get, en_i,
-                                l1_ways)
+                                l1_ways, ttl=ttl, horizon=hz)
             row_c = _l1_fill_row(policy, promote, r1, qk_i, fp_i,
                                  hit1_c != 0, l2_c != 0, pval_c, pa_c,
-                                 pb_c, t_put, en_i, l1_ways)
+                                 pb_c, t_put, en_i, l1_ways,
+                                 ttl=ttl, horizon=hz, pexp=pexp_c,
+                                 dl=dl_i)
             l1p = jax.lax.dynamic_update_slice(
                 l1p, jnp.where(is_even, row_a, row_c), (s1_i, 0))
             r1p = jax.lax.dynamic_slice(l1p, (s1_i, 0), (1, ROW_W))
@@ -505,14 +617,16 @@ def _replay_hier_scan(
                 sl2 = s2_i
             r2 = jax.lax.dynamic_slice(l2p, (sl2, 0), (1, ROW_W))
             row_b = _l2_hit_row(policy, promote, r2, qk_i, fp_i, hit1,
-                                t_get, en_i, l2_ways)
+                                t_get, en_i, l2_ways, ttl=ttl, horizon=hz)
             if demote:
                 df = _sc_get(r1p, SC_DF)
                 dv = _sc_get(r1p, SC_DV)
                 da = _sc_get(r1p, SC_DA)
                 db = _sc_get(r1p, SC_DB)
+                de = _sc_get(r1p, SC_DE)
                 row_d = _l2_demote_row(policy, r2, dk, df, dv, da, db,
-                                       dvalid, t_put, l2_ways)
+                                       dvalid, t_put, l2_ways,
+                                       ttl=ttl, horizon=hz, de=de)
             else:
                 row_d = r2                          # odd step: no-op store
             l2p = jax.lax.dynamic_update_slice(
@@ -522,6 +636,7 @@ def _replay_hier_scan(
             pval = _sc_get(r2p, SC_PVAL)
             pa = _sc_get(r2p, SC_PA)
             pb = _sc_get(r2p, SC_PB)
+            pexp = _sc_get(r2p, SC_PEXP)
             if demote:
                 ev = _sc_get(r2p, SC_EV)
             else:
@@ -535,20 +650,23 @@ def _replay_hier_scan(
             pval_c = jnp.where(is_even, pval, pval_c)
             pa_c = jnp.where(is_even, pa, pa_c)
             pb_c = jnp.where(is_even, pb, pb_c)
-            return (l1p, l2p, hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c)
+            pexp_c = jnp.where(is_even, pexp, pexp_c)
+            return (l1p, l2p, hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c,
+                    pexp_c)
 
         z = jnp.int32(0)
         l1p, l2p, hits, evs, *_ = jax.lax.fori_loop(
-            0, 2 * batch, lane_body, (l1p, l2p, z, z, z, z, z, z, z))
+            0, 2 * batch, lane_body, (l1p, l2p, z, z, z, z, z, z, z, z))
         return (l1p, l2p, base + jnp.int32(2 * batch)), (hits, evs)
 
     (l1p, l2p, _), (hits, evs) = jax.lax.scan(
-        chunk_step, (l1p, l2p, clock.astype(jnp.int32)), (qk, s1, s2, en))
+        chunk_step, (l1p, l2p, clock.astype(jnp.int32)),
+        (qk, s1, s2, en, tt))
     return hits, evs, l1p, l2p
 
 
 def replay_l1_over_l2(cfg: KWayConfig, hier: HierarchyConfig,
-                      state: HierState, chunks, enabled):
+                      state: HierState, chunks, enabled, ttls=None):
     """Replay routed chunks through the L1-over-L2 hierarchy, pure XLA.
 
     ``chunks`` uint32 [steps, B] / ``enabled`` bool [steps, B] — the
@@ -557,9 +675,19 @@ def replay_l1_over_l2(cfg: KWayConfig, hier: HierarchyConfig,
     (kernels/replay.replay_hierarchical) must reproduce its per-chunk hit
     and eviction counts and final tier states exactly.
 
+    ``ttls`` (int32 [steps, B], optional) gives each request a
+    time-to-live on the logical clock (DESIGN.md §15): misses insert
+    with deadline ``base + 2B + ttl`` (``ttl <= 0`` = never expires) and
+    expired lanes are lazily scrubbed from every row a chunk touches
+    before it is probed — an expired key is never a hit on either tier.
+
     Returns (hits int32 [steps], evs int32 [steps], HierState', None).
     """
     assert hier.enabled, "replay_l1_over_l2 needs l1_sets > 0"
+    ttl = ttls is not None
+    if ttl:
+        state = HierState(l1=ensure_expiry(state.l1),
+                          l2=ensure_expiry(state.l2))
     steps, batch = chunks.shape
     qk = hashing.sanitize_keys(jnp.asarray(chunks, jnp.uint32).reshape(-1))
     s1 = hashing.set_index(qk, hier.l1_sets,
@@ -567,15 +695,20 @@ def replay_l1_over_l2(cfg: KWayConfig, hier: HierarchyConfig,
     s2 = hashing.set_index(qk, cfg.num_sets, cfg.seed).reshape(steps, batch)
     qk = qk.astype(jnp.int32).reshape(steps, batch)
     en = jnp.asarray(enabled).astype(jnp.int32)
+    tt = (jnp.asarray(ttls, jnp.int32) if ttl
+          else jnp.zeros((steps, batch), jnp.int32))
 
     l1, l2 = state.l1, state.l2
-    l1p = _pack_lanes(l1.keys, l1.fprint, l1.vals, l1.meta_a, l1.meta_b)
-    l2p = _pack_lanes(l2.keys, l2.fprint, l2.vals, l2.meta_a, l2.meta_b)
+    carry_exp = l1.expiry is not None or l2.expiry is not None
+    l1p = _pack_lanes(l1.keys, l1.fprint, l1.vals, l1.meta_a, l1.meta_b,
+                      l1.expiry)
+    l2p = _pack_lanes(l2.keys, l2.fprint, l2.vals, l2.meta_a, l2.meta_b,
+                      l2.expiry)
 
     hits, evs, l1p_f, l2p_f = _replay_hier_scan(
-        l1p, l2p, state.l2.clock, qk, s1, s2, en,
+        l1p, l2p, state.l2.clock, qk, s1, s2, en, tt,
         policy=int(cfg.policy), l1_ways=hier.l1_ways, l2_ways=cfg.ways,
-        seed=cfg.seed, promote=hier.promote, demote=hier.demote)
+        seed=cfg.seed, promote=hier.promote, demote=hier.demote, ttl=ttl)
 
     clock_f = state.l2.clock + jnp.int32(2 * batch * steps)
 
@@ -583,7 +716,9 @@ def replay_l1_over_l2(cfg: KWayConfig, hier: HierarchyConfig,
         k, f, v, a, b = _unpack_lanes(packed, ways)
         return KWayState(keys=k.astype(jnp.uint32),
                          fprint=f.astype(jnp.uint32),
-                         vals=v, meta_a=a, meta_b=b, clock=clock_f)
+                         vals=v, meta_a=a, meta_b=b, clock=clock_f,
+                         expiry=(_unpack_expiry(packed, ways)
+                                 if carry_exp else None))
 
     out = HierState(l1=unpack(l1p_f, hier.l1_ways),
                     l2=unpack(l2p_f, cfg.ways))

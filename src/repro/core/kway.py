@@ -47,11 +47,24 @@ from repro.core.policies import Policy, on_hit, on_insert, victim_scores
 NEG_INF = jnp.float32(-3.0e38)
 POS_INF = jnp.float32(3.0e38)
 
+#: "never expires" deadline sentinel (int32 max).  Every lane of a fresh
+#: expiry array holds it, so a cache with the lane but no TTL-bearing
+#: requests behaves bit-identically to one without the lane.
+NO_EXPIRY = 0x7FFFFFFF
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class KWayState:
-    """Cache contents.  A pytree — shardable, scannable, checkpointable."""
+    """Cache contents.  A pytree — shardable, scannable, checkpointable.
+
+    ``expiry`` is the optional TTL lane (DESIGN.md §15): an absolute
+    int32 deadline on the replay clock per cached entry, ``NO_EXPIRY``
+    when the entry never expires.  ``None`` (the default) means the
+    cache has no expiry semantics at all — the pytree then has exactly
+    the pre-TTL leaves, so every TTL-disabled code path is bit-identical
+    to the lane-less implementation by construction.
+    """
 
     keys: jnp.ndarray    # uint32 [S, k]
     fprint: jnp.ndarray  # uint32 [S, k]
@@ -59,6 +72,7 @@ class KWayState:
     meta_a: jnp.ndarray  # int32  [S, k]
     meta_b: jnp.ndarray  # int32  [S, k]
     clock: jnp.ndarray   # int32  []
+    expiry: Optional[jnp.ndarray] = None  # int32 [S, k] | None
 
     @property
     def num_sets(self) -> int:
@@ -104,7 +118,7 @@ def fully_associative(capacity: int, policy: Policy, sample: int = 0) -> KWayCon
     return KWayConfig(num_sets=1, ways=capacity, policy=policy, sample=sample)
 
 
-def make_cache(cfg: KWayConfig) -> KWayState:
+def make_cache(cfg: KWayConfig, *, ttl: bool = False) -> KWayState:
     s, k = cfg.num_sets, cfg.ways
     return KWayState(
         keys=jnp.full((s, k), EMPTY_KEY, jnp.uint32),
@@ -113,7 +127,59 @@ def make_cache(cfg: KWayConfig) -> KWayState:
         meta_a=jnp.zeros((s, k), jnp.int32),
         meta_b=jnp.zeros((s, k), jnp.int32),
         clock=jnp.zeros((), jnp.int32),
+        expiry=(jnp.full((s, k), NO_EXPIRY, jnp.int32) if ttl else None),
     )
+
+
+def ensure_expiry(state: KWayState) -> KWayState:
+    """Attach an all-``NO_EXPIRY`` expiry lane if the state lacks one."""
+    if state.expiry is not None:
+        return state
+    return dataclasses.replace(
+        state, expiry=jnp.full(state.keys.shape, NO_EXPIRY, jnp.int32))
+
+
+def scrub_expired(state: KWayState, horizon: jnp.ndarray) -> KWayState:
+    """Reclaim every entry whose deadline is at or before ``horizon``.
+
+    The expiry contract (DESIGN.md §15): each batch scrubs with
+    ``horizon = clock_at_entry + 2B`` — the clock value at batch *exit* —
+    so an entry is visible to a batch only if it is still live when the
+    batch retires.  Scrubbed lanes become ordinary empty lanes (never
+    hit, filled first by victim selection); reclaiming one is not an
+    eviction.  The resulting steady-state invariant, independent of
+    batch size, is ``occupied ⇒ expiry > clock`` — what the
+    ``expired_resident`` validator bit checks.  No-op when the state has
+    no expiry lane.
+    """
+    if state.expiry is None:
+        return state
+    dead = (state.keys != EMPTY_KEY) & (state.expiry <= horizon)
+    return dataclasses.replace(
+        state,
+        keys=jnp.where(dead, jnp.uint32(EMPTY_KEY), state.keys),
+        fprint=jnp.where(dead, jnp.uint32(0), state.fprint),
+        vals=jnp.where(dead, jnp.int32(0), state.vals),
+        meta_a=jnp.where(dead, jnp.int32(0), state.meta_a),
+        meta_b=jnp.where(dead, jnp.int32(0), state.meta_b),
+        expiry=jnp.where(dead, jnp.int32(NO_EXPIRY), state.expiry),
+    )
+
+
+def insert_deadlines(clock, b: int, ttls: Optional[jnp.ndarray]):
+    """Deadlines for this batch's inserts: ``clock + 2B + ttl`` (TTL
+    counted from the batch-exit clock), ``NO_EXPIRY`` for ``ttl <= 0``.
+
+    The deadline is a *chunk-level* constant plus the per-request TTL —
+    deliberately independent of the lane's position inside the batch, so
+    the sharded replay (which permutes lanes into owner buckets but
+    advances every shard's clock by the same 2B per step) lands
+    bit-identical deadlines to the unsharded path.
+    """
+    if ttls is None:
+        return None
+    dl = clock + jnp.int32(2 * b) + ttls.astype(jnp.int32)
+    return jnp.where(ttls > 0, dl, jnp.int32(NO_EXPIRY))
 
 
 # ---------------------------------------------------------------------------
@@ -357,8 +423,13 @@ def apply_put(
     vals = state.vals.at[sets_w, way_w].set(qvals)
     meta_a = state.meta_a.at[sets_w, way_w].set(new_a)
     meta_b = state.meta_b.at[sets_w, way_w].set(new_b)
+    # put has no TTL argument (TTL riding is the fused access path's job);
+    # an expiry lane, when present, is carried with landing lanes marked
+    # never-expiring so the structural invariants stay intact.
+    expiry = (None if state.expiry is None
+              else state.expiry.at[sets_w, way_w].set(jnp.int32(NO_EXPIRY)))
 
-    new_state = KWayState(keys, fpr, vals, meta_a, meta_b, clock)
+    new_state = KWayState(keys, fpr, vals, meta_a, meta_b, clock, expiry)
     slot_sets = jnp.where(active, sets, -1)
     slot_ways = jnp.where(active, way, -1)
     return new_state, evicted_keys, evicted_valid, slot_sets, slot_ways
@@ -434,6 +505,7 @@ def apply_access(
     enabled: Optional[jnp.ndarray] = None,
     order: Optional[jnp.ndarray] = None,
     set_keys: Optional[jnp.ndarray] = None,
+    ttls: Optional[jnp.ndarray] = None,
     *,
     slot_value: bool = False,
 ):
@@ -468,8 +540,20 @@ def apply_access(
     for a whole batch — bit-identical to the get + slot-returning-put
     composition (``CacheBackend.access_two_phase`` with ``slot_value``).
 
+    ``ttls`` (int32 [B], optional) gives each request a time-to-live on
+    the logical clock: its insert lands with deadline ``clock + 2B + ttl``
+    (``NO_EXPIRY`` for ``ttl <= 0``); hits never refresh a deadline.  The
+    caller is responsible for having scrubbed expired entries at batch
+    entry (``scrub_expired`` with the batch-exit horizon) — the probe
+    feeding this apply then cannot see an expired key.  Requires the
+    state to carry an expiry lane.
+
     Returns (state', hit[B], vals[B], evicted_keys[B], evicted_valid[B]).
     """
+    if ttls is not None and state.expiry is None:
+        raise ValueError(
+            "apply_access: ttls given but the state has no expiry lane — "
+            "build it with make_cache(cfg, ttl=True) or ensure_expiry()")
     b = qkeys.shape[0]
     times_get = state.clock + jnp.arange(b, dtype=jnp.int32)
     times_put = times_get + jnp.int32(b)
@@ -530,8 +614,14 @@ def apply_access(
     vals = state.vals.at[sets_w, way_w].set(qvals)
     meta_a = meta_a1.at[sets_w, way_w].set(ia)
     meta_b = state.meta_b.at[sets_w, way_w].set(ib)
+    expiry = state.expiry
+    if expiry is not None:
+        ie = insert_deadlines(state.clock, b, ttls)
+        if ie is None:           # lane present, no TTLs: never-expiring
+            ie = jnp.full((b,), NO_EXPIRY, jnp.int32)
+        expiry = expiry.at[sets_w, way_w].set(ie)
 
-    new_state = KWayState(keys, fpr, vals, meta_a, meta_b, clock)
+    new_state = KWayState(keys, fpr, vals, meta_a, meta_b, clock, expiry)
     return new_state, hit, vals_out, evicted_keys, evicted_valid
 
 
@@ -542,13 +632,20 @@ def _access_fused(
     qvals: jnp.ndarray,
     admit_on_miss: Optional[jnp.ndarray] = None,
     enabled: Optional[jnp.ndarray] = None,
+    ttls: Optional[jnp.ndarray] = None,
     *,
     slot_value: bool = False,
 ):
+    # Expiry scrub precedes the probe (the "never serve stale" hard
+    # guarantee): an expired key is reclaimed before any hit decision is
+    # made, so the probe itself needs no expiry awareness.
+    if state.expiry is not None:
+        b = qkeys.shape[0]
+        state = scrub_expired(state, state.clock + jnp.int32(2 * b))
     qkeys, sets, set_keys, hit_raw, way = _probe(cfg, state, qkeys)
     return apply_access(cfg, state, qkeys, qvals, sets, hit_raw, way,
                         admit_on_miss, enabled, set_keys=set_keys,
-                        slot_value=slot_value)
+                        ttls=ttls, slot_value=slot_value)
 
 
 #: The canonical cache loop: get; on miss, put (paper §5.1.2 methodology) —

@@ -142,12 +142,15 @@ class ShardedCache:
         self._fns: dict = {}   # (kind, *statics) -> jitted callable
 
     # ------------------------------------------------------------- plumbing
-    def init(self) -> KWayState:
+    def init(self, *, ttl: bool = False) -> KWayState:
         d = self.cfg.num_shards
-        st = self.backend.init()
-        leaves = [jnp.tile(l[None], (d,) + (1,) * l.ndim)
+        st = self.backend.init(ttl=ttl)
+        stack = lambda l: jnp.tile(l[None], (d,) + (1,) * l.ndim)  # noqa: E731
+        leaves = [stack(l)
                   for l in (st.keys, st.fprint, st.vals, st.meta_a, st.meta_b)]
-        return KWayState(*leaves, clock=jnp.zeros((d,), jnp.int32))
+        return KWayState(
+            *leaves, clock=jnp.zeros((d,), jnp.int32),
+            expiry=stack(st.expiry) if st.expiry is not None else None)
 
     def init_sketches(self, tinylfu: TinyLFUConfig) -> TinyLFUState:
         """Per-shard TinyLFU sketches, stacked on the shard axis [D, …]."""
@@ -167,12 +170,15 @@ class ShardedCache:
         return router.route(owner, self.cfg.num_shards, capacity, enabled)
 
     def _local_access(self, tinylfu, two_phase, shard_idx, keys, vals, en,
-                      sketch, state: KWayState):
+                      sketch, state: KWayState, ttls=None):
         """One shard's step on its own bucket ([capacity] lanes).
 
         Runs the TinyLFU record→peek→admit phases on the shard's private
         sketch (same phase order as the unsharded batched replay), then the
         fused access — or the two-phase oracle when ``two_phase``.
+        ``ttls`` (int32 [capacity], optional) are the bucketed per-request
+        TTLs; deadlines are chunk-constant (``clock + 2·capacity + ttl``),
+        so bucketing's lane permutation cannot perturb them.
         """
         del shard_idx
         be = self.backend
@@ -181,8 +187,13 @@ class ShardedCache:
             sketch = admission.record(tinylfu, sketch, keys, enabled=en)
             vkeys, vvalid = be.peek_victims(state, keys)
             admit = admission.admit(tinylfu, sketch, keys, vkeys, vvalid)
-        access = be.access_two_phase if two_phase else be.access
-        state, hit, out, ek, ev = access(state, keys, vals, admit, en)
+        if two_phase:
+            state, hit, out, ek, ev = be.access_two_phase(
+                state, keys, vals, admit, en)
+        else:
+            kw = {} if ttls is None else {"ttls": ttls}
+            state, hit, out, ek, ev = be.access(
+                state, keys, vals, admit, en, **kw)
         return state, sketch, hit, out, ek, ev
 
     def _bucketed(self, plan, keys, vals, capacity):
@@ -278,38 +289,43 @@ class ShardedCache:
             ret = ret + (sk,)
         return ret
 
-    def _bucket_all(self, chunks, en, capacity: int):
+    def _bucket_all(self, chunks, en, capacity: int, tt=None):
         """Route EVERY chunk of a replay up front — one jitted call.
 
         Returns (kb uint32 [D, steps, capacity], eb bool [D, steps,
-        capacity], deferred int32 scalar): per-shard request streams in the
-        exact per-chunk bucket layout the scanned replay routes step by
-        step, transposed shard-major so each shard's whole trace is one
-        contiguous [steps, capacity] stream (what ``CacheBackend.replay``
-        consumes).
+        capacity], tb int32 [D, steps, capacity] | None, deferred int32
+        scalar): per-shard request streams in the exact per-chunk bucket
+        layout the scanned replay routes step by step, transposed
+        shard-major so each shard's whole trace is one contiguous
+        [steps, capacity] stream (what ``CacheBackend.replay`` consumes).
+        ``tb`` carries the per-request TTLs when ``tt`` is given.
         """
-        fkey = ("bucket_all", capacity, chunks.shape)
+        fkey = ("bucket_all", capacity, chunks.shape, tt is not None)
         if fkey not in self._fns:
-            def fn(chunks, en, _cap=capacity):
+            def fn(chunks, en, tt, _cap=capacity):
                 _TRACE_COUNTS[("bucket_all", self.cfg.backend,
                                self.cfg.num_shards, _cap,
                                chunks.shape[1])] += 1
 
-                def per_chunk(keys, e):
+                def per_chunk(keys, e, t):
                     plan = self._route(keys, e, _cap)
                     kb = router.bucket(plan, keys, self.cfg.num_shards,
                                        _cap, jnp.uint32(0))
                     eb = router.bucket_mask(plan, self.cfg.num_shards, _cap)
-                    return kb, eb, jnp.sum(plan.deferred, dtype=jnp.int32)
+                    tb = (None if t is None else
+                          router.bucket(plan, t, self.cfg.num_shards, _cap,
+                                        jnp.int32(0)))
+                    return kb, eb, tb, jnp.sum(plan.deferred, dtype=jnp.int32)
 
-                kb, eb, defer = jax.vmap(per_chunk)(chunks, en)
-                return (kb.transpose(1, 0, 2), eb.transpose(1, 0, 2),
+                kb, eb, tb, defer = jax.vmap(per_chunk)(chunks, en, tt)
+                tr = lambda a: a.transpose(1, 0, 2)  # noqa: E731
+                return (tr(kb), tr(eb), None if tb is None else tr(tb),
                         jnp.sum(defer))
             self._fns[fkey] = jax.jit(fn)
-        return self._fns[fkey](chunks, en)
+        return self._fns[fkey](chunks, en, tt)
 
     def _replay_resident(self, chunks, en, capacity, tinylfu, state,
-                         hierarchy=None):
+                         hierarchy=None, ttls=None):
         """Resident replay: route all chunks once, then ONE megakernel (or
         scanned replay, for the jnp backend) per shard — D launches for the
         whole trace instead of D×steps, with each shard's five state lanes
@@ -326,7 +342,7 @@ class ShardedCache:
         returned stacked state is a ``HierState`` of per-shard tiers.
         """
         d = self.cfg.num_shards
-        kb, eb, defers = self._bucket_all(chunks, en, capacity)
+        kb, eb, tb, defers = self._bucket_all(chunks, en, capacity, ttls)
         sketches = (self.init_sketches(tinylfu) if tinylfu is not None
                     else None)
         hits = 0
@@ -337,7 +353,8 @@ class ShardedCache:
                     if tinylfu is not None else None)
             h, _, st_i, _ = self.backend.replay(
                 st_i, kb[i], eb[i], tinylfu=tinylfu, sketch=sk_i,
-                hierarchy=hierarchy)
+                hierarchy=hierarchy,
+                ttls=None if tb is None else tb[i])
             hits += int(jnp.sum(h))
             shard_states.append(st_i)
         stacked = jax.tree_util.tree_map(
@@ -346,7 +363,7 @@ class ShardedCache:
 
     def replay(self, trace, batch: int, *, tinylfu=None, two_phase=False,
                state: Optional[KWayState] = None, resident: bool = False,
-               hierarchy=None):
+               hierarchy=None, ttls=None):
         """Replay a whole trace in ONE jitted ``lax.scan`` — route, shard
         access and hit accounting all on device; the only host transfers are
         the trace in and three scalars out.
@@ -366,12 +383,37 @@ class ShardedCache:
         replay (see ``_replay_resident``).  Excludes ``two_phase`` (the
         resident path is the fused access) and mesh execution (the host
         drives one launch per shard).
+
+        ``ttls`` (int array [len(trace)], optional) gives each request a
+        time-to-live on the logical clock (DESIGN.md §15).  Deadlines are
+        chunk-constant (``clock + 2·capacity + ttl``) and shard-local
+        clocks track the global clock at chunk boundaries, so the sharded
+        expiry replay stays bit-identical to the unsharded one.  Excludes
+        ``two_phase`` and ``tinylfu``.
         """
         trace = np.asarray(trace, np.uint32)
         chunks, en = router.pad_chunks(trace, batch)
         chunks = jnp.asarray(chunks)
         en = jnp.asarray(en)
         capacity = self.cfg.capacity_for(batch)
+        if ttls is not None:
+            if two_phase:
+                raise ValueError(
+                    "per-request TTLs run on the fused access path; "
+                    "two_phase has no expiry semantics")
+            if tinylfu is not None:
+                raise ValueError(
+                    "per-request TTLs and TinyLFU admission are mutually "
+                    "exclusive (the sketch has no expiry-aware semantics)")
+            if len(np.asarray(ttls)) != len(trace):
+                raise ValueError(
+                    f"ttls length {len(np.asarray(ttls))} != trace length "
+                    f"{len(trace)}")
+            tt = np.zeros(chunks.shape, np.int32)
+            tt.reshape(-1)[: len(trace)] = np.asarray(ttls, np.int32)
+            tt = jnp.asarray(tt)
+        else:
+            tt = None
 
         if hierarchy is not None and hierarchy.enabled and not resident:
             raise ValueError(
@@ -392,13 +434,15 @@ class ShardedCache:
                     "hierarchical replay does not support TinyLFU admission")
             return self._replay_resident(
                 chunks, en, capacity, tinylfu,
-                state if state is not None else self.init(),
-                hierarchy=hierarchy)
+                state if state is not None
+                else self.init(ttl=tt is not None),
+                hierarchy=hierarchy, ttls=tt)
 
-        fkey = ("replay", tinylfu, two_phase, capacity, batch)
+        fkey = ("replay", tinylfu, two_phase, capacity, batch,
+                tt is not None)
         if fkey not in self._fns:
-            def fn(chunks, en, state, sketch, _tl=tinylfu, _tp=two_phase,
-                   _cap=capacity):
+            def fn(chunks, en, tt, state, sketch, _tl=tinylfu,
+                   _tp=two_phase, _cap=capacity, _ttl=tt is not None):
                 _TRACE_COUNTS[("replay", self.cfg.backend,
                                self.cfg.num_shards, self.cfg.local.num_sets,
                                self.cfg.cache.ways, _cap, chunks.shape[1],
@@ -406,33 +450,53 @@ class ShardedCache:
 
                 def scan_step(carry, xs):
                     st, sk, hits, defers = carry
-                    keys, e = xs
+                    if _ttl:
+                        keys, e, t = xs
+                    else:
+                        keys, e = xs
                     plan = self._route(keys, e, _cap)
                     kb, vb, eb = self._bucketed(
                         plan, keys, keys.astype(jnp.int32), _cap)
+                    if _ttl:
+                        tb = router.bucket(plan, t, self.cfg.num_shards,
+                                           _cap, jnp.int32(0))
 
-                    def body(shard_idx, k, v, e2, sk1, st1):
-                        st2, sk2, hit, out, ek, ev = self._local_access(
-                            _tl, _tp, shard_idx, k, v, e2, sk1, st1)
-                        # hit counting happens pre-unscatter: summing the
-                        # bucketed lanes equals summing the request lanes.
-                        return st2, sk2, jnp.sum(hit & e2, dtype=jnp.int32)
+                        def body(shard_idx, k, v, e2, t2, sk1, st1):
+                            st2, sk2, hit, out, ek, ev = self._local_access(
+                                _tl, _tp, shard_idx, k, v, e2, sk1, st1,
+                                ttls=t2)
+                            return st2, sk2, jnp.sum(hit & e2,
+                                                     dtype=jnp.int32)
 
-                    st, sk, h = self._shard_call(body, (kb, vb, eb), st, sk)
+                        args = (kb, vb, eb, tb)
+                    else:
+                        def body(shard_idx, k, v, e2, sk1, st1):
+                            st2, sk2, hit, out, ek, ev = self._local_access(
+                                _tl, _tp, shard_idx, k, v, e2, sk1, st1)
+                            # hit counting happens pre-unscatter: summing
+                            # the bucketed lanes equals summing the request
+                            # lanes.
+                            return st2, sk2, jnp.sum(hit & e2,
+                                                     dtype=jnp.int32)
+
+                        args = (kb, vb, eb)
+
+                    st, sk, h = self._shard_call(body, args, st, sk)
                     return (st, sk, hits + jnp.sum(h),
                             defers + jnp.sum(plan.deferred,
                                              dtype=jnp.int32)), ()
 
                 zero = jnp.zeros((), jnp.int32)
+                xs = (chunks, en, tt) if _ttl else (chunks, en)
                 (st, sk, hits, defers), _ = jax.lax.scan(
-                    scan_step, (state, sketch, zero, zero), (chunks, en))
+                    scan_step, (state, sketch, zero, zero), xs)
                 return hits, defers, st, sk
-            self._fns[fkey] = jax.jit(fn, donate_argnums=(2, 3))
+            self._fns[fkey] = jax.jit(fn, donate_argnums=(3, 4))
         if state is None:
-            state = self.init()
+            state = self.init(ttl=tt is not None)
         sketch = (self.init_sketches(tinylfu) if tinylfu is not None
                   else jnp.zeros((self.cfg.num_shards,), jnp.int32))
-        hits, defers, st, _ = self._fns[fkey](chunks, en, state, sketch)
+        hits, defers, st, _ = self._fns[fkey](chunks, en, tt, state, sketch)
         return int(hits), int(defers), st
 
     # ----------------------------------------------- CacheBackend-ish ops
@@ -566,4 +630,6 @@ class ShardedCache:
             keys=merge(state.keys), fprint=merge(state.fprint),
             vals=merge(state.vals), meta_a=merge(state.meta_a),
             meta_b=merge(state.meta_b), clock=jnp.sum(state.clock),
+            expiry=(merge(state.expiry) if state.expiry is not None
+                    else None),
         )

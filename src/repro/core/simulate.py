@@ -147,9 +147,21 @@ def _replay_batched_scan(sim: SimConfig, chunks: jnp.ndarray,
     return hits, cache
 
 
+def _pad_ttl_chunks(ttls: np.ndarray, batch: int) -> np.ndarray:
+    """Chunk a per-request TTL array [n] -> int32 [steps, B] with the same
+    steps/batch geometry as ``router.pad_chunks`` (padding lanes carry
+    ttl 0 == never expires; they are disabled anyway)."""
+    ttls = np.asarray(ttls, np.int32)
+    n = ttls.shape[0]
+    steps = -(-n // batch)
+    padded = np.zeros((steps * batch,), np.int32)
+    padded[:n] = ttls
+    return padded.reshape(steps, batch)
+
+
 def replay_batched(
     sim: SimConfig, trace: np.ndarray, batch: int = 64, shards: int = 1,
-    resident: bool = False, hierarchy=None,
+    resident: bool = False, hierarchy=None, ttls=None,
 ) -> float:
     """Batched replay -> hit ratio over the WHOLE trace (the tail chunk is
     padded with disabled lanes on every path).
@@ -171,11 +183,32 @@ def replay_batched(
     hierarchical megakernel (VMEM L1, HBM L2), on the jnp backend the
     bit-exact chunked-scan twin.  ``l1_sets == 0`` is the flat path
     unchanged.  The hierarchy has sequential per-lane semantics and no
-    TinyLFU/two_phase composition yet."""
+    TinyLFU/two_phase composition yet.
+
+    ``ttls`` (int32 [n], optional, aligned with ``trace``) gives each
+    request a time-to-live on the logical replay clock (DESIGN.md §15):
+    a request that misses inserts with deadline ``clock + 2B + ttl``
+    (``ttl <= 0`` = never expires), and an entry whose deadline has passed
+    is never served as a hit on any path.  TTLs exclude ``two_phase`` and
+    TinyLFU (the unfused composition and the sketch have no expiry
+    semantics)."""
     trace = np.asarray(trace, np.uint32)
     n = trace.shape[0]
     if sim.tinylfu is not None and sim.backend == "ref":
         raise ValueError("TinyLFU replay is not wired for the ref backend")
+    if ttls is not None:
+        ttls = np.asarray(ttls, np.int32)
+        if ttls.shape[0] != n:
+            raise ValueError(
+                f"ttls length {ttls.shape[0]} != trace length {n}")
+        if sim.two_phase:
+            raise ValueError(
+                "per-request TTLs require the fused access path; "
+                "two_phase has no expiry semantics")
+        if sim.tinylfu is not None:
+            raise ValueError(
+                "per-request TTLs and TinyLFU admission are mutually "
+                "exclusive (the sketch has no expiry-aware semantics)")
     if hierarchy is not None and not hierarchy.enabled:
         hierarchy = None          # l1_sets == 0: the flat path, verbatim
     if hierarchy is not None:
@@ -210,39 +243,53 @@ def replay_batched(
             cache=sim.cache, num_shards=shards, backend=sim.backend))
         if hierarchy is not None:
             hits, _, _ = sc.replay(trace, batch, resident=True,
-                                   hierarchy=hierarchy)
+                                   hierarchy=hierarchy, ttls=ttls)
             return hits / n
         hits, _, _ = sc.replay(trace, batch, tinylfu=sim.tinylfu,
-                               two_phase=sim.two_phase, resident=resident)
+                               two_phase=sim.two_phase, resident=resident,
+                               ttls=ttls)
         return hits / n
+    tchunks = None if ttls is None else _pad_ttl_chunks(ttls, batch)
     if hierarchy is not None:
         # hierarchical mode always runs the routed-chunk replay: the kernel
         # on pallas (with its own budget/fallback ladder inside
         # PallasBackend.replay), the jitted jnp twin otherwise.
         be = _cached_backend(sim.backend, sim.cache)
         chunks, enabled = router.pad_chunks(trace, batch)
-        hits, _, _, _ = be.replay(be.init(), chunks, enabled,
-                                  hierarchy=hierarchy)
+        hits, _, _, _ = be.replay(be.init(ttl=tchunks is not None),
+                                  chunks, enabled,
+                                  hierarchy=hierarchy, ttls=tchunks)
         return float(jnp.sum(hits)) / n
     if resident:
         be = _cached_backend(sim.backend, sim.cache)
         chunks, enabled = router.pad_chunks(trace, batch)
-        hits, _, _, _ = be.replay(be.init(), chunks, enabled,
-                                  tinylfu=sim.tinylfu)
+        hits, _, _, _ = be.replay(be.init(ttl=tchunks is not None),
+                                  chunks, enabled,
+                                  tinylfu=sim.tinylfu, ttls=tchunks)
         return float(jnp.sum(hits)) / n
     if sim.backend == "ref":
         be = make_backend(sim.backend, sim.cache)
         access = _access_fn(sim, be)
-        cache = be.init()
+        cache = be.init(ttl=ttls is not None)
         chunks, enabled = router.pad_chunks(trace, batch)
         hits = 0
-        for chunk, en in zip(chunks, enabled):
+        for step, (chunk, en) in enumerate(zip(chunks, enabled)):
+            tt = None if tchunks is None else jnp.asarray(tchunks[step])
             cache, hit, _, _, _ = access(
                 cache, jnp.asarray(chunk), jnp.asarray(chunk, jnp.int32),
-                None, jnp.asarray(en))
+                None, jnp.asarray(en),
+                **({} if tt is None else {"ttls": tt}))
             hits += int(np.asarray(hit).sum())
         return hits / n
     chunks, enabled = router.pad_chunks(trace, batch)
+    if tchunks is not None:
+        # the TTL chunked scan lives behind CacheBackend.replay (it carries
+        # the expiry lane through the scan); _cached_backend keeps its jit
+        # cache warm across calls just like _replay_batched_scan's.
+        be = _cached_backend(sim.backend, sim.cache)
+        hits, _, _, _ = be.replay(be.init(ttl=True), chunks, enabled,
+                                  ttls=tchunks)
+        return float(jnp.sum(hits)) / n
     hits, _ = _replay_batched_scan(
         sim, jnp.asarray(chunks), jnp.asarray(enabled))
     return float(hits) / n

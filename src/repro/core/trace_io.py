@@ -14,8 +14,17 @@ golden-trace workflow unchanged:
   * ``"csv"``  — Twitter/Memcached-style CSV with op/key/size columns.
     A header row naming ``op``/``key`` (any column order, extra columns
     ignored) is auto-detected; headerless files are read positionally as
-    ``op,key[,size]``.  Keys are opaque strings and are **fingerprint-
-    hashed** into the uint32 key space (see ``fingerprint_keys``).
+    ``op,key[,size[,ttl]]``.  Keys are opaque strings and are
+    **fingerprint-hashed** into the uint32 key space (see
+    ``fingerprint_keys``).
+
+TTL columns (DESIGN.md §15): pass ``with_ttl=True`` (or
+``register_trace(..., ttl=True)``) to surface a per-request TTL stream
+alongside the keys.  In CSV the TTL is the header-named ``ttl`` column, or
+positional column 3 for headerless files; rows without the column (and the
+op-less ARC format entirely) default to TTL ``0`` — which the replay
+layers map to "never expires", so a TTL-oblivious file replayed through a
+TTL-aware path is bit-identical to the TTL-free replay.
 
 Key-space fingerprint contract: a string key maps to
 ``fmix32(FNV1a_32(utf8(key)))`` — deterministic across runs/platforms, full
@@ -143,19 +152,29 @@ def _header_columns(row) -> dict | None:
     return None
 
 
-def _iter_csv(path: str, chunk: int, ops):
+#: positional TTL column for headerless CSV rows (``op,key[,size[,ttl]]``)
+_TTL_POS = 3
+
+
+def _iter_csv(path: str, chunk: int, ops, with_ttl: bool = False):
     ops = None if ops is None else frozenset(o.lower() for o in ops)
     buf: list[str] = []
+    tbuf: list[int] = []
     n_seen = 0
 
     def flush():
         arr = fingerprint_keys(buf)
         buf.clear()
-        return arr
+        if not with_ttl:
+            return arr
+        tarr = np.asarray(tbuf, np.int32)
+        tbuf.clear()
+        return arr, tarr
 
     with open(path, newline="") as f:
         reader = _csv.reader(f)
         cols = {"op": 0, "key": 1}
+        ttl_col = _TTL_POS
         first = True
         for lineno, row in enumerate(reader, start=1):
             if not row or all(not c.strip() for c in row):
@@ -165,6 +184,10 @@ def _iter_csv(path: str, chunk: int, ops):
                 named = _header_columns(row)
                 if named is not None:
                     cols = named
+                    # header-named ttl column wins; a header without one
+                    # means the file has no TTLs (don't misread a stray
+                    # positional column as deadlines)
+                    ttl_col = named.get("ttl")
                     continue                 # header row consumed
             if len(row) <= max(cols["op"], cols["key"]):
                 raise ValueError(
@@ -181,6 +204,19 @@ def _iter_csv(path: str, chunk: int, ops):
             if ops is not None and op not in ops:
                 continue
             buf.append(key)
+            if with_ttl:
+                ttl = 0                      # absent column -> never expires
+                if ttl_col is not None and len(row) > ttl_col:
+                    field = row[ttl_col].strip()
+                    if field:
+                        try:
+                            ttl = int(field, 10)
+                        except ValueError:
+                            raise ValueError(
+                                f"{path}:{lineno}: malformed CSV trace row "
+                                f"{row!r} — ttl column must be a decimal "
+                                f"integer, got {field!r}") from None
+                tbuf.append(ttl)
             if len(buf) >= chunk:
                 yield flush()
     if buf:
@@ -190,31 +226,41 @@ def _iter_csv(path: str, chunk: int, ops):
 
 
 def iter_trace_chunks(path: str, fmt: str | None = None,
-                      chunk: int = 1 << 16, ops=None):
+                      chunk: int = 1 << 16, ops=None,
+                      with_ttl: bool = False):
     """Stream a trace file as uint32 key-array chunks (<= ``chunk`` keys).
 
     ``fmt``: "arc" | "csv" | None (sniff from the extension).  ``ops``
     filters CSV rows to the given operation names (e.g. ``READ_OPS``);
-    ignored for the op-less ARC format.
+    ignored for the op-less ARC format.  ``with_ttl`` yields
+    ``(keys, ttls)`` pairs instead (int32 TTLs; see the module docstring
+    for the column contract — ARC traces yield all-zero TTLs).
     """
     fmt = fmt or detect_format(path)
     if fmt == "arc":
-        return _iter_arc(path, chunk)
+        it = _iter_arc(path, chunk)
+        if not with_ttl:
+            return it
+        return ((arr, np.zeros(len(arr), np.int32)) for arr in it)
     if fmt == "csv":
-        return _iter_csv(path, chunk, ops)
+        return _iter_csv(path, chunk, ops, with_ttl=with_ttl)
     raise ValueError(f"unknown trace format {fmt!r}; expected 'arc' or 'csv'")
 
 
 def load_trace(path: str, fmt: str | None = None, limit: int | None = None,
-               ops=None) -> np.ndarray:
+               ops=None, with_ttl: bool = False):
     """Parse a whole trace file -> uint32 key array (see module docstring).
 
     ``limit`` stops the streaming read after that many requests — a cheap
-    way to sample the head of a multi-GB trace.
+    way to sample the head of a multi-GB trace.  ``with_ttl`` returns
+    ``(keys, ttls)`` (int32 TTLs, 0 = never expires) instead of bare keys.
     """
-    parts, total = [], 0
-    for arr in iter_trace_chunks(path, fmt=fmt, ops=ops):
+    parts, tparts, total = [], [], 0
+    for item in iter_trace_chunks(path, fmt=fmt, ops=ops, with_ttl=with_ttl):
+        arr, tarr = item if with_ttl else (item, None)
         parts.append(arr)
+        if with_ttl:
+            tparts.append(tarr)
         total += len(arr)
         if limit is not None and total >= limit:
             break
@@ -222,7 +268,11 @@ def load_trace(path: str, fmt: str | None = None, limit: int | None = None,
         raise ValueError(
             f"{path}: no requests survived the op filter {sorted(ops)!r}")
     out = parts[0] if len(parts) == 1 else np.concatenate(parts)
-    return out[:limit] if limit is not None else out
+    out = out[:limit] if limit is not None else out
+    if not with_ttl:
+        return out
+    tout = tparts[0] if len(tparts) == 1 else np.concatenate(tparts)
+    return out, tout[:len(out)]
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +280,8 @@ def load_trace(path: str, fmt: str | None = None, limit: int | None = None,
 # ---------------------------------------------------------------------------
 
 def register_trace(name: str, path: str, fmt: str | None = None,
-                   ops=None, limit: int | None = None) -> str:
+                   ops=None, limit: int | None = None,
+                   ttl: bool = False) -> str:
     """Register a trace file as a ``traces.generate()`` family.
 
     The file is parsed lazily on first use and memoized.  The family
@@ -239,21 +290,45 @@ def register_trace(name: str, path: str, fmt: str | None = None,
     requests, tiling the file when ``n`` exceeds its length, so ingested
     traces satisfy the same ``generate(family, n)`` contract as every
     synthetic family.  Returns ``name``.
+
+    ``ttl=True`` additionally parses the file's TTL column (module
+    docstring) and registers the trace in ``traces.TTL_FAMILIES``:
+    ``traces.generate_ttl(name, n)`` then serves the ``(keys, ttls)``
+    pair, tiled in lockstep, so a TTL-bearing fixture replays through
+    ``simulate.replay_batched(..., ttls=...)`` unchanged.
     """
     cache: dict = {}
 
-    def ingested(rng, n):
+    def _load():
         if "keys" not in cache:
-            cache["keys"] = load_trace(path, fmt=fmt, limit=limit, ops=ops)
-        keys = cache["keys"]
-        if n <= len(keys):
-            return keys[:n].copy()
-        reps = -(-n // len(keys))
-        return np.tile(keys, reps)[:n]
+            if ttl:
+                cache["keys"], cache["ttls"] = load_trace(
+                    path, fmt=fmt, limit=limit, ops=ops, with_ttl=True)
+            else:
+                cache["keys"] = load_trace(path, fmt=fmt, limit=limit,
+                                           ops=ops)
+
+    def _tile(arr, n):
+        if n <= len(arr):
+            return arr[:n].copy()
+        reps = -(-n // len(arr))
+        return np.tile(arr, reps)[:n]
+
+    def ingested(rng, n):
+        _load()
+        return _tile(cache["keys"], n)
 
     ingested.__name__ = f"ingested_{name}"
     ingested.path = path
     traces.register_family(name, ingested)
+    if ttl:
+        def ingested_ttl(rng, n):
+            _load()
+            return _tile(cache["keys"], n), _tile(cache["ttls"], n)
+
+        ingested_ttl.__name__ = f"ingested_{name}_ttl"
+        ingested_ttl.path = path
+        traces.TTL_FAMILIES[name] = ingested_ttl
     return name
 
 
@@ -262,12 +337,18 @@ def unregister_trace(name: str) -> None:
     traces.unregister_family(name)
 
 
-#: committed fixture traces (tests/fixtures/*.trace) registered by
+#: committed fixture traces (tests/fixtures/*) registered by
 #: ``register_fixture_traces`` — name -> filename.  ``lirs_two_pools`` is
 #: the deterministic LIRS-style loop workload the hierarchy and showdown
 #: sweeps use as their "real trace" family (see
-#: tests/fixtures/make_lirs_two_pools.py for provenance).
-FIXTURE_TRACES = {"lirs_two_pools": "lirs_two_pools.trace"}
+#: tests/fixtures/make_lirs_two_pools.py for provenance);
+#: ``sample_twitter_ttl`` is the pinned TTL-column CSV exercising the
+#: DESIGN.md §15 ingestion path (registered with ``ttl=True``).
+FIXTURE_TRACES = {"lirs_two_pools": "lirs_two_pools.trace",
+                  "sample_twitter_ttl": "sample_twitter_ttl.csv"}
+
+#: fixtures whose files carry a TTL column (registered with ``ttl=True``)
+_TTL_FIXTURES = frozenset({"sample_twitter_ttl"})
 
 
 def fixture_dir() -> str:
@@ -290,5 +371,6 @@ def register_fixture_traces() -> list[str]:
     for name, fname in FIXTURE_TRACES.items():
         path = os.path.join(root, fname)
         if os.path.exists(path):
-            names.append(register_trace(name, path, fmt="arc"))
+            names.append(register_trace(name, path,
+                                        ttl=name in _TTL_FIXTURES))
     return names

@@ -12,6 +12,10 @@ parameterized to match a *class* of those workloads (DESIGN.md §6):
                     filesystem traces)
   oltp_mix        — skewed working set + uniform background writes (OLTP,
                     F1/F2 financial)
+  ttl_churn       — TTL-bearing memcached-style mix (DESIGN.md §15): a
+                    Zipf-popular core with long TTLs over a churning
+                    uniform minority with short TTLs.  ``generate`` serves
+                    the keys; ``generate_ttl`` returns ``(keys, ttls)``.
 
 Generators are seeded numpy (host side — traces are inputs, not model state).
 
@@ -27,7 +31,8 @@ import inspect
 
 import numpy as np
 
-__all__ = ["generate", "FAMILIES", "register_family", "unregister_family"]
+__all__ = ["generate", "generate_ttl", "FAMILIES", "TTL_FAMILIES",
+           "register_family", "unregister_family"]
 
 
 def _zipf_catalog(rng: np.random.Generator, n: int, catalog: int, alpha: float):
@@ -93,12 +98,42 @@ def oltp_mix(rng, n, catalog=1 << 17, alpha=1.1, hot_frac=0.7):
     return np.where(take_hot, hot, cold + np.uint32(1 << 24)).astype(np.uint32)
 
 
+def ttl_churn(rng, n, catalog=1 << 12, alpha=0.9, hot_ttl=4096,
+              churn_ttl=48, churn_frac=0.3):
+    """Memcached-style TTL workload (DESIGN.md §15): a Zipf-popular core
+    whose entries live long (``hot_ttl`` clock ticks) interleaved with a
+    churning uniform minority (fraction ``churn_frac``, disjoint key range)
+    whose entries expire almost immediately (``churn_ttl``).  A cache that
+    never reclaims expired lanes drowns in dead churn entries; one that
+    prefers expired victims keeps the hot core resident.
+
+    Returns ``(keys, ttls)`` — uint32 keys and int32 per-request TTLs.
+    Callable through ``generate`` (keys only) or ``generate_ttl`` (both).
+    """
+    hot = _zipf_catalog(rng, n, catalog, alpha)
+    cold = rng.integers(0, catalog, size=n, dtype=np.uint32)
+    churn = rng.random(n) < churn_frac
+    keys = np.where(churn, cold + np.uint32(catalog), hot).astype(np.uint32)
+    ttls = np.where(churn, churn_ttl, hot_ttl).astype(np.int32)
+    return keys, ttls
+
+
 FAMILIES = {
     "zipf": zipf,
     "zipf_shift": zipf_shift,
     "scan_loop": scan_loop,
     "recency": recency,
     "oltp_mix": oltp_mix,
+    "ttl_churn": lambda rng, n, **kw: ttl_churn(rng, n, **kw)[0],
+}
+
+#: TTL-bearing families: ``fn(rng, n, **kw) -> (keys uint32, ttls int32)``.
+#: ``generate()`` serves the key stream of such a family (the keys-only
+#: wrapper above); ``generate_ttl()`` returns both streams from ONE rng
+#: draw, so ``generate_ttl(f, n, seed)[0] == generate(f, n, seed)``.
+#: ``core/trace_io.py`` registers ingested TTL-column traces here too.
+TTL_FAMILIES = {
+    "ttl_churn": ttl_churn,
 }
 
 #: the synthetic families above are permanent; runtime registrations
@@ -121,10 +156,12 @@ def register_family(name: str, fn) -> None:
 
 
 def unregister_family(name: str) -> None:
-    """Remove a runtime-registered family (built-ins cannot be removed)."""
+    """Remove a runtime-registered family (built-ins cannot be removed).
+    Drops a matching runtime ``TTL_FAMILIES`` entry alongside."""
     if name in _BUILTINS:
         raise ValueError(f"cannot unregister built-in family {name!r}")
     FAMILIES.pop(name, None)
+    TTL_FAMILIES.pop(name, None)
 
 
 def generate(family: str, n: int, seed: int = 0, **kw) -> np.ndarray:
@@ -144,3 +181,20 @@ def generate(family: str, n: int, seed: int = 0, **kw) -> np.ndarray:
                 f"accepted: {accepted}")
     rng = np.random.default_rng(seed)
     return fn(rng, n, **kw).astype(np.uint32)
+
+
+def generate_ttl(family: str, n: int, seed: int = 0, **kw):
+    """``(keys, ttls)`` for a TTL-bearing family (``TTL_FAMILIES``).
+
+    The family draws both streams from one seeded rng, so the key stream
+    is bit-identical to ``generate(family, n, seed, **kw)`` — a TTL-aware
+    replay and a TTL-blind replay of the same family see the same keys.
+    """
+    fn = TTL_FAMILIES.get(family)
+    if fn is None:
+        raise ValueError(
+            f"unknown TTL trace family {family!r}; known TTL families: "
+            f"{', '.join(sorted(TTL_FAMILIES))}")
+    rng = np.random.default_rng(seed)
+    keys, ttls = fn(rng, n, **kw)
+    return keys.astype(np.uint32), np.asarray(ttls, np.int32)

@@ -793,11 +793,11 @@ def serving_engine(quick: bool = False, progress=None, slots=None,
     return spec, records, []
 
 
-def robustness(quick: bool = False, progress=None):
+def robustness(quick: bool = False, progress=None, ttl: bool = False):
     """DESIGN.md §13: validator coverage, recovery cost, ladder
     observability, and validator overhead.
 
-    Four record groups:
+    Four record groups (``ttl=True`` adds a fifth, DESIGN.md §15):
 
       * ``robust-clean/{policy}/{backend}/violations`` — the invariant
         validator over the final state of the golden 512-request zipf
@@ -816,6 +816,13 @@ def robustness(quick: bool = False, progress=None):
         fusing the validator into the replay scan at the quick cadence,
         vs the plain scan (``comparable: false``; the CLI gates the
         absolute <5% target).
+      * ``robust-ttl/...`` (``ttl=True``) — the expiry lane: TTL replay
+        of the golden trace with seeded per-request TTLs pinned clean
+        under the STRICT expiry mode on jnp and pallas, backend hit
+        parity pinned at zero diff, and the expiry-scrub chaos loop
+        (``clock_skew``/``stale_entry`` injection -> strict scrub ->
+        replay on) with its recovered hit ratio and forced-eviction
+        tallies as the deterministic cost band.
     """
     from repro.core import backend as backend_mod
     from repro.core import trace_io, traces
@@ -920,6 +927,61 @@ def robustness(quick: bool = False, progress=None):
         "id": "robust-ladder/vmem-breach/events", "metric": "event_count",
         "value": float(n_events), "comparable": False})
 
+    # ---- expiry lane: TTL parity + expiry-scrub cost band (§15) --------
+    if ttl:
+        from repro.core.simulate import _pad_ttl_chunks
+
+        ttl_rng = np.random.default_rng(seed + 1)
+        tt = _pad_ttl_chunks(ttl_rng.integers(0, 200, n).astype(np.int32),
+                             batch)
+        ttl_hits = {}
+        for backend in ("jnp", "pallas"):
+            if progress:
+                progress(f"ttl clean {backend}")
+            be_t = backend_mod.make_backend(backend, cfg)
+            h, _, st, _ = be_t.replay(be_t.init(ttl=True), chunks, enabled,
+                                      ttls=tt)
+            ttl_hits[backend] = float(np.asarray(h).sum())
+            bad = int((np.asarray(check_cache(cfg, st, vals_mode="key")
+                                  .lane_bits) != 0).sum())
+            records.append({
+                "id": f"robust-ttl/clean/{backend}/violations",
+                "backend": backend, "n": n, "metric": "violating_lanes",
+                "value": float(bad), "comparable": True, "tol": 0.0})
+        hr_ttl = ttl_hits["jnp"] / n
+        records.append({
+            "id": "robust-ttl/parity/hit_ratio", "n": n,
+            "metric": "hit_ratio", "value": round(hr_ttl, 6),
+            "comparable": True, "tol": 1e-6})
+        records.append({
+            "id": "robust-ttl/parity/backend_max_diff", "n": n,
+            "metric": "hit_diff",
+            "value": abs(ttl_hits["jnp"] - ttl_hits["pallas"]),
+            "comparable": True, "tol": 0.0})
+        for site_name, inject in (("clock_skew", faults.clock_skew),
+                                  ("stale_entry", faults.stale_entry)):
+            if progress:
+                progress(f"ttl scrub {site_name}")
+            h1, _, st, _ = be.replay(be.init(ttl=True), chunks[:half],
+                                     enabled[:half], ttls=tt[:half])
+            st, _ = inject(st, seed=seed, step=half)
+            st, forced, _ = scrub(cfg, st, vals_mode="key")
+            h2, _, st, _ = be.replay(st, chunks[half:], enabled[half:],
+                                     ttls=tt[half:])
+            hr = (float(np.asarray(h1).sum())
+                  + float(np.asarray(h2).sum())) / n
+            records.append({
+                "id": f"robust-ttl/scrub/{site_name}/hit_ratio",
+                "site": site_name, "n": n, "seed": seed, "step": half,
+                "metric": "hit_ratio", "value": round(hr, 6),
+                "clean_value": round(hr_ttl, 6),
+                "comparable": True, "tol": 1e-6})
+            records.append({
+                "id": f"robust-ttl/scrub/{site_name}/forced_evictions",
+                "site": site_name, "seed": seed, "step": half,
+                "metric": "forced_evictions", "value": float(int(forced)),
+                "comparable": True, "tol": 0.0})
+
     # ---- validator overhead on the quick replay ------------------------
     interval = 1
     ov_sets, ov_ways, ov_batch = 512, 8, 256
@@ -954,7 +1016,7 @@ def robustness(quick: bool = False, progress=None):
         "validated_p50_s": round(t_val["p50"], 6),
         "comparable": False})
 
-    spec = {"quick": quick, "num_sets": num_sets, "ways": ways,
+    spec = {"quick": quick, "ttl": ttl, "num_sets": num_sets, "ways": ways,
             "batch": batch, "n": n, "seed": seed,
             "trace_fingerprint": trace_io.trace_fingerprint(tr),
             "scrub_sites": ["keys", "fprint", "meta_a"],

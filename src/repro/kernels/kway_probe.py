@@ -23,6 +23,12 @@ clean read-kernel / write-scatter split that keeps the kernel free of
 scatter hazards (the paper's CAS loop lives in the caller's deterministic
 conflict resolution, see core/kway.py).
 
+Expiry (DESIGN.md §15) never reaches this kernel: TTL-aware replay scrubs
+expired lanes to EMPTY_KEY *before* probing (``kway.scrub_expired``), so by
+the time the probe runs an expired entry is an ordinary empty lane — it can
+neither hit nor outrank an empty-way victim.  The probe therefore needs no
+expiry lane and no functional change for TTLs.
+
 Validated in ``interpret=True`` mode against ``ref.py`` (pure jnp oracle)
 over shape/dtype/policy sweeps in tests/test_kway_kernel.py.
 """

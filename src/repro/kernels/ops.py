@@ -194,7 +194,7 @@ def probe_orders(
 
 
 def replay_resident(cfg: KWayConfig, state: KWayState, chunks, enabled,
-                    tinylfu=None, sketch=None):
+                    tinylfu=None, sketch=None, ttls=None):
     """Whole-trace replay in ONE pallas launch (kernels/replay.py).
 
     ``chunks`` uint32 [steps, B] / ``enabled`` bool [steps, B] — the
@@ -202,6 +202,8 @@ def replay_resident(cfg: KWayConfig, state: KWayState, chunks, enabled,
     for the entire trace; the per-chunk transitions are bit-identical to
     scanning the chunks through the fused ``access`` (with the TinyLFU
     record → peek → admit phases of the batched replay when ``tinylfu``).
+    ``ttls`` (int32 [steps, B], optional) turns on the expiry lane
+    (DESIGN.md §15); requires ``state.expiry`` and excludes TinyLFU.
 
     Returns (hits int32 [steps], evs int32 [steps], state', sketch'|None).
     """
@@ -213,15 +215,18 @@ def replay_resident(cfg: KWayConfig, state: KWayState, chunks, enabled,
         jnp.asarray(chunks, jnp.uint32), jnp.asarray(enabled, jnp.bool_),
         policy=int(cfg.policy), ways=cfg.ways, num_sets=cfg.num_sets,
         seed=cfg.seed, tinylfu=tinylfu, sketch=sketch,
+        expiry=state.expiry, ttls=ttls,
         interpret=not _on_tpu(),
     )
-    keys, fpr, vals, ma, mb, clock = lanes
+    keys, fpr, vals, ma, mb, clock = lanes[:6]
     state_out = KWayState(keys=keys, fprint=fpr, vals=vals, meta_a=ma,
-                          meta_b=mb, clock=clock)
+                          meta_b=mb, clock=clock,
+                          expiry=lanes[6] if len(lanes) > 6 else None)
     return hits, evs, state_out, sketch_out
 
 
-def replay_hierarchical(cfg: KWayConfig, hier, state, chunks, enabled):
+def replay_hierarchical(cfg: KWayConfig, hier, state, chunks, enabled,
+                        ttls=None):
     """Whole-trace replay through the L1-over-L2 hierarchy in ONE pallas
     launch (kernels/replay.py, hierarchical megakernel).
 
@@ -229,6 +234,10 @@ def replay_hierarchical(cfg: KWayConfig, hier, state, chunks, enabled):
     ``enabled`` the ``router.pad_chunks`` layout.  Bit-identical to the
     jnp twin ``core/hierarchy.replay_l1_over_l2`` (the differential
     oracle) — same per-chunk hit/eviction counts and final tier states.
+    ``ttls`` (int32 [steps, B], optional) turns on the per-lane expiry
+    path (DESIGN.md §15): rows are lazily scrubbed at the batch-exit
+    horizon before probing, so an expired key is never a hit on either
+    tier; requires tier states built with expiry lanes.
 
     Returns (hits int32 [steps], evs int32 [steps], HierState', None).
     """
@@ -245,13 +254,15 @@ def replay_hierarchical(cfg: KWayConfig, hier, state, chunks, enabled):
         policy=int(cfg.policy), l1_ways=hier.l1_ways, l2_ways=cfg.ways,
         l1_sets=hier.l1_sets, l2_sets=cfg.num_sets, seed=cfg.seed,
         promote=hier.promote, demote=hier.demote,
+        l1_exp=l1.expiry, l2_exp=l2.expiry, ttls=ttls,
         interpret=not _on_tpu(),
     )
 
     def unpack(lanes):
-        k, f, v, a, b = lanes
+        k, f, v, a, b = lanes[:5]
         return _KWS(keys=k.astype(jnp.uint32), fprint=f.astype(jnp.uint32),
-                    vals=v, meta_a=a, meta_b=b, clock=clock_f)
+                    vals=v, meta_a=a, meta_b=b, clock=clock_f,
+                    expiry=lanes[5] if len(lanes) > 5 else None)
 
     return hits, evs, HierState(l1=unpack(l1_f), l2=unpack(l2_f)), None
 

@@ -3,6 +3,11 @@
 Each oracle computes exactly what the kernel computes, with plain XLA ops and
 no tiling — the correctness reference for the interpret-mode sweeps in
 tests/.
+
+Expiry (DESIGN.md §15) is invisible here by design: TTL-aware replay scrubs
+expired lanes to EMPTY_KEY before every probe, so the probe oracles (like
+the probe kernels) see only live or empty lanes and need no expiry
+semantics.
 """
 from __future__ import annotations
 

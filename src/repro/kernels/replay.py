@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.kway import NO_EXPIRY
 from repro.core.policies import Policy
 from repro.kernels.kway_probe import (LANES, NEG_INF, POS_INF,
                                       _fingerprint_i32, _hash_u32,
@@ -96,22 +97,34 @@ def _replay_kernel(
     ways: int,
     batch: int,
     tl: tuple | None,    # (width, door_bits, sample) or None
+    ttl: bool,           # expiry lane + per-request TTL stream present
     empty_key: int,
 ):
-    # remaining refs: [pk0, dr0] + outputs + scratch — unpack by shape of the
-    # static configuration.
+    # remaining refs: [tt, exp0] + [pk0, dr0] + outputs + scratch — unpack
+    # by shape of the static configuration.  With ``ttl`` False nothing
+    # TTL-related is in the argument list, so the compiled graph is the
+    # pre-expiry kernel verbatim.
     k = 0
+    if ttl:
+        tt_ref, exp0_ref = rest[k], rest[k + 1]
+        k += 2
     if tl is not None:
         pk0_ref, dr0_ref = rest[k], rest[k + 1]
         k += 2
     hits_ref, evs_ref = rest[k], rest[k + 1]
     keys_ref, fpr_ref, vals_ref, ma_ref, mb_ref = rest[k + 2:k + 7]
     k += 7
+    if ttl:
+        exp_ref = rest[k]
+        k += 1
     if tl is not None:
         pk_ref, dr_ref, adds_ref = rest[k], rest[k + 1], rest[k + 2]
         k += 3
     ins_s, ins_w, ins_k, ins_t = rest[k:k + 4]
     k += 4
+    if ttl:
+        ins_e = rest[k]
+        k += 1
     if tl is not None:
         adm_row, pk_new, dr_delta = rest[k], rest[k + 1], rest[k + 2]
 
@@ -130,10 +143,27 @@ def _replay_kernel(
         vals_ref[...] = vals0_ref[...]
         ma_ref[...] = ma0_ref[...]
         mb_ref[...] = mb0_ref[...]
+        if ttl:
+            exp_ref[...] = exp0_ref[...]
         if tl is not None:
             pk_ref[...] = pk0_ref[...]
             dr_ref[...] = dr0_ref[...]
             adds_ref[0] = scal_ref[1]
+
+    # ---- chunk-entry expiry scrub (kway.scrub_expired semantics): reclaim
+    # every lane whose deadline falls at or before the chunk-exit clock
+    # BEFORE any probe, so an expired key is never a hit and its lane
+    # scores as empty — the preferred victim.  Reclaim is not an eviction.
+    if ttl:
+        horizon = base + jnp.int32(2 * batch)
+        occ_all = (keys_ref[...] != empty_key) & valid_way
+        dead = occ_all & (exp_ref[...] <= horizon)
+        keys_ref[...] = jnp.where(dead, empty_key, keys_ref[...])
+        fpr_ref[...] = jnp.where(dead, 0, fpr_ref[...])
+        vals_ref[...] = jnp.where(dead, 0, vals_ref[...])
+        ma_ref[...] = jnp.where(dead, 0, ma_ref[...])
+        mb_ref[...] = jnp.where(dead, 0, mb_ref[...])
+        exp_ref[...] = jnp.where(dead, NO_EXPIRY, exp_ref[...])
 
     def probe(s, qk):
         """Probe one set row: fingerprint pre-filter, full-key confirm.
@@ -338,6 +368,12 @@ def _replay_kernel(
         ins_w[...] = jnp.where(sel, vway, ins_w[...])
         ins_k[...] = jnp.where(sel, qk, ins_k[...])
         ins_t[...] = jnp.where(sel, t_put, ins_t[...])
+        if ttl:
+            # insert deadline = chunk base + 2B + ttl (kway.insert_deadlines)
+            tt_i = _lane_read(tt_ref, blane, i)
+            dl = jnp.where(tt_i > 0, base + jnp.int32(2 * batch) + tt_i,
+                           jnp.int32(NO_EXPIRY))
+            ins_e[...] = jnp.where(sel, dl, ins_e[...])
         return n + do.astype(jnp.int32), evs + ev.astype(jnp.int32)
 
     n_ins, evs = jax.lax.fori_loop(0, batch, ins_body,
@@ -363,8 +399,11 @@ def _replay_kernel(
             ia, ib = jnp.int32(0), jnp.int32(0)
         else:                                   # HYPERBOLIC: (n=1, t0=now)
             ia, ib = jnp.int32(1), t_put
-        for ref, val in ((keys_ref, key), (fpr_ref, fp), (vals_ref, key),
-                         (ma_ref, ia), (mb_ref, ib)):
+        writes = [(keys_ref, key), (fpr_ref, fp), (vals_ref, key),
+                  (ma_ref, ia), (mb_ref, ib)]
+        if ttl:
+            writes.append((exp_ref, _lane_read(ins_e, blane, j)))
+        for ref, val in writes:
             row = ref[pl.ds(s, 1), :]
             ref[pl.ds(s, 1), :] = jnp.where(upd, val, row)
         return 0
@@ -377,17 +416,20 @@ def _replay_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "ways", "num_sets", "seed", "tl", "interpret"))
+    static_argnames=("policy", "ways", "num_sets", "seed", "tl", "ttl",
+                     "interpret"))
 def _replay_resident_jit(
     keys, fpr, vals, ma, mb, clock,      # state (unpadded [S, ways] lanes)
     chunks, enabled,                     # uint32 [T, B], bool [T, B]
     pk, dr, adds,                        # sketch arrays (dummies when tl None)
+    exp, tt,                             # expiry lane + ttl stream (ttl only)
     *,
     policy: int,
     ways: int,
     num_sets: int,
     seed: int,
     tl: tuple | None,                    # (width, door_bits, sample) | None
+    ttl: bool,
     interpret: bool,
 ):
     steps, batch = chunks.shape
@@ -427,7 +469,7 @@ def _replay_resident_jit(
 
     kernel = functools.partial(
         _replay_kernel, policy=int(policy), ways=ways, batch=batch,
-        tl=tl, empty_key=-1)
+        tl=tl, ttl=ttl, empty_key=-1)
 
     chunk_row = lambda: pl.BlockSpec((1, bp), lambda t, *_: (t, 0))  # noqa: E731
     full = lambda a: pl.BlockSpec(a.shape, lambda t, *_: (0,) * a.ndim)  # noqa: E731
@@ -442,6 +484,20 @@ def _replay_resident_jit(
         jax.ShapeDtypeStruct((s, LANES), jnp.int32) for _ in range(5)]
     out_specs = [cnt(), cnt()] + [full(keys_i) for _ in range(5)]
     scratch = [pltpu.VMEM((1, bp), jnp.int32) for _ in range(4)]
+
+    if ttl:
+        # ttl stream padded like the other chunk rows; expiry lane padded
+        # to the register width with NO_EXPIRY (padding ways never expire)
+        tt_i = tt.astype(jnp.int32)
+        if bp != batch:
+            tt_i = jnp.concatenate(
+                [tt_i, jnp.zeros((steps, bp - batch), jnp.int32)], axis=1)
+        exp_i = pad_ways(exp, NO_EXPIRY)
+        in_arrays += [tt_i, exp_i]
+        in_specs += [chunk_row(), full(exp_i)]
+        out_shape += [jax.ShapeDtypeStruct((s, LANES), jnp.int32)]
+        out_specs += [full(exp_i)]
+        scratch += [pltpu.VMEM((1, bp), jnp.int32)]       # ins_e
 
     if tl is not None:
         pk_i = pk.astype(jnp.int32)
@@ -477,9 +533,14 @@ def _replay_resident_jit(
                  unpad(fpr_f).astype(jnp.uint32),
                  unpad(vals_f), unpad(ma_f), unpad(mb_f),
                  clock + jnp.int32(2 * batch * steps))
+    idx = 7
+    if ttl:
+        state_out = state_out + (unpad(outs[idx]),)
+        idx += 1
     if tl is not None:
-        sketch_out = (outs[7].astype(jnp.uint32), outs[8].astype(jnp.uint32),
-                      outs[9][0])
+        sketch_out = (outs[idx].astype(jnp.uint32),
+                      outs[idx + 1].astype(jnp.uint32),
+                      outs[idx + 2][0])
     else:
         sketch_out = None
     return hits, evs, state_out, sketch_out
@@ -495,17 +556,31 @@ def replay_resident(
     seed: int,
     tinylfu=None,                 # TinyLFUConfig | None
     sketch=None,                  # TinyLFUState | None (fresh when None)
+    expiry=None,                  # int32 [S, ways] | None
+    ttls=None,                    # int32 [T, B] | None
     interpret: bool = True,
 ):
     """Run the replay megakernel: ONE launch for the whole chunked trace.
 
-    Returns (hits int32 [steps], evs int32 [steps],
-    (keys, fprint, vals, meta_a, meta_b, clock) final state lanes,
-    TinyLFUState' | None).
+    ``ttls`` (with the state's ``expiry`` lane) turns on the expiry path
+    (DESIGN.md §15): chunk-entry scrub + deadline-stamped inserts, kept in
+    a VMEM-resident sixth lane; excludes TinyLFU.  Returns (hits int32
+    [steps], evs int32 [steps], (keys, fprint, vals, meta_a, meta_b,
+    clock[, expiry]) final state lanes, TinyLFUState' | None).
     """
     from repro.core import admission
 
     steps, batch = chunks.shape
+    ttl = ttls is not None
+    if ttl:
+        if tinylfu is not None:
+            raise ValueError(
+                "per-request TTLs and TinyLFU admission are mutually "
+                "exclusive (the sketch has no expiry-aware semantics)")
+        if expiry is None:
+            raise ValueError(
+                "replay_resident: ttls given but no expiry lane — build "
+                "the state with make_cache(cfg, ttl=True)")
     if tinylfu is not None:
         if sketch is None:
             sketch = admission.make_sketch(tinylfu)
@@ -532,10 +607,17 @@ def replay_resident(
 
     _TRACE_COUNTS[("launch", int(policy), num_sets, ways, steps, batch,
                    tinylfu is not None)] += 1
+    if ttl:
+        exp_in = jnp.asarray(expiry, jnp.int32)
+        tt_in = jnp.asarray(ttls, jnp.int32)
+    else:
+        exp_in = jnp.zeros((), jnp.int32)     # unused dummies (DCE'd)
+        tt_in = jnp.zeros((), jnp.int32)
     hits, evs, state_out, sketch_out = _replay_resident_jit(
         keys, fpr, vals, ma, mb, clock, chunks, enabled, pk, dr, adds,
+        exp_in, tt_in,
         policy=int(policy), ways=ways, num_sets=num_sets, seed=seed,
-        tl=tl, interpret=interpret)
+        tl=tl, ttl=ttl, interpret=interpret)
 
     if tinylfu is not None:
         pk_f, dr_f, adds_f = sketch_out
@@ -575,6 +657,7 @@ def _hier_replay_kernel(
     s1_ref,              # int32 [1, Bp]  L1 set index per query
     s2_ref,              # int32 [1, Bp]  L2 set index per query
     en_ref,              # int32 [1, Bp]  1 = live lane
+    tt_ref,              # int32 [1, Bp]  per-request TTL (zeros w/o ttl)
     l1in_ref,            # int32 [S1, ROW_W]  packed L1 rows (initial)
     l2in_ref,            # ANY   [S2, ROW_W]  packed L2 rows (initial)
     # outputs
@@ -594,18 +677,22 @@ def _hier_replay_kernel(
     batch: int,
     promote: bool,
     demote: bool,
+    ttl: bool,
     interpret: bool,
 ):
-    from repro.core.hierarchy import (SC_DA, SC_DB, SC_DF, SC_DK, SC_DV,
-                                      SC_DVALID, SC_EV, SC_HIT1, SC_L2HIT,
-                                      SC_PA, SC_PB, SC_PVAL, _l1_fill_row,
-                                      _l1_hit_row, _l2_demote_row,
-                                      _l2_hit_row, _sc_get, _set_index_i32)
+    from repro.core.hierarchy import (SC_DA, SC_DB, SC_DE, SC_DF, SC_DK,
+                                      SC_DV, SC_DVALID, SC_EV, SC_HIT1,
+                                      SC_L2HIT, SC_PA, SC_PB, SC_PEXP,
+                                      SC_PVAL, _l1_fill_row, _l1_hit_row,
+                                      _l2_demote_row, _l2_hit_row, _sc_get,
+                                      _set_index_i32)
 
     t = pl.program_id(0)
     base = scal_ref[0] + jnp.int32(2 * batch) * t
     bp = qk_ref.shape[1]
     blane = jax.lax.broadcasted_iota(jnp.int32, (1, bp), 1)
+    # chunk-exit clock: the lazy-scrub horizon and deadline base (§15)
+    hz = base + jnp.int32(2 * batch) if ttl else None
 
     # ---- first grid step: L1 into VMEM, L2 packed rows into the resident
     # slow-memory buffer (one whole-array DMA)
@@ -653,7 +740,7 @@ def _hier_replay_kernel(
     # re-introduce the defensive full-array copy) and cross-phase scalars
     # ride the loop carry / the stored row's mailbox.
     def body(step, carry):
-        hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c = carry
+        hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c, pexp_c = carry
         i = step >> 1
         is_even = (step & jnp.int32(1)) == 0
         qk = _lane_read(qk_ref, blane, i)
@@ -663,13 +750,20 @@ def _hier_replay_kernel(
         fp = _fingerprint_i32(qk.astype(jnp.uint32))
         t_get = base + i
         t_put = base + jnp.int32(batch) + i
+        if ttl:
+            tt_i = _lane_read(tt_ref, blane, i)
+            dl_i = jnp.where(tt_i > 0, hz + tt_i, jnp.int32(NO_EXPIRY))
+        else:
+            dl_i = None
 
         # L1 round-trip: phase A (even) / phase C (odd), both on s1
         r1 = l1_ref[pl.ds(s1, 1), :]
-        row_a = _l1_hit_row(policy, r1, qk, fp, t_get, en, l1_ways)
+        row_a = _l1_hit_row(policy, r1, qk, fp, t_get, en, l1_ways,
+                            ttl=ttl, horizon=hz)
         row_c = _l1_fill_row(policy, promote, r1, qk, fp, hit1_c != 0,
                              l2_c != 0, pval_c, pa_c, pb_c, t_put, en,
-                             l1_ways)
+                             l1_ways, ttl=ttl, horizon=hz, pexp=pexp_c,
+                             dl=dl_i)
         l1_ref[pl.ds(s1, 1), :] = jnp.where(is_even, row_a, row_c)
         r1p = l1_ref[pl.ds(s1, 1), :]
         hit1 = _sc_get(r1p, SC_HIT1) != 0       # even-step mailbox
@@ -686,14 +780,16 @@ def _hier_replay_kernel(
             sl2 = s2
         r2 = fetch_l2(sl2, rowA)
         row_b = _l2_hit_row(policy, promote, r2, qk, fp, hit1, t_get, en,
-                            l2_ways)
+                            l2_ways, ttl=ttl, horizon=hz)
         if demote:
             df = _sc_get(r1p, SC_DF)
             dv = _sc_get(r1p, SC_DV)
             da = _sc_get(r1p, SC_DA)
             db = _sc_get(r1p, SC_DB)
+            de = _sc_get(r1p, SC_DE)
             row_d = _l2_demote_row(policy, r2, dk, df, dv, da, db,
-                                   dvalid, t_put, l2_ways)
+                                   dvalid, t_put, l2_ways,
+                                   ttl=ttl, horizon=hz, de=de)
         else:
             row_d = r2                          # odd step: no-op store
         r2p = store_l2(sl2, rowA, jnp.where(is_even, row_b, row_d))
@@ -701,6 +797,7 @@ def _hier_replay_kernel(
         pval = _sc_get(r2p, SC_PVAL)
         pa = _sc_get(r2p, SC_PA)
         pb = _sc_get(r2p, SC_PB)
+        pexp = _sc_get(r2p, SC_PEXP)
         if demote:
             ev = _sc_get(r2p, SC_EV)
         else:
@@ -714,11 +811,12 @@ def _hier_replay_kernel(
         pval_c = jnp.where(is_even, pval, pval_c)
         pa_c = jnp.where(is_even, pa, pa_c)
         pb_c = jnp.where(is_even, pb, pb_c)
-        return hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c
+        pexp_c = jnp.where(is_even, pexp, pexp_c)
+        return hits, evs, hit1_c, l2_c, pval_c, pa_c, pb_c, pexp_c
 
     z = jnp.int32(0)
     hits, evs, *_ = jax.lax.fori_loop(0, 2 * batch, body,
-                                      (z, z, z, z, z, z, z))
+                                      (z, z, z, z, z, z, z, z))
     hits_ref[0] = hits
     evs_ref[0] = evs
 
@@ -726,12 +824,13 @@ def _hier_replay_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "l1_ways", "l2_ways", "l1_sets", "l2_sets",
-                     "seed", "promote", "demote", "interpret"))
+                     "seed", "promote", "demote", "ttl", "carry_exp",
+                     "interpret"))
 def _replay_hier_jit(
-    l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb,        # [S1, l1_ways] lanes
-    l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb,        # [S2, l2_ways] lanes
+    l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb, l1_exp,  # [S1, l1_ways] lanes
+    l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb, l2_exp,  # [S2, l2_ways] lanes
     clock,
-    chunks, enabled,                               # uint32/bool [T, B]
+    chunks, enabled, tt,                           # uint32/bool/int32 [T, B]
     *,
     policy: int,
     l1_ways: int,
@@ -741,11 +840,13 @@ def _replay_hier_jit(
     seed: int,
     promote: bool,
     demote: bool,
+    ttl: bool,
+    carry_exp: bool,
     interpret: bool,
 ):
     from repro.core import hashing
     from repro.core.hierarchy import (ROW_W, L1_SEED_SALT, _pack_lanes,
-                                      _unpack_lanes)
+                                      _unpack_expiry, _unpack_lanes)
 
     steps, batch = chunks.shape
     _TRACE_COUNTS[("trace-hier", int(policy), l1_sets, l1_ways, l2_sets,
@@ -758,6 +859,7 @@ def _replay_hier_jit(
     s2 = hashing.set_index(qk, l2_sets, seed).reshape(steps, batch)
     qk = qk.astype(jnp.int32).reshape(steps, batch)
     en = enabled.astype(jnp.int32)
+    tt = tt.astype(jnp.int32)
     bp = -(-batch // LANES) * LANES
     if bp != batch:
         pad = jnp.zeros((steps, bp - batch), jnp.int32)
@@ -765,17 +867,18 @@ def _replay_hier_jit(
         s1 = jnp.concatenate([s1, pad], axis=1)
         s2 = jnp.concatenate([s2, pad], axis=1)
         en = jnp.concatenate([en, pad], axis=1)
+        tt = jnp.concatenate([tt, pad], axis=1)
 
     # ---- both tiers packed [S, ROW_W]: L1 VMEM-resident, L2 row-per-DMA
-    l1p = _pack_lanes(l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb)
-    l2p = _pack_lanes(l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb)
+    l1p = _pack_lanes(l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb, l1_exp)
+    l2p = _pack_lanes(l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb, l2_exp)
 
     scal = clock.astype(jnp.int32).reshape(1)
 
     kernel = functools.partial(
         _hier_replay_kernel, policy=int(policy), l1_ways=l1_ways,
         l2_ways=l2_ways, l2_sets=l2_sets, seed=seed, batch=batch,
-        promote=promote, demote=demote, interpret=interpret)
+        promote=promote, demote=demote, ttl=ttl, interpret=interpret)
 
     chunk_row = lambda: pl.BlockSpec((1, bp), lambda t, *_: (t, 0))  # noqa: E731
     full = lambda a: pl.BlockSpec(a.shape, lambda t, *_: (0,) * a.ndim)  # noqa: E731
@@ -788,7 +891,7 @@ def _replay_hier_jit(
             num_scalar_prefetch=1,
             grid=(steps,),
             in_specs=[chunk_row(), chunk_row(), chunk_row(), chunk_row(),
-                      full(l1p), anyspace()],
+                      chunk_row(), full(l1p), anyspace()],
             out_specs=[cnt(), cnt(), full(l1p), anyspace()],
             scratch_shapes=[pltpu.VMEM((1, ROW_W), jnp.int32),
                             pltpu.SemaphoreType.DMA],
@@ -798,12 +901,15 @@ def _replay_hier_jit(
                    jax.ShapeDtypeStruct((l1_sets, ROW_W), jnp.int32),
                    jax.ShapeDtypeStruct((l2_sets, ROW_W), jnp.int32)],
         interpret=interpret,
-    )(scal, qk, s1, s2, en, l1p, l2p)
+    )(scal, qk, s1, s2, en, tt, l1p, l2p)
 
     hits, evs = outs[0], outs[1]
     clock_f = clock + jnp.int32(2 * batch * steps)
     l1_out = _unpack_lanes(outs[2], l1_ways)
     l2_out = _unpack_lanes(outs[3], l2_ways)
+    if carry_exp:
+        l1_out = l1_out + (_unpack_expiry(outs[2], l1_ways),)
+        l2_out = l2_out + (_unpack_expiry(outs[3], l2_ways),)
     return hits, evs, l1_out, l2_out, clock_f
 
 
@@ -821,23 +927,42 @@ def replay_hierarchical(
     seed: int,
     promote: bool = True,
     demote: bool = True,
+    l1_exp=None,
+    l2_exp=None,
+    ttls=None,
     interpret: bool = True,
 ):
     """Run the hierarchical replay megakernel: ONE launch, L1 pinned in
     VMEM, L2 in slow memory behind per-set row DMAs.
 
+    ``l1_exp``/``l2_exp`` are optional int32 [S, ways] per-lane expiry
+    deadlines; ``ttls`` is an optional int32 [steps, B] per-request TTL
+    stream (0 = never expires).  When either is present the expiry lane
+    is carried through the kernel (fetched rows are scrubbed at the
+    batch-exit horizon before probing — an expired entry is never a hit
+    and its lane is the preferred victim) and each tier's returned lane
+    tuple gains a sixth expiry member.
+
     Returns (hits int32 [steps], evs int32 [steps],
-    (keys, fprint, vals, meta_a, meta_b) L1 lanes,
-    (keys, fprint, vals, meta_a, meta_b) L2 lanes, clock') — key/fprint
-    lanes in the int32 bit-cast domain (callers re-cast to uint32).
+    (keys, fprint, vals, meta_a, meta_b[, expiry]) L1 lanes,
+    (keys, fprint, vals, meta_a, meta_b[, expiry]) L2 lanes, clock') —
+    key/fprint lanes in the int32 bit-cast domain (callers re-cast to
+    uint32).
     """
     steps, batch = chunks.shape
     _TRACE_COUNTS[("launch-hier", int(policy), l1_sets, l1_ways, l2_sets,
                    l2_ways, steps, batch, promote, demote)] += 1
+    carry_exp = (l1_exp is not None or l2_exp is not None
+                 or ttls is not None)
+    ttl = ttls is not None
+    tt = (jnp.zeros((steps, batch), jnp.int32) if ttls is None
+          else jnp.asarray(ttls, jnp.int32))
     return _replay_hier_jit(
-        l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb,
-        l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb, clock,
+        l1_keys, l1_fpr, l1_vals, l1_ma, l1_mb, l1_exp,
+        l2_keys, l2_fpr, l2_vals, l2_ma, l2_mb, l2_exp, clock,
         jnp.asarray(chunks, jnp.uint32), jnp.asarray(enabled, jnp.bool_),
+        tt,
         policy=int(policy), l1_ways=l1_ways, l2_ways=l2_ways,
         l1_sets=l1_sets, l2_sets=l2_sets, seed=seed,
-        promote=promote, demote=demote, interpret=interpret)
+        promote=promote, demote=demote, ttl=ttl, carry_exp=carry_exp,
+        interpret=interpret)

@@ -8,9 +8,10 @@ damaged sets and keep serving).  This package wires that observation
 through the stack:
 
   * :mod:`repro.robust.invariants` — jittable structural validators over
-    ``KWayState``, the TinyLFU sketch and the serving engine's
-    ``ServeState``, returning violation bitmaps plus a host-side
-    ``explain()`` that names set/way/slot/page;
+    ``KWayState`` (including the TTL-expiry bits of DESIGN.md §15 and the
+    two-tier + exclusivity checks for ``HierState``), the TinyLFU sketch
+    and the serving engine's ``ServeState``, returning violation bitmaps
+    plus a host-side ``explain()`` that names set/way/slot/page;
   * :mod:`repro.robust.faults` — a deterministic fault injector (seeded
     bit-flips, NaN injection, duplicate/stale slot entries, crash-mid-
     commit, request-stream faults), every fault reproducible from
@@ -30,10 +31,13 @@ from repro.robust import events, faults  # noqa: F401
 from repro.robust.faults import FaultReport  # noqa: F401
 from repro.robust.invariants import (  # noqa: F401
     CacheReport,
+    HierReport,
     ServeReport,
     check_cache,
+    check_hier,
     check_serve,
     explain_cache,
+    explain_hier,
     explain_serve,
 )
 from repro.robust.ladder import ReplayOutcome, resilient_replay  # noqa: F401
@@ -42,6 +46,7 @@ from repro.robust.recovery import (  # noqa: F401
     restore_engine,
     save_engine,
     scrub,
+    scrub_hier,
     validated_replay,
 )
 from repro.robust.watchdog import WatchdogTimeout, watch  # noqa: F401

@@ -14,6 +14,13 @@ ask for events ``since(cursor)`` (the serving engine does this for its
 ``stats["degradation_events"]``), so one component draining the log can
 never hide events from another.  ``clear()`` exists for test isolation.
 
+Appends are thread-safe: the ladder, the watchdog and the engine may all
+record from different threads, so each event is stamped — under the log
+lock — with a process-monotonic ``seq`` that totally orders events even
+when wall-clock timestamps collide.  ``seq`` survives ``clear()`` (the
+counter never rewinds), so ordering comparisons across a test-isolation
+boundary stay valid.
+
 This module deliberately imports nothing from the rest of the repo: core
 layers (``core/backend.py``) may record events without a dependency cycle.
 """
@@ -38,20 +45,26 @@ class DegradationEvent:
     fallback_to: str = ""    # rung/path taken instead
     detail: str = ""
     time_unix: float = 0.0
+    seq: int = -1            # process-monotonic order stamp (-1 = unstamped)
 
 
 _LOCK = threading.Lock()
 _LOG: list[DegradationEvent] = []
+_SEQ = 0                     # never rewinds — not even on clear()
 
 
 def record(component: str, reason: str, fallback_from: str = "",
            fallback_to: str = "", detail: str = "") -> DegradationEvent:
-    """Append one event; returns it (handy for in-line logging)."""
-    ev = DegradationEvent(component=component, reason=reason,
-                          fallback_from=fallback_from,
-                          fallback_to=fallback_to, detail=detail,
-                          time_unix=time.time())
+    """Append one event; returns it (handy for in-line logging).  The
+    ``seq`` stamp is assigned under the log lock, so concurrent recorders
+    get distinct, monotonically increasing stamps in append order."""
+    global _SEQ
     with _LOCK:
+        ev = DegradationEvent(component=component, reason=reason,
+                              fallback_from=fallback_from,
+                              fallback_to=fallback_to, detail=detail,
+                              time_unix=time.time(), seq=_SEQ)
+        _SEQ += 1
         _LOG.append(ev)
     return ev
 

@@ -25,6 +25,16 @@ Fault classes (ISSUE/DESIGN.md §13 fault model):
   * :func:`corrupt_trace` — request-stream faults: duplicated submits and
     poison keys (the reserved ``EMPTY_KEY`` sentinel and 0), which the
     stack must *survive*, not detect.
+  * :func:`clock_skew` — the replay clock jumps forward past the nearest
+    live deadline (DESIGN.md §15): entries that were valid a step ago are
+    now expired-but-resident, the exact state a real cache reaches when a
+    node's clock source steps.
+  * :func:`stale_entry` — one occupied lane's deadline rewritten to its
+    own last-touch timestamp, forging the "hit served at/after expiry"
+    signature the ``expired_hit`` validator bit detects.
+  * :func:`double_resident` — one L1-resident entry copied back into a
+    free way of its L2 home set, breaking the hierarchy's tier-exclusivity
+    invariant (the lost-update interleaving ``check_hier`` detects).
 
 Injectors are host-side (they pull the arrays once); all return
 ``(mutated, FaultReport)`` so a test can assert exactly what was injected.
@@ -38,11 +48,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hashing import EMPTY_KEY
-from repro.core.kway import KWayState
+from repro.core.kway import NO_EXPIRY, KWayState
 
 __all__ = ["FaultReport", "rng_for", "flip_bit", "inject_nan",
            "double_book_page", "stale_owner", "crashed_save",
-           "corrupt_trace"]
+           "corrupt_trace", "clock_skew", "stale_entry", "double_resident"]
 
 #: cache-lane sites accepted by flip_bit
 LANE_SITES = ("keys", "fprint", "vals", "meta_a", "meta_b")
@@ -93,6 +103,105 @@ def flip_bit(state: KWayState, site: str, seed: int,
                          before=float(before), after=float(int(arr[s, w])),
                          seed=seed, step=step)
     return dataclasses.replace(state, **{site: jnp.asarray(arr)}), report
+
+
+def clock_skew(state: KWayState, seed: int,
+               step: int = 0) -> tuple[KWayState, FaultReport]:
+    """Jump the replay clock forward onto a live deadline, turning the
+    entry holding it (and every earlier deadline) expired-but-resident —
+    the ``expired_resident`` validator bit must fire.  Requires a TTL
+    state with at least one occupied lane whose deadline is still ahead
+    of the clock; raises ``ValueError`` otherwise."""
+    if state.expiry is None:
+        raise ValueError("clock_skew needs a TTL state (expiry lane)")
+    rng = rng_for(seed, "clock", step)
+    keys = np.asarray(state.keys)
+    exp = np.asarray(state.expiry)
+    clock = int(state.clock)
+    live = np.argwhere((keys != np.uint32(EMPTY_KEY))
+                       & (exp != NO_EXPIRY) & (exp > clock))
+    if live.size == 0:
+        raise ValueError("clock_skew: no occupied lane with a live deadline")
+    s, w = (int(v) for v in live[rng.integers(len(live))])
+    after = int(exp[s, w])    # clock == deadline ⇒ exp <= clock ⇒ expired
+    report = FaultReport(kind="clock_skew", site="clock", index=(s, w),
+                         bit=-1, before=float(clock), after=float(after),
+                         seed=seed, step=step)
+    return dataclasses.replace(state, clock=jnp.int32(after)), report
+
+
+def stale_entry(state: KWayState, seed: int,
+                step: int = 0) -> tuple[KWayState, FaultReport]:
+    """Rewrite one occupied lane's deadline to its own last-touch
+    timestamp — the forged signature of a hit served on an expired entry,
+    which the ``expired_hit`` validator bit detects (``meta_a >= exp``).
+    Requires a TTL state; raises ``ValueError`` on an empty cache."""
+    if state.expiry is None:
+        raise ValueError("stale_entry needs a TTL state (expiry lane)")
+    rng = rng_for(seed, "expiry", step)
+    keys = np.asarray(state.keys)
+    occ = np.argwhere(keys != np.uint32(EMPTY_KEY))
+    if occ.size == 0:
+        raise ValueError("stale_entry: cache has no occupied lanes")
+    s, w = (int(v) for v in occ[rng.integers(len(occ))])
+    exp = np.array(state.expiry)
+    before = int(exp[s, w])
+    after = int(np.asarray(state.meta_a)[s, w])
+    exp[s, w] = after
+    report = FaultReport(kind="stale_entry", site="expiry", index=(s, w),
+                         bit=-1, before=float(before), after=float(after),
+                         seed=seed, step=step)
+    return dataclasses.replace(state, expiry=jnp.asarray(exp)), report
+
+
+def double_resident(cfg, state, seed: int, step: int = 0):
+    """Copy one L1-resident entry into a way of its L2 home set — the
+    lost-update interleaving that breaks tier exclusivity, detected by
+    ``check_hier``'s ``double_resident`` bit.  ``cfg`` is the L2
+    ``KWayConfig``, ``state`` a ``HierState``; raises ``ValueError`` when
+    no L1 entry is absent from its L2 home row (nothing to duplicate)."""
+    from repro.core import hashing
+
+    rng = rng_for(seed, "l2.keys", step)
+    l1, l2 = state.l1, state.l2
+    k1 = np.asarray(l1.keys)
+    k2 = np.asarray(l2.keys)
+    home = np.asarray(hashing.set_index(
+        jnp.asarray(k1, jnp.uint32), cfg.num_sets, cfg.seed))
+    occ = np.argwhere(k1 != np.uint32(EMPTY_KEY))
+    cands = [(int(s), int(w)) for s, w in occ
+             if int(k1[s, w]) not in k2[home[s, w]].tolist()]
+    if not cands:
+        raise ValueError(
+            "double_resident: every L1 entry already shares its L2 home "
+            "row (or L1 is empty)")
+    s1, w1 = cands[rng.integers(len(cands))]
+    s2 = int(home[s1, w1])
+    row = k2[s2]
+    empties = np.flatnonzero(row == np.uint32(EMPTY_KEY))
+    w2 = int(empties[0]) if empties.size else int(rng.integers(cfg.ways))
+    before = int(row[w2])
+
+    def patch(arr, src):
+        a = np.array(arr)
+        a[s2, w2] = src
+        return jnp.asarray(a)
+
+    l2 = dataclasses.replace(
+        l2,
+        keys=patch(l2.keys, k1[s1, w1]),
+        fprint=patch(l2.fprint, np.asarray(l1.fprint)[s1, w1]),
+        vals=patch(l2.vals, np.asarray(l1.vals)[s1, w1]),
+        meta_a=patch(l2.meta_a, np.asarray(l1.meta_a)[s1, w1]),
+        meta_b=patch(l2.meta_b, np.asarray(l1.meta_b)[s1, w1]),
+        expiry=(None if l2.expiry is None else
+                patch(l2.expiry,
+                      np.asarray(l1.expiry)[s1, w1]
+                      if l1.expiry is not None else NO_EXPIRY)))
+    report = FaultReport(kind="double_resident", site="l2.keys",
+                         index=(s2, w2), bit=-1, before=float(before),
+                         after=float(int(k1[s1, w1])), seed=seed, step=step)
+    return dataclasses.replace(state, l2=l2), report
 
 
 def inject_nan(pool, seed: int, step: int = 0,

@@ -28,7 +28,30 @@ contract):
     metadata identically zero, Hyperbolic ``t0`` before ``clock``);
   * ``vals_convention`` — optional payload check: replay paths store
     ``val == key`` (``vals_mode="key"``), the serving engine stores
-    ``val == set*ways + way`` (``vals_mode="slot"``).
+    ``val == set*ways + way`` (``vals_mode="slot"``);
+  * ``expired_hit`` — TTL states only (DESIGN.md §15): an occupied lane's
+    last-touch timestamp must precede its deadline.  The scrub-before-probe
+    discipline reclaims every lane whose deadline falls inside the next
+    batch window *before* any query probes it, so a timestamp at or past
+    the deadline proves an expired entry was served as a hit;
+  * ``expired_resident`` — TTL states only, ``expiry_mode="strict"``: an
+    occupied lane's deadline must exceed the clock.  Eagerly-scrubbed
+    replays (the flat jnp/pallas/sharded paths) uphold this after every
+    batch; the hierarchy scrubs lazily — only rows a chunk touches — so
+    its tiers legitimately retain expired entries in untouched rows and
+    are checked with ``expiry_mode="lazy"`` (the bit is skipped; an
+    expired entry there is still unreachable, because any access fetching
+    the row scrubs it first);
+  * an empty lane must park the ``NO_EXPIRY`` sentinel in the expiry lane
+    (folded into ``empty_lane_dirty``).
+
+Invariants over ``HierState`` (``check_hier``): both tiers get the full
+per-lane catalogue above (the L1 routes with ``seed ^ L1_SEED_SALT``, tiers
+use ``expiry_mode="lazy"``), plus
+
+  * ``double_resident`` — L1/L2 exclusivity: an L1-resident key must not
+    also occupy its L2 home set (promotion removes from L2, demotion
+    removes from L1; a key in both tiers means a lost-update interleaving).
 
 Invariants over the TinyLFU sketch:
 
@@ -57,7 +80,7 @@ import numpy as np
 
 from repro.core import hashing
 from repro.core.hashing import EMPTY_KEY
-from repro.core.kway import KWayConfig, KWayState
+from repro.core.kway import NO_EXPIRY, KWayConfig, KWayState
 from repro.core.policies import Policy
 
 # ---------------------------------------------------------------------------
@@ -71,6 +94,9 @@ CACHE_CHECKS = {
     3: "dup_key_in_set",
     4: "meta_bounds",
     5: "vals_convention",
+    6: "expired_hit",
+    7: "expired_resident",
+    8: "double_resident",
 }
 CACHE_GLOBAL_CHECKS = {0: "clock_negative"}
 SKETCH_CHECKS = {0: "sketch_additions_range", 1: "sketch_door_popcount"}
@@ -127,13 +153,21 @@ class ServeReport:
 # ---------------------------------------------------------------------------
 
 def cache_lane_bits(cfg: KWayConfig, state: KWayState,
-                    vals_mode: str = "any") -> jnp.ndarray:
+                    vals_mode: str = "any",
+                    expiry_mode: str = "strict") -> jnp.ndarray:
     """Per-lane violation bits, uint32 [S, k].  Pure traced function —
     usable inside a replay scan (``recovery.validated_replay``) as well as
-    under the jitted ``check_cache`` wrapper."""
+    under the jitted ``check_cache`` wrapper.
+
+    Expiry checks run only when the state carries an expiry lane;
+    ``expiry_mode="lazy"`` skips ``expired_resident`` for lazily-scrubbed
+    states (the hierarchy tiers)."""
     if vals_mode not in ("any", "key", "slot"):
         raise ValueError(
             f"vals_mode must be 'any', 'key' or 'slot', got {vals_mode!r}")
+    if expiry_mode not in ("strict", "lazy"):
+        raise ValueError(
+            f"expiry_mode must be 'strict' or 'lazy', got {expiry_mode!r}")
     keys, fpr = state.keys, state.fprint
     s, k = cfg.num_sets, cfg.ways
     occupied = keys != EMPTY_KEY
@@ -178,26 +212,42 @@ def cache_lane_bits(cfg: KWayConfig, state: KWayState,
     elif vals_mode == "slot":
         slot_id = rows * jnp.int32(k) + jnp.arange(k, dtype=jnp.int32)[None]
         bits |= _bit(occupied & (state.vals != slot_id), 5)
+
+    if state.expiry is not None:
+        exp = state.expiry
+        # empty lanes park the NO_EXPIRY sentinel — same class of wear as
+        # a dirty fprint/meta lane, so fold into empty_lane_dirty
+        bits |= _bit(empty & (exp != NO_EXPIRY), 1)
+        if cfg.policy in (Policy.LRU, Policy.FIFO):
+            # meta_a is the last-touch (LRU) / insert (FIFO) timestamp: a
+            # stamp at or past the deadline proves a hit was served on an
+            # already-expired entry (scrub-before-probe forbids that)
+            bits |= _bit(occupied & (exp != NO_EXPIRY) & (a >= exp), 6)
+        if expiry_mode == "strict":
+            bits |= _bit(occupied & (exp <= clk), 7)
     return bits
 
 
-def _cache_report(cfg: KWayConfig, state: KWayState,
-                  vals_mode: str) -> CacheReport:
-    lane_bits = cache_lane_bits(cfg, state, vals_mode)
+def _cache_report(cfg: KWayConfig, state: KWayState, vals_mode: str,
+                  expiry_mode: str = "strict") -> CacheReport:
+    lane_bits = cache_lane_bits(cfg, state, vals_mode, expiry_mode)
     gbits = _bit(state.clock < 0, 0)
     bits = jnp.bitwise_or(jnp.bitwise_or.reduce(lane_bits, axis=(0, 1)),
                           gbits)
     return CacheReport(lane_bits=lane_bits, global_bits=gbits, bits=bits)
 
 
-@partial(jax.jit, static_argnums=0, static_argnames=("vals_mode",))
+@partial(jax.jit, static_argnums=0,
+         static_argnames=("vals_mode", "expiry_mode"))
 def check_cache(cfg: KWayConfig, state: KWayState, *,
-                vals_mode: str = "any") -> CacheReport:
+                vals_mode: str = "any",
+                expiry_mode: str = "strict") -> CacheReport:
     """Validate one cache state.  ``vals_mode`` selects the payload
     convention to enforce: ``"key"`` for the replay paths (val == key),
     ``"slot"`` for the serving engine (val == landing slot id), ``"any"``
-    to skip the payload check."""
-    return _cache_report(cfg, state, vals_mode)
+    to skip the payload check.  ``expiry_mode="lazy"`` relaxes the
+    ``expired_resident`` check for lazily-scrubbed states."""
+    return _cache_report(cfg, state, vals_mode, expiry_mode)
 
 
 def sketch_bits(cfg, st) -> jnp.ndarray:
@@ -206,6 +256,100 @@ def sketch_bits(cfg, st) -> jnp.ndarray:
     bad_add = (st.additions < 0) | (st.additions >= cfg.sample)
     pop = jnp.sum(jax.lax.population_count(st.door).astype(jnp.int32))
     return _bit(bad_add, 0) | _bit(pop > st.additions, 1)
+
+
+# ---------------------------------------------------------------------------
+# hierarchy invariants
+# ---------------------------------------------------------------------------
+
+def unpack_tier(packed: jnp.ndarray, ways: int, clock) -> KWayState:
+    """One packed hierarchy row array (int32 [S, ROW_W], the
+    ``core/hierarchy`` section layout) -> a ``KWayState`` view in the
+    uint32 key/fprint domain with the expiry lane attached — exactly what
+    ``cache_lane_bits`` consumes.  The mailbox section and way padding are
+    dropped."""
+    from repro.core.hierarchy import _unpack_expiry, _unpack_lanes
+
+    k, f, v, a, b = _unpack_lanes(packed, ways)
+    return KWayState(keys=k.astype(jnp.uint32), fprint=f.astype(jnp.uint32),
+                     vals=v, meta_a=a, meta_b=b,
+                     clock=jnp.asarray(clock, jnp.int32),
+                     expiry=_unpack_expiry(packed, ways))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HierReport:
+    """Violation bitmap over one ``HierState`` (both tiers + exclusivity).
+
+    ``double_bits`` carries the ``double_resident`` bit per L1 lane; the
+    tier reports use ``expiry_mode="lazy"`` (the hierarchy scrubs rows on
+    touch, so untouched rows legitimately retain expired entries)."""
+
+    l1: CacheReport
+    l2: CacheReport
+    double_bits: jnp.ndarray  # uint32 [S1, l1_ways] — bit 8 per L1 lane
+    bits: jnp.ndarray         # uint32 []            — OR of everything
+
+    def clean(self) -> bool:
+        return int(jax.device_get(self.bits)) == 0
+
+
+def hier_lane_bits(cfg: KWayConfig, hier, state, vals_mode: str = "any"):
+    """Per-lane violation bits for both hierarchy tiers — pure traced
+    function shared by ``check_hier`` and ``recovery.scrub_hier``.
+
+    Returns ``(l1_bits uint32 [S1, l1_ways], l2_bits uint32 [S, k],
+    double_bits uint32 [S1, l1_ways])``; the ``double_resident`` bit is
+    reported on the L1 lane holding the duplicated key (tiers are checked
+    with ``expiry_mode="lazy"`` — lazy row scrub keeps expired entries in
+    untouched rows legitimately)."""
+    from repro.core.hierarchy import L1_SEED_SALT
+
+    l1_cfg = dataclasses.replace(
+        cfg, num_sets=hier.l1_sets, ways=hier.l1_ways,
+        seed=cfg.seed ^ L1_SEED_SALT)
+    l1_bits = cache_lane_bits(l1_cfg, state.l1, vals_mode, "lazy")
+    l2_bits = cache_lane_bits(cfg, state.l2, vals_mode, "lazy")
+
+    keys1 = state.l1.keys
+    occ = keys1 != EMPTY_KEY
+    home = hashing.set_index(keys1, cfg.num_sets, cfg.seed)
+    rows2 = state.l2.keys[home]             # [S1, l1_ways, ways]
+    dup = occ & jnp.any(rows2 == keys1[..., None], axis=-1)
+    return l1_bits, l2_bits, _bit(dup, 8)
+
+
+@partial(jax.jit, static_argnums=(0, 1), static_argnames=("vals_mode",))
+def check_hier(cfg: KWayConfig, hier, state, *,
+               vals_mode: str = "any") -> HierReport:
+    """Validate one ``HierState``: the full per-lane catalogue on both
+    tiers (the L1 routes with ``seed ^ L1_SEED_SALT``), plus L1/L2
+    exclusivity — an L1-resident key occupying its L2 home set too is a
+    ``double_resident`` violation (promotion removes from L2, demotion
+    removes from L1)."""
+    l1_bits, l2_bits, dbits = hier_lane_bits(cfg, hier, state, vals_mode)
+    gb1 = _bit(state.l1.clock < 0, 0)
+    gb2 = _bit(state.l2.clock < 0, 0)
+    l1 = CacheReport(
+        lane_bits=l1_bits, global_bits=gb1,
+        bits=jnp.bitwise_or.reduce(l1_bits, axis=(0, 1)) | gb1)
+    l2 = CacheReport(
+        lane_bits=l2_bits, global_bits=gb2,
+        bits=jnp.bitwise_or.reduce(l2_bits, axis=(0, 1)) | gb2)
+    bits = l1.bits | l2.bits | jnp.bitwise_or.reduce(dbits, axis=(0, 1))
+    return HierReport(l1=l1, l2=l2, double_bits=dbits, bits=bits)
+
+
+def explain_hier(report: HierReport, limit: int = 32) -> list[str]:
+    """Human-readable violations for a HierReport: both tier reports
+    prefixed with their tier name, plus the double-resident lanes."""
+    out = [f"l1 {s}" for s in explain_cache(report.l1, limit=limit)]
+    out += [f"l2 {s}" for s in explain_cache(report.l2, limit=limit)]
+    dbits = np.asarray(jax.device_get(report.double_bits))
+    for s, w in np.argwhere(dbits != 0)[:limit]:
+        out.append(f"l1 set {int(s)} way {int(w)}: double_resident")
+    return out
 
 
 # ---------------------------------------------------------------------------

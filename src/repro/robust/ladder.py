@@ -27,10 +27,13 @@ pinned bit-identical to its OWN jnp twin
 (``core/hierarchy.replay_l1_over_l2``) and band-equivalent to the flat
 rungs on hit ratio — a descent from it trades capacity-scaling throughput
 for the flat semantics.  After each rung the final state is validated
-(:mod:`repro.robust.invariants`; both tiers for the L1L2 rung); a dirty
-state triggers a ``validator_alarm`` descent — the replay is functional
-(state in → state out), so the next rung re-runs from the same initial
-state.  A validator alarm on the last rung is unrecoverable and raises.
+(:mod:`repro.robust.invariants`; both tiers + exclusivity for the L1L2
+rung); a dirty state triggers a descent — ``stale_served`` when the
+violation is an expiry bit (``expired_hit``/``expired_resident``,
+DESIGN.md §15: the rung's output may have served expired entries),
+``validator_alarm`` otherwise.  The replay is functional (state in →
+state out), so the next rung re-runs from the same initial state.  An
+alarm on the last rung is unrecoverable and raises.
 
 Configurations the Pallas backend refuses outright (sampled policies,
 ``ways > LANES``) skip both Pallas rungs with a ``backend_unsupported``
@@ -45,7 +48,8 @@ import jax.numpy as jnp
 from repro.core import kway
 from repro.core.kway import KWayConfig
 from repro.robust import events
-from repro.robust.invariants import check_cache, explain_cache, sketch_bits
+from repro.robust.invariants import (check_cache, check_hier, explain_cache,
+                                     explain_hier, sketch_bits)
 
 __all__ = ["RUNGS", "ReplayOutcome", "resilient_replay"]
 
@@ -75,15 +79,13 @@ def _default_validate(cfg: KWayConfig, tinylfu, vals_mode: str,
     def validate(state, sketch) -> tuple[bool, str]:
         from repro.core import hierarchy as hier_mod
         if hierarchy is not None and isinstance(state, hier_mod.HierState):
-            # L1L2 rung: both tiers must be clean (the L1 config carries
-            # the salted set seed, so set-mapping checks see the right hash)
-            for tier_cfg, tier, name in (
-                    (hier_mod.l1_config(cfg, hierarchy), state.l1, "l1"),
-                    (cfg, state.l2, "l2")):
-                rep = check_cache(tier_cfg, tier, vals_mode=vals_mode)
-                if not rep.clean():
-                    return False, f"{name}: " + "; ".join(
-                        explain_cache(rep, limit=4))
+            # L1L2 rung: both tiers + exclusivity must be clean.  check_hier
+            # salts the L1 set seed and uses lazy expiry mode (the
+            # hierarchy scrubs rows on touch, so untouched rows may retain
+            # expired — unreachable — entries legitimately).
+            rep = check_hier(cfg, hierarchy, state, vals_mode=vals_mode)
+            if not rep.clean():
+                return False, "; ".join(explain_hier(rep, limit=4))
             return True, ""
         rep = check_cache(cfg, state, vals_mode=vals_mode)
         if not rep.clean():
@@ -99,7 +101,7 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
                      state: kway.KWayState | None = None, *,
                      hierarchy=None, validate: bool = True,
                      validate_fn=None,
-                     vals_mode: str = "key") -> ReplayOutcome:
+                     vals_mode: str = "key", ttls=None) -> ReplayOutcome:
     """Replay ``chunks``/``enabled`` (the ``router.pad_chunks`` layout,
     payload ``val == key``) down the degradation ladder.
 
@@ -107,16 +109,27 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
     the ``pallas-resident-l1l2`` top rung; its descent target is the flat
     ``pallas-resident`` rung (same trace, flat semantics).
 
+    ``ttls`` (int32 [steps, B], optional) replays with per-request TTLs
+    (DESIGN.md §15) on every rung; a rung whose output trips an expiry
+    validator bit descends with reason ``stale_served``.  Excludes
+    ``tinylfu``.
+
     ``validate_fn(state, sketch) -> (ok, why)`` overrides the invariant
     check per rung (the chaos tests use this to force alarms);
     ``validate=False`` skips post-rung validation entirely.
     """
     from repro.core import backend as backend_mod
 
+    if ttls is not None:
+        if tinylfu is not None:
+            raise ValueError(
+                "per-request TTLs and TinyLFU admission are mutually "
+                "exclusive (the sketch has no expiry-aware semantics)")
+        ttls = jnp.asarray(ttls, jnp.int32)
     if hierarchy is not None and not hierarchy.enabled:
         hierarchy = None
     if state is None:
-        state = kway.make_cache(cfg)
+        state = kway.make_cache(cfg, ttl=ttls is not None)
     check = None
     if validate:
         check = validate_fn or _default_validate(cfg, tinylfu, vals_mode,
@@ -137,9 +150,14 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
         if check is not None:
             ok, why = check(st, sk)
             if not ok:
-                attempts.append((rung, "validator_alarm"))
+                # an expiry-bit violation means the rung may have served
+                # expired entries — name the descent for what it is
+                reason = ("stale_served"
+                          if "expired_hit" in why or "expired_resident" in why
+                          else "validator_alarm")
+                attempts.append((rung, reason))
                 events.record(
-                    component=_COMPONENT, reason="validator_alarm",
+                    component=_COMPONENT, reason=reason,
                     fallback_from=rung, fallback_to=_next(rung), detail=why)
                 if rung == RUNGS[-1]:
                     raise RuntimeError(
@@ -177,11 +195,12 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
             from repro.core import hierarchy as hier_mod
             from repro.kernels import ops
 
-            hst = hier_mod.as_hier_state(cfg, hierarchy, state)
+            hst = hier_mod.as_hier_state(cfg, hierarchy, state,
+                                         ttl=ttls is not None)
             out = _attempt(
                 "pallas-resident-l1l2",
                 lambda: ops.replay_hierarchical(cfg, hierarchy, hst,
-                                                chunks, enabled))
+                                                chunks, enabled, ttls=ttls))
             if out is not None:
                 return out
         else:
@@ -201,7 +220,7 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
             out = _attempt(
                 "pallas-resident",
                 lambda: ops.replay_resident(cfg, state, chunks, enabled,
-                                            tinylfu=tinylfu))
+                                            tinylfu=tinylfu, ttls=ttls))
             if out is not None:
                 return out
         else:
@@ -218,7 +237,7 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
         out = _attempt(
             "pallas-scan",
             lambda: pallas.replay_scan(state, chunks, enabled,
-                                       tinylfu=tinylfu))
+                                       tinylfu=tinylfu, ttls=ttls))
         if out is not None:
             return out
 
@@ -226,7 +245,8 @@ def resilient_replay(cfg: KWayConfig, chunks, enabled, tinylfu=None,
     jnp_be = backend_mod.make_backend("jnp", cfg)
     out = _attempt(
         "jnp-scan",
-        lambda: jnp_be.replay(state, chunks, enabled, tinylfu=tinylfu))
+        lambda: jnp_be.replay(state, chunks, enabled, tinylfu=tinylfu,
+                              ttls=ttls))
     if out is not None:
         return out
     raise RuntimeError(

@@ -33,44 +33,83 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hashing import EMPTY_KEY
-from repro.core.kway import KWayConfig, KWayState
+from repro.core.kway import NO_EXPIRY, KWayConfig, KWayState
 from repro.robust import events
-from repro.robust.invariants import cache_lane_bits
+from repro.robust.invariants import cache_lane_bits, hier_lane_bits
 
-__all__ = ["scrub", "validated_replay", "save_engine", "restore_engine",
-           "CheckpointedEngine"]
+__all__ = ["scrub", "scrub_hier", "validated_replay", "save_engine",
+           "restore_engine", "CheckpointedEngine"]
 
 
 # ---------------------------------------------------------------------------
 # scrub-and-invalidate
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnums=0, static_argnames=("vals_mode",))
-def scrub(cfg: KWayConfig, state: KWayState, *, vals_mode: str = "any"):
-    """Reset every set containing a violating lane to fully-empty.
+# Expiry violations (expired_hit / expired_resident) and double_resident
+# are lane-local: an expired or duplicated entry cannot shadow its
+# neighbours' probes, so the repair clears just that lane.  Everything
+# else (flipped keys/fprints/meta) can poison the whole set's probe and
+# is wiped set-granular.
+_LANE_LOCAL_BITS = (1 << 6) | (1 << 7) | (1 << 8)
 
-    Returns ``(state', forced_evictions, lane_bits)`` where
-    ``forced_evictions`` counts the occupied lanes cleared (corruption has
-    set-granular blast radius: a flipped key can shadow probes of its
-    whole set, so the repair invalidates the set, not just the lane) and
-    ``lane_bits`` is the pre-repair violation bitmap.  The clock is
-    untouched — scrubbed lanes look like cold sets, and policy metadata
-    bounds stay valid for subsequent inserts.  A clean state passes
-    through unchanged with a zero tally.
-    """
-    lane_bits = cache_lane_bits(cfg, state, vals_mode)
-    bad_set = jnp.any(lane_bits != 0, axis=1)[:, None]       # [S, 1]
+
+def _scrub_lanes(state: KWayState, lane_bits):
+    """Clear violating lanes: set-granular for structural bits,
+    lane-granular for the lane-local (expiry / double-resident) bits.
+    Returns (state', forced_evictions)."""
+    structural = lane_bits & jnp.uint32(~_LANE_LOCAL_BITS & 0xFFFFFFFF)
+    bad_set = jnp.any(structural != 0, axis=1)[:, None]      # [S, 1]
+    bad = bad_set | (lane_bits != 0)
     occupied = state.keys != EMPTY_KEY
-    forced = jnp.sum((occupied & bad_set).astype(jnp.int32))
+    forced = jnp.sum((occupied & bad).astype(jnp.int32))
     state = dataclasses.replace(
         state,
-        keys=jnp.where(bad_set, jnp.uint32(EMPTY_KEY), state.keys),
-        fprint=jnp.where(bad_set, jnp.uint32(0), state.fprint),
-        vals=jnp.where(bad_set, jnp.int32(0), state.vals),
-        meta_a=jnp.where(bad_set, jnp.int32(0), state.meta_a),
-        meta_b=jnp.where(bad_set, jnp.int32(0), state.meta_b),
+        keys=jnp.where(bad, jnp.uint32(EMPTY_KEY), state.keys),
+        fprint=jnp.where(bad, jnp.uint32(0), state.fprint),
+        vals=jnp.where(bad, jnp.int32(0), state.vals),
+        meta_a=jnp.where(bad, jnp.int32(0), state.meta_a),
+        meta_b=jnp.where(bad, jnp.int32(0), state.meta_b),
+        expiry=(None if state.expiry is None else
+                jnp.where(bad, jnp.int32(NO_EXPIRY), state.expiry)),
     )
+    return state, forced
+
+
+@partial(jax.jit, static_argnums=0,
+         static_argnames=("vals_mode", "expiry_mode"))
+def scrub(cfg: KWayConfig, state: KWayState, *, vals_mode: str = "any",
+          expiry_mode: str = "strict"):
+    """Reset every violating region of the cache to empty.
+
+    Structural corruption has set-granular blast radius (a flipped key can
+    shadow probes of its whole set), so those repairs invalidate the set;
+    expiry violations (``expired_hit``/``expired_resident``, DESIGN.md
+    §15) are lane-local and clear just the lane, parking ``NO_EXPIRY`` in
+    its expiry slot.  Returns ``(state', forced_evictions, lane_bits)``
+    with ``forced_evictions`` counting the occupied lanes cleared and
+    ``lane_bits`` the pre-repair violation bitmap.  The clock is untouched
+    — scrubbed lanes look like cold sets, and policy metadata bounds stay
+    valid for subsequent inserts.  A clean state passes through unchanged
+    with a zero tally.
+    """
+    lane_bits = cache_lane_bits(cfg, state, vals_mode, expiry_mode)
+    state, forced = _scrub_lanes(state, lane_bits)
     return state, forced, lane_bits
+
+
+@partial(jax.jit, static_argnums=(0, 1), static_argnames=("vals_mode",))
+def scrub_hier(cfg: KWayConfig, hier, state, *, vals_mode: str = "any"):
+    """Scrub both tiers of a ``HierState``: the per-tier lane catalogue
+    (lazy expiry mode — see ``invariants.hier_lane_bits``) plus the
+    ``double_resident`` exclusivity bit, repaired by clearing the L1 copy
+    (the L2 row keeps the entry, so no data is lost).  Returns
+    ``(state', forced_evictions, (l1_bits, l2_bits))`` with the forced
+    tally summed over both tiers."""
+    l1_bits, l2_bits, dbits = hier_lane_bits(cfg, hier, state, vals_mode)
+    l1, f1 = _scrub_lanes(state.l1, l1_bits | dbits)
+    l2, f2 = _scrub_lanes(state.l2, l2_bits)
+    state = dataclasses.replace(state, l1=l1, l2=l2)
+    return state, f1 + f2, (l1_bits | dbits, l2_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -79,23 +118,27 @@ def scrub(cfg: KWayConfig, state: KWayState, *, vals_mode: str = "any"):
 
 @lru_cache(maxsize=None)
 def _validated_replay_fn(cfg: KWayConfig, backend: str, interval: int,
-                         tinylfu, vals_mode: str):
+                         tinylfu, vals_mode: str, ttl: bool = False):
     from repro.core import admission
     from repro.core.backend import make_backend
 
     be = make_backend(backend, cfg)
 
-    def fn(state, chunks, enabled, sketch):
+    def fn(state, chunks, enabled, sketch, ttls):
         def step(carry, xs):
             cache, sk, alarm = carry
-            i, keys, en = xs
+            if ttl:
+                i, keys, en, tt = xs
+            else:
+                i, keys, en = xs
             admit = None
             if tinylfu is not None:
                 sk = admission.record(tinylfu, sk, keys, enabled=en)
                 vk, vv = be.peek_victims(cache, keys)
                 admit = admission.admit(tinylfu, sk, keys, vk, vv)
             cache, hit, _, _, ev = be.access(
-                cache, keys, keys.astype(jnp.int32), admit, en)
+                cache, keys, keys.astype(jnp.int32), admit, en,
+                **({"ttls": tt} if ttl else {}))
             bits = jax.lax.cond(
                 i % interval == 0,
                 lambda c: jnp.bitwise_or.reduce(
@@ -107,8 +150,9 @@ def _validated_replay_fn(cfg: KWayConfig, backend: str, interval: int,
 
         steps = chunks.shape[0]
         idx = jnp.arange(steps, dtype=jnp.int32)
+        xs = (idx, chunks, enabled) + ((ttls,) if ttl else ())
         (state, sk, alarm), (hits, evs) = jax.lax.scan(
-            step, (state, sketch, jnp.uint32(0)), (idx, chunks, enabled))
+            step, (state, sketch, jnp.uint32(0)), xs)
         return hits, evs, state, sk, alarm
 
     return jax.jit(fn)
@@ -116,28 +160,41 @@ def _validated_replay_fn(cfg: KWayConfig, backend: str, interval: int,
 
 def validated_replay(cfg: KWayConfig, chunks, enabled, *,
                      backend: str = "jnp", interval: int = 1, tinylfu=None,
-                     state: KWayState | None = None, vals_mode: str = "key"):
+                     state: KWayState | None = None, vals_mode: str = "key",
+                     ttls=None):
     """Chunked-scan replay with the invariant check fused in every
     ``interval`` chunks — the violation word rides the scan carry, so
     validation adds zero host syncs.
 
+    ``ttls`` (int32 [steps, B], optional) replays with per-request TTLs
+    (DESIGN.md §15) — the fused check then also covers the expiry bits
+    (``expired_hit``/``expired_resident``), which must stay silent on a
+    healthy replay (the eager scrub enforces ``occupied ⇒ deadline >
+    clock``).  Excludes ``tinylfu``.
+
     Returns ``(hits [steps], evs [steps], state', sketch'|None,
     alarm_bits uint32[])``; ``alarm_bits != 0`` means some checked chunk
     left the cache structurally invalid.  Jitted once per
-    ``(cfg, backend, interval, tinylfu, vals_mode)``.
+    ``(cfg, backend, interval, tinylfu, vals_mode, ttl)``.
     """
     from repro.core import admission, kway
 
     if interval < 1:
         raise ValueError(f"interval must be >= 1, got {interval}")
+    if ttls is not None and tinylfu is not None:
+        raise ValueError(
+            "per-request TTLs and TinyLFU admission are mutually exclusive")
     if state is None:
-        state = kway.make_cache(cfg)
+        state = kway.make_cache(cfg, ttl=ttls is not None)
     sketch = (admission.make_sketch(tinylfu) if tinylfu is not None
               else jnp.zeros((), jnp.int32))
-    fn = _validated_replay_fn(cfg, backend, interval, tinylfu, vals_mode)
+    fn = _validated_replay_fn(cfg, backend, interval, tinylfu, vals_mode,
+                              ttls is not None)
     hits, evs, state, sk, alarm = fn(
         state, jnp.asarray(chunks, jnp.uint32),
-        jnp.asarray(enabled, jnp.bool_), sketch)
+        jnp.asarray(enabled, jnp.bool_), sketch,
+        (jnp.zeros((), jnp.int32) if ttls is None
+         else jnp.asarray(ttls, jnp.int32)))
     return hits, evs, state, (sk if tinylfu is not None else None), alarm
 
 

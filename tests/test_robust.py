@@ -25,15 +25,18 @@ from repro.core.policies import Policy
 from repro.core.router import pad_chunks
 from repro.robust import (
     check_cache,
+    check_hier,
     check_serve,
     events,
     explain_cache,
+    explain_hier,
     explain_serve,
     faults,
     resilient_replay,
     restore_engine,
     save_engine,
     scrub,
+    scrub_hier,
     validated_replay,
     watch,
     WatchdogTimeout,
@@ -493,6 +496,353 @@ def test_engine_sync_watchdog_normal_path(small_model):
     fin = eng.run(max_steps=30)
     assert len(fin) == 2
     assert check_serve(eng.ecfg, eng._sstate).clean()
+
+
+# ---------------------------------------------------------------------------
+# expiry lane (DESIGN.md §15): TTL semantics, differential pins, chaos loop
+# ---------------------------------------------------------------------------
+
+def _ttls():
+    rng = np.random.default_rng(SEED + 1)
+    return rng.integers(0, 200, 512).astype(np.int32)
+
+
+def _ttl_chunks(batch=8):
+    from repro.core.simulate import _pad_ttl_chunks
+    chunks, enabled = _chunks(batch)
+    return chunks, enabled, jnp.asarray(_pad_ttl_chunks(_ttls(), batch))
+
+
+def test_expired_key_never_hits_and_lane_reclaimed():
+    """The tentpole guarantee in minimal form: a key inserted with a short
+    TTL stops hitting once the clock passes its deadline, and its lane is
+    scrubbed back to EMPTY (an ordinary preferred victim).  Hits do not
+    refresh the deadline."""
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("jnp", cfg)
+    st = be.init(ttl=True)
+    k = jnp.asarray(np.asarray([42], np.uint32))
+    v = k.astype(jnp.int32)
+    short = jnp.asarray([4], jnp.int32)          # deadline = 0 + 2 + 4 = 6
+    st, hit, *_ = be.access(st, k, v, ttls=short)
+    assert not bool(np.asarray(hit)[0])
+    st, hit, *_ = be.access(st, k, v, ttls=short)
+    assert bool(np.asarray(hit)[0])              # clock 2: still live
+    other = jnp.asarray(np.asarray([7], np.uint32))
+    # clock 4: this access's scrub horizon (4 + 2 = 6) reaches the deadline
+    st, _, _, _, _ = be.access(st, other, other.astype(jnp.int32),
+                               ttls=jnp.asarray([0], jnp.int32))
+    assert not np.any(np.asarray(st.keys) == 42)  # lane reclaimed to EMPTY
+    st, hit, *_ = be.access(st, k, v, ttls=short)
+    assert not bool(np.asarray(hit)[0])           # expired key never served
+
+
+def test_ttl_differential_flat_backends():
+    """TTL-enabled replay pinned bit-identical across the flat paths:
+    jnp scan == pallas scan == pallas trace-resident megakernel — hits,
+    evictions, and every final state lane including expiry."""
+    from repro.core import kway
+    from repro.kernels import ops
+
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled, tt = _ttl_chunks()
+    outs = {}
+    for name in ("jnp", "pallas"):
+        be = make_backend(name, cfg)
+        outs[name] = be.replay(be.init(ttl=True), chunks, enabled, ttls=tt)
+    outs["resident"] = ops.replay_resident(
+        cfg, kway.make_cache(cfg, ttl=True), chunks, enabled, ttls=tt)
+    h0, e0, st0, _ = outs["jnp"]
+    assert int(np.asarray(h0).sum()) > 0
+    for name in ("pallas", "resident"):
+        h, e, st, _ = outs[name]
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(h0))
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(e0))
+        for f in ("keys", "fprint", "vals", "meta_a", "meta_b", "expiry"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st, f)), np.asarray(getattr(st0, f)),
+                err_msg=f"{name}.{f}")
+
+
+def test_ttl_sharded_matches_unsharded():
+    from repro.core.sharded import ShardedCache, ShardedConfig
+
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("jnp", cfg)
+    chunks, enabled, tt = _ttl_chunks()
+    h0, _, _, _ = be.replay(be.init(ttl=True), chunks, enabled, ttls=tt)
+    for resident in (False, True):
+        sh = ShardedCache(ShardedConfig(cache=cfg, num_shards=2))
+        hits, deferred, _ = sh.replay(golden_trace(), batch=8, ttls=_ttls(),
+                                      resident=resident)
+        assert int(deferred) == 0
+        assert int(hits) == int(np.asarray(h0).sum()), f"resident={resident}"
+
+
+def test_ttl_ref_oracle_matches_jnp():
+    """The host-python ref backend replays the TTL trace request-for-
+    request identically to the jnp path at batch 1."""
+    cfg = KWayConfig(**CONFIG)
+    tr, tt = golden_trace()[:128], _ttls()[:128]
+    jb, rb = make_backend("jnp", cfg), make_backend("ref", cfg)
+    sj, sr = jb.init(ttl=True), rb.init(ttl=True)
+    for i in range(len(tr)):
+        k = np.asarray([tr[i]], np.uint32)
+        t = np.asarray([tt[i]], np.int32)
+        sj, hj, *_ = jb.access(sj, jnp.asarray(k), jnp.asarray(k, jnp.int32),
+                               ttls=jnp.asarray(t))
+        sr, hr, *_ = rb.access(sr, k, k.astype(np.int32), ttls=t)
+        assert bool(np.asarray(hj)[0]) == bool(np.asarray(hr)[0]), f"req {i}"
+    for f in ("keys", "fprint", "vals", "meta_a", "meta_b", "expiry"):
+        np.testing.assert_array_equal(np.asarray(getattr(sr, f)),
+                                      np.asarray(getattr(sj, f)), err_msg=f)
+
+
+def test_ttl_zeros_bit_identical_to_plain():
+    """ttl=0 means "never expires": an all-zero TTL replay on a TTL state
+    matches the plain TTL-free replay bit-for-bit on every lane."""
+    from repro.core.kway import NO_EXPIRY
+
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled = _chunks()
+    be = make_backend("jnp", cfg)
+    h0, e0, st0, _ = be.replay(be.init(), chunks, enabled)
+    tt = jnp.zeros(chunks.shape, jnp.int32)
+    h1, e1, st1, _ = be.replay(be.init(ttl=True), chunks, enabled, ttls=tt)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h0))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+    for f in ("keys", "fprint", "vals", "meta_a", "meta_b"):
+        np.testing.assert_array_equal(np.asarray(getattr(st1, f)),
+                                      np.asarray(getattr(st0, f)), err_msg=f)
+    assert st0.expiry is None
+    assert np.all(np.asarray(st1.expiry) == NO_EXPIRY)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ttl_clean_replay_no_false_positives(backend):
+    """Zero-false-positive pin for the expiry bits: a healthy eager-scrub
+    TTL replay is clean under the STRICT expiry mode (expired_hit and
+    expired_resident both)."""
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled, tt = _ttl_chunks()
+    be = make_backend(backend, cfg)
+    _, _, st, _ = be.replay(be.init(ttl=True), chunks, enabled, ttls=tt)
+    rep = check_cache(cfg, st, vals_mode="key", expiry_mode="strict")
+    assert rep.clean(), explain_cache(rep)
+
+
+def test_ttl_hierarchy_kernel_matches_twin_and_clean():
+    from repro.core import hierarchy as hier_mod
+    from repro.kernels import ops
+
+    cfg = KWayConfig(**CONFIG)
+    hier = hier_mod.HierarchyConfig(l1_sets=4, l1_ways=4)
+    chunks, enabled, tt = _ttl_chunks()
+    ht, et, out_t, _ = hier_mod.replay_l1_over_l2(
+        cfg, hier, hier_mod.make_hier(cfg, hier, ttl=True), chunks, enabled,
+        ttls=tt)
+    hk, ek, out_k, _ = ops.replay_hierarchical(
+        cfg, hier, hier_mod.make_hier(cfg, hier, ttl=True), chunks, enabled,
+        ttls=tt)
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(ht))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(et))
+    for tier in ("l1", "l2"):
+        for f in ("keys", "fprint", "vals", "meta_a", "meta_b", "expiry"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(getattr(out_k, tier), f)),
+                np.asarray(getattr(getattr(out_t, tier), f)),
+                err_msg=f"{tier}.{f}")
+    # the hierarchy scrubs lazily (untouched rows may hold expired-but-
+    # unreachable entries) — check_hier validates in lazy mode and must
+    # see a clean state with zero false positives
+    rep = check_hier(cfg, hier, out_k, vals_mode="key")
+    assert rep.clean(), explain_hier(rep)
+
+
+def test_clock_skew_detected_scrubbed_recovered():
+    """Chaos round trip for the clock_skew site: inject -> the strict
+    expired_resident bit fires -> scrub reclaims (forced evictions
+    tallied) -> replay on -> hit ratio inside the recovery band."""
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("jnp", cfg)
+    chunks, enabled, tt = _ttl_chunks()
+    hc, _, _, _ = be.replay(be.init(ttl=True), chunks, enabled, ttls=tt)
+    hr_clean = float(np.asarray(hc).sum()) / 512
+
+    half = chunks.shape[0] // 2
+    h1, _, st, _ = be.replay(be.init(ttl=True), chunks[:half],
+                             enabled[:half], ttls=tt[:half])
+    st, rep_f = faults.clock_skew(st, seed=SEED)
+    assert rep_f.kind == "clock_skew"
+    rep = check_cache(cfg, st, vals_mode="key")
+    assert not rep.clean()
+    assert any("expired_resident" in ln for ln in explain_cache(rep))
+    st, forced, _ = scrub(cfg, st, vals_mode="key")
+    assert int(forced) > 0
+    assert check_cache(cfg, st, vals_mode="key").clean()
+    h2, _, st, _ = be.replay(st, chunks[half:], enabled[half:],
+                             ttls=tt[half:])
+    assert check_cache(cfg, st, vals_mode="key").clean()
+    hr = (float(np.asarray(h1).sum()) + float(np.asarray(h2).sum())) / 512
+    # the skewed clock ages every deadline at once, so the band is wider
+    # than the structural-flip band but still a recovery, not a collapse
+    assert abs(hr - hr_clean) < 0.15, (hr, hr_clean)
+
+
+def test_clock_skew_reproducible():
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("jnp", cfg)
+    chunks, enabled, tt = _ttl_chunks()
+    _, _, st, _ = be.replay(be.init(ttl=True), chunks, enabled, ttls=tt)
+    _, r1 = faults.clock_skew(st, seed=3, step=7)
+    _, r2 = faults.clock_skew(st, seed=3, step=7)
+    assert r1 == r2
+    _, r3 = faults.stale_entry(st, seed=3, step=7)
+    assert r3 == faults.stale_entry(st, seed=3, step=7)[1]
+
+
+def test_stale_entry_detected_lane_local_scrub():
+    """The stale_entry forgery trips expired_hit on exactly the forged
+    lane, and the scrub's blast radius is that single lane — expiry bits
+    are lane-local, unlike structural key corruption."""
+    cfg = KWayConfig(**CONFIG)
+    be = make_backend("jnp", cfg)
+    chunks, enabled, tt = _ttl_chunks()
+    _, _, st, _ = be.replay(be.init(ttl=True), chunks, enabled, ttls=tt)
+    st2, rep_f = faults.stale_entry(st, seed=3)
+    s, w = rep_f.index
+    rep = check_cache(cfg, st2, vals_mode="key")
+    assert not rep.clean()
+    assert any("expired_hit" in ln for ln in explain_cache(rep))
+    assert any(f"set {s} way {w}" in ln for ln in explain_cache(rep))
+    st3, forced, _ = scrub(cfg, st2, vals_mode="key")
+    assert int(forced) == 1
+    keys2, keys3 = np.asarray(st2.keys), np.asarray(st3.keys)
+    assert keys3[s, w] == EMPTY_KEY
+    assert (keys2 != keys3).sum() == 1            # lane-granular reclaim
+    assert check_cache(cfg, st3, vals_mode="key").clean()
+
+
+def test_double_resident_detected_and_scrubbed():
+    """Hierarchy exclusivity chaos loop: inject an L1/L2 double residency,
+    check_hier names it, scrub_hier repairs by clearing the L1 copy while
+    the L2 keeps the entry."""
+    from repro.core import hierarchy as hier_mod
+
+    cfg = KWayConfig(**CONFIG)
+    hier = hier_mod.HierarchyConfig(l1_sets=4, l1_ways=4)
+    chunks, enabled = _chunks()
+    _, _, st, _ = hier_mod.replay_l1_over_l2(
+        cfg, hier, hier_mod.make_hier(cfg, hier), chunks, enabled)
+    assert check_hier(cfg, hier, st, vals_mode="key").clean()
+
+    st2, rep_f = faults.double_resident(cfg, st, seed=11)
+    assert rep_f.kind == "double_resident"
+    dup_key = np.uint32(int(rep_f.after))
+    rep = check_hier(cfg, hier, st2, vals_mode="key")
+    assert not rep.clean()
+    assert any("double_resident" in ln for ln in explain_hier(rep))
+
+    st3, forced, _ = scrub_hier(cfg, hier, st2, vals_mode="key")
+    assert int(forced) >= 1
+    assert check_hier(cfg, hier, st3, vals_mode="key").clean()
+    assert not np.any(np.asarray(st3.l1.keys) == dup_key)   # L1 copy cleared
+    assert np.any(np.asarray(st3.l2.keys) == dup_key)       # L2 keeps it
+
+
+def test_double_resident_reproducible():
+    from repro.core import hierarchy as hier_mod
+
+    cfg = KWayConfig(**CONFIG)
+    hier = hier_mod.HierarchyConfig(l1_sets=4, l1_ways=4)
+    chunks, enabled = _chunks()
+    _, _, st, _ = hier_mod.replay_l1_over_l2(
+        cfg, hier, hier_mod.make_hier(cfg, hier), chunks, enabled)
+    _, r1 = faults.double_resident(cfg, st, seed=9, step=2)
+    _, r2 = faults.double_resident(cfg, st, seed=9, step=2)
+    assert r1 == r2
+
+
+def test_ladder_ttl_healthy_and_stale_served_descent():
+    """The ladder replays TTL traces on every rung without alarming on
+    healthy runs; a rung whose validation trips an expiry bit descends
+    with the dedicated ``stale_served`` reason."""
+    from repro.core.hierarchy import HierarchyConfig
+
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled, tt = _ttl_chunks()
+
+    c0 = events.cursor()
+    out = resilient_replay(cfg, chunks, enabled, ttls=tt)
+    assert out.rung == "pallas-resident"
+    assert out.attempts == (("pallas-resident", "ok"),)
+    assert events.count(component="ladder.replay", start=c0) == 0
+
+    out = resilient_replay(cfg, chunks, enabled, ttls=tt,
+                           hierarchy=HierarchyConfig(l1_sets=4, l1_ways=4))
+    assert out.rung == "pallas-resident-l1l2"
+
+    def stale_once(st, sk, _n=[0]):
+        _n[0] += 1
+        if _n[0] == 1:
+            return False, "set 0 way 1: expired_hit (meta_a >= expiry)"
+        return True, ""
+
+    c0 = events.cursor()
+    out = resilient_replay(cfg, chunks, enabled, ttls=tt,
+                           validate_fn=stale_once)
+    assert out.rung == "pallas-scan"
+    assert ("pallas-resident", "stale_served") in out.attempts
+    assert events.count(component="ladder.replay", reason="stale_served",
+                        start=c0) == 1
+
+
+def test_validated_replay_ttl_clean():
+    cfg = KWayConfig(**CONFIG)
+    chunks, enabled, tt = _ttl_chunks()
+    *_, alarm = validated_replay(cfg, chunks, enabled, interval=4,
+                                 vals_mode="key", ttls=tt)
+    assert int(alarm) == 0
+
+
+def test_ttl_tinylfu_excluded_everywhere():
+    cfg = KWayConfig(**CONFIG)
+    tl = admission.for_capacity(cfg.capacity)
+    chunks, enabled, tt = _ttl_chunks()
+    be = make_backend("jnp", cfg)
+    with pytest.raises(ValueError, match="TinyLFU"):
+        be.replay(be.init(ttl=True), chunks, enabled, tinylfu=tl, ttls=tt)
+    with pytest.raises(ValueError, match="TinyLFU"):
+        resilient_replay(cfg, chunks, enabled, tinylfu=tl, ttls=tt)
+
+
+# ---------------------------------------------------------------------------
+# satellite: thread-safe event log ordering
+# ---------------------------------------------------------------------------
+
+def test_event_seq_monotonic_across_threads_and_clear():
+    """Concurrent recorders get distinct, monotonically increasing seq
+    stamps (assigned under the log lock), and the counter survives
+    clear() so cross-boundary ordering comparisons stay valid."""
+    c0 = events.cursor()
+    n_threads, per = 4, 50
+
+    def hammer(i):
+        for _ in range(per):
+            events.record(component=f"test.seq{i}", reason="synthetic")
+
+    ts = [threading.Thread(target=hammer, args=(i,)) for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    seqs = [ev.seq for ev in events.since(c0)]
+    assert len(seqs) == n_threads * per
+    assert seqs == sorted(seqs)                  # append order == seq order
+    assert len(set(seqs)) == len(seqs)           # no stamp collisions
+    last = seqs[-1]
+    events.clear()
+    assert events.record(component="test.seq", reason="synthetic").seq > last
 
 
 # ---------------------------------------------------------------------------

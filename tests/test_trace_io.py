@@ -167,6 +167,92 @@ def test_register_generate_truncates_and_tiles():
         trace_io.unregister_trace("arc_fixture_t")
 
 
+# ---------------------------------------------------------------------------
+# TTL column (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+TTL_CSV_PATH = os.path.join(FIXTURES, "sample_twitter_ttl.csv")
+
+
+def test_csv_ttl_column_header_named():
+    keys, ttls = trace_io.load_trace(TTL_CSV_PATH, with_ttl=True)
+    assert len(keys) == len(ttls) == 16
+    assert ttls.dtype == np.int32
+    assert ttls[:6].tolist() == [4096, 64, 0, 4096, 64, 4096]
+    # the key stream is unchanged by TTL parsing
+    np.testing.assert_array_equal(keys, trace_io.load_trace(TTL_CSV_PATH))
+
+
+def test_csv_ttl_ops_filter_keeps_streams_aligned():
+    keys, ttls = trace_io.load_trace(TTL_CSV_PATH, ops=trace_io.READ_OPS,
+                                     with_ttl=True)
+    assert len(keys) == len(ttls) == 13          # the three sets dropped
+    assert ttls.tolist() == [4096, 64, 4096, 64, 16, 0, 256, 4096, 64, 16,
+                             8, 4096, 256]
+
+
+def test_csv_ttl_headerless_positional_and_defaults(tmp_path):
+    p = tmp_path / "headerless.csv"
+    # op,key[,size[,ttl]] — short rows default to ttl 0 (never expires)
+    p.write_text("get,alpha,10,5\nget,beta,20\nset,gamma\n")
+    keys, ttls = trace_io.load_trace(str(p), with_ttl=True)
+    assert ttls.tolist() == [5, 0, 0]
+    assert keys[0] == FP["alpha"]
+
+
+def test_csv_header_without_ttl_column_defaults(tmp_path):
+    p = tmp_path / "no_ttl.csv"
+    # a header names the columns: no "ttl" column means no TTLs, even
+    # though a positional column 3 exists (it is "size" here)
+    p.write_text("op,key,extra,size\nget,alpha,x,300\n")
+    _, ttls = trace_io.load_trace(str(p), with_ttl=True)
+    assert ttls.tolist() == [0]
+
+
+def test_csv_malformed_ttl_names_file_and_line(tmp_path):
+    p = tmp_path / "bad_ttl.csv"
+    p.write_text("op,key,ttl\nget,alpha,soon\n")
+    with pytest.raises(ValueError, match=r"bad_ttl\.csv:2.*ttl column"):
+        trace_io.load_trace(str(p), with_ttl=True)
+    # the malformed column is invisible to a TTL-blind load
+    assert len(trace_io.load_trace(str(p))) == 1
+
+
+def test_arc_with_ttl_yields_zeros():
+    keys, ttls = trace_io.load_trace(ARC_PATH, with_ttl=True)
+    assert len(keys) == len(ttls) and (ttls == 0).all()
+
+
+def test_register_trace_ttl_tiles_in_lockstep():
+    trace_io.register_trace("ttl_fixture_t", TTL_CSV_PATH, ttl=True)
+    try:
+        keys, ttls = traces.generate_ttl("ttl_fixture_t", 40)
+        np.testing.assert_array_equal(keys,
+                                      traces.generate("ttl_fixture_t", 40))
+        base_k, base_t = trace_io.load_trace(TTL_CSV_PATH, with_ttl=True)
+        np.testing.assert_array_equal(ttls, np.tile(base_t, 3)[:40])
+        np.testing.assert_array_equal(keys, np.tile(base_k, 3)[:40])
+    finally:
+        trace_io.unregister_trace("ttl_fixture_t")
+        assert "ttl_fixture_t" not in traces.TTL_FAMILIES
+
+
+def test_ttl_fixture_replays_end_to_end():
+    """The §15 acceptance path: TTL-bearing fixture -> generate_ttl ->
+    simulate.replay_batched(..., ttls=...) with no changes outside the
+    ingestion layer."""
+    from repro.core.kway import KWayConfig
+    from repro.core.simulate import SimConfig, replay_batched
+
+    trace_io.register_fixture_traces()
+    keys, ttls = traces.generate_ttl("sample_twitter_ttl", 64)
+    sim = SimConfig(cache=KWayConfig(num_sets=4, ways=4))
+    hr = replay_batched(sim, keys, batch=16, ttls=ttls)
+    assert 0.0 <= hr <= 1.0
+    # zero-TTL rows never expire, so the heavily tiled fixture still hits
+    assert hr > 0.3
+
+
 @pytest.mark.parametrize("name,path,kw", [
     ("arc_fixture_e2e", ARC_PATH, {}),
     ("csv_fixture_e2e", CSV_PATH, {"ops": trace_io.READ_OPS}),

@@ -12,7 +12,8 @@ import pytest
 
 from repro.core import traces
 
-FAMILY_NAMES = ("zipf", "zipf_shift", "scan_loop", "recency", "oltp_mix")
+FAMILY_NAMES = ("zipf", "zipf_shift", "scan_loop", "recency", "oltp_mix",
+                "ttl_churn")
 
 
 @pytest.mark.parametrize("family", FAMILY_NAMES)
@@ -119,3 +120,23 @@ def test_register_family_round_trip():
         traces.unregister_family("fixed_test_family")
     with pytest.raises(ValueError, match="unknown trace family"):
         traces.generate("fixed_test_family", 8)
+
+
+def test_ttl_churn_streams_consistent():
+    """generate_ttl's keys are bit-identical to generate's (one rng draw
+    serves both streams), TTLs are bimodal, and the churn minority lives
+    in a disjoint key range from the hot core."""
+    keys, ttls = traces.generate_ttl("ttl_churn", 8192, seed=5)
+    np.testing.assert_array_equal(keys,
+                                  traces.generate("ttl_churn", 8192, seed=5))
+    assert ttls.dtype == np.int32
+    assert set(np.unique(ttls)) == {48, 4096}
+    churn = ttls == 48
+    assert 0.2 < churn.mean() < 0.4                 # churn_frac=0.3
+    assert (keys[churn] >= 1 << 12).all()           # disjoint churn range
+    assert (keys[~churn] < 1 << 12).all()
+
+
+def test_generate_ttl_unknown_family():
+    with pytest.raises(ValueError, match="unknown TTL trace family"):
+        traces.generate_ttl("zipf", 8)
